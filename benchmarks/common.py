@@ -1,0 +1,59 @@
+"""Shared helpers for the benchmark harness.
+
+Every benchmark module exposes ``run() -> dict`` returning
+``{"name", "rows": [dict, ...], "notes": str}``; ``benchmarks.run`` renders
+each as a markdown table and writes the raw rows to
+``results/bench/<name>.json``.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DRYRUN_DIR = REPO / "results" / "dryrun"
+BENCH_DIR = REPO / "results" / "bench"
+
+
+def load_dryrun_records() -> list[dict]:
+    if not DRYRUN_DIR.exists():
+        return []
+    return [json.loads(p.read_text()) for p in sorted(DRYRUN_DIR.glob("*.json"))]
+
+
+def fmt(v) -> str:
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) >= 1e4 or abs(v) < 1e-3:
+            return f"{v:.3e}"
+        return f"{v:.4g}"
+    return str(v)
+
+
+def markdown_table(rows: list[dict], columns: list[str] | None = None) -> str:
+    if not rows:
+        return "(no rows)"
+    columns = columns or list(rows[0])
+    head = "| " + " | ".join(columns) + " |"
+    sep = "|" + "|".join("---" for _ in columns) + "|"
+    body = "\n".join(
+        "| " + " | ".join(fmt(r.get(c, "")) for c in columns) + " |" for r in rows
+    )
+    return "\n".join([head, sep, body])
+
+
+def save_result(result: dict) -> None:
+    BENCH_DIR.mkdir(parents=True, exist_ok=True)
+    out = dict(result)
+    out["timestamp"] = time.time()
+    (BENCH_DIR / f"{result['name']}.json").write_text(json.dumps(out, indent=2, default=str))
+
+
+def render(result: dict, columns: list[str] | None = None) -> str:
+    lines = [f"\n## {result['name']}", ""]
+    if result.get("notes"):
+        lines += [result["notes"], ""]
+    lines.append(markdown_table(result["rows"], columns))
+    return "\n".join(lines)

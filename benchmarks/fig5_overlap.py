@@ -1,0 +1,108 @@
+"""Fig. 5 analogue: latency-overlapped logic swap, measured end-to-end.
+
+The paper hides ~75% of the 45 ms reconfiguration by starting it right after
+the LAST layer's attention, overlapping it with the remaining prefill tail
+(last O-proj + FFN + logits, ~31 ms at L=128).
+
+Here the swap is the ``kv_relayout`` program; the SwapController dispatches
+it between ``prefill_body`` and ``prefill_tail`` so JAX's async dispatch
+overlaps the two.  We measure REAL wall-clock on this host (CPU backend;
+functional validation of the mechanism) and report the v5e-modeled latencies
+(relayout = KV bytes / HBM bw; tail = tail FLOPs / peak).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.hardware import TPU_V5E
+from repro.configs import reduced_config
+from repro.core.phase_engine import PhaseEngine
+from repro.core.swap import SwapController
+from repro.models import get_model
+
+from .common import save_result
+
+
+def _measured(cfg, seq: int, max_len: int, iters: int = 3) -> dict:
+    api = get_model(cfg)
+    params = api.init(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    engine = PhaseEngine(cfg, None, max_len=max_len)
+    body, tail = engine.prefill_split_programs(jax.eval_shape(lambda: params), 1, seq)
+    relayout = engine.relayout_program(1, seq, max_len)
+    ctl = SwapController(body.fn, tail.fn, relayout.fn)
+    tokens = jnp.arange(seq, dtype=jnp.int32)[None] % cfg.vocab_size
+
+    # warmup (compile)
+    ctl.measure_both(params, tokens)
+    best = None
+    for _ in range(iters):
+        t = ctl.measure_both(params, tokens)
+        if best is None or t.t_total_overlapped < best.t_total_overlapped:
+            best = t
+    return {
+        "t_body_ms": best.t_body * 1e3,
+        "t_tail_ms": best.t_tail * 1e3,
+        "t_relayout_ms": best.t_relayout * 1e3,
+        "serialized_ms": best.t_total_serialized * 1e3,
+        "overlapped_ms": best.t_total_overlapped * 1e3,
+        "hidden_frac": best.hidden_fraction,
+    }
+
+
+def _v5e_model(arch: str, seq: int, batch: int) -> dict:
+    """Analytic v5e swap-overlap budget for the full-size arch."""
+    from repro.configs import get_config
+
+    cfg = get_config(arch)
+    chip = TPU_V5E
+    kv_bytes = 2 * cfg.num_layers * cfg.num_kv_heads * cfg.head_dim * 2 * seq * batch
+    # relayout = one read + one write of the KV + the reshard collective
+    t_relayout = 2 * kv_bytes / chip.hbm_bw + kv_bytes / (chip.ici_bw_per_link * chip.ici_links)
+    # tail = last layer FFN+O-proj + final norm + logits
+    d, f, v = cfg.d_model, cfg.ffn_hidden or cfg.d_ff, cfg.padded_vocab()
+    tail_flops = 2 * seq * batch * (d * (cfg.num_heads * cfg.head_dim) + 3 * d * f) + 2 * seq * batch * d * v
+    t_tail = tail_flops / chip.peak_flops_bf16
+    hidden = min(t_tail, t_relayout) / t_relayout
+    return {
+        "t_relayout_ms": t_relayout * 1e3,
+        "t_tail_ms": t_tail * 1e3,
+        "hidden_frac": hidden,
+    }
+
+
+def run() -> dict:
+    rows = []
+    cfg = reduced_config("smollm-135m", num_layers=4, d_model=256, vocab_size=4096)
+    for seq in (128, 256):
+        m = _measured(cfg, seq, max_len=2 * seq)
+        rows.append({"mode": f"measured CPU (reduced, seq={seq})", **m})
+    for arch, seq, batch in (("bitnet-730m", 128, 1), ("deepseek-7b", 4096, 8), ("qwen2.5-14b", 32768, 4)):
+        v = _v5e_model(arch, seq, batch)
+        rows.append({"mode": f"v5e model {arch} seq={seq} b={batch}", **v})
+
+    measured_hidden = [r["hidden_frac"] for r in rows if str(r["mode"]).startswith("measured")]
+    checks = {
+        "overlap hides >40% of swap (measured, CPU)": all(h > 0.4 for h in measured_hidden),
+        # this host has ONE core: the overlapped dispatch cannot actually run
+        # concurrently, so parity (not speedup) is the pass condition — the
+        # check guards against the overlap path ADDING latency
+        "overlapped <= serialized + 20% (1-core host)": all(
+            r["overlapped_ms"] <= 1.2 * r["serialized_ms"] for r in rows if "serialized_ms" in r
+        ),
+    }
+    result = {
+        "name": "fig5_overlap",
+        "rows": rows,
+        "notes": (
+            "Latency-overlapped swap (paper: ~75% of 45 ms hidden at L=128). "
+            "Measured rows run the real SwapController on this host; v5e rows "
+            "are the roofline budget (relayout = 2x KV HBM pass + reshard). "
+            "Claim checks: "
+            + ", ".join(f"{k}={'PASS' if v else 'FAIL'}" for k, v in checks.items())
+        ),
+        "checks": checks,
+    }
+    save_result(result)
+    return result

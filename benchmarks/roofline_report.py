@@ -1,0 +1,68 @@
+"""§Roofline deliverable: the full (arch x shape x mesh) three-term table.
+
+Reads results/dryrun/*.json (produced by ``repro.launch.dryrun``) and reports
+per cell:
+
+  t_compute   = HLO_FLOPs_per_dev / peak_FLOP/s        (trip-count folded)
+  t_memory    = HLO_bytes_per_dev / HBM_bw
+  t_collective= collective_bytes_per_dev / ICI_bw
+  dominant    = argmax of the three  (the bottleneck the perf loop works on)
+  useful      = MODEL_FLOPS / HLO_FLOPs_global  (remat/replication waste)
+  rf          = roofline fraction: ideal model-flops time / max-term
+"""
+from __future__ import annotations
+
+from repro.common.hardware import DEFAULT_CHIP
+
+from .common import load_dryrun_records, save_result
+
+_SUGGEST = {
+    # dominant-term -> what would move it down (reported per row)
+    "compute": "raise useful_frac: remove replicated compute (shard heads/ffn finer) or drop remat",
+    "memory": "cut materialized traffic: fuse converts, bf16 KV streaming, larger kernel blocks",
+    "collective": "reshard to cut all-gathers: FSDP prefetch overlap, 2D sharding, EP all_to_all",
+}
+
+
+def run() -> dict:
+    chip = DEFAULT_CHIP
+    rows = []
+    for rec in load_dryrun_records():
+        if rec.get("status") == "skipped":
+            rows.append({
+                "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+                "dominant": "SKIP", "note": rec["reason"][:60],
+            })
+            continue
+        r = rec["roofline"]
+        t = {"compute": r["t_compute"], "memory": r["t_memory"], "collective": r["t_collective"]}
+        t_bound = max(t.values())
+        t_ideal = r["model_flops"] / (r["chips"] * chip.peak_flops_bf16)
+        rows.append({
+            "arch": rec["arch"],
+            "shape": rec["shape"],
+            "mesh": rec["mesh"],
+            "t_compute_s": r["t_compute"],
+            "t_memory_s": r["t_memory"],
+            "t_coll_s": r["t_collective"],
+            "dominant": r["dominant"],
+            "useful_frac": r["useful_frac"],
+            "roofline_frac": (t_ideal / t_bound) if t_bound else 0.0,
+            "peak_GiB/dev": (r.get("peak_mem/dev") or 0) / 2**30,
+            "note": _SUGGEST[r["dominant"]][:64],
+        })
+    rows.sort(key=lambda x: (x["arch"], x["shape"], x["mesh"]))
+    result = {
+        "name": "roofline_report",
+        "rows": rows,
+        "notes": (
+            f"Three-term roofline per dry-run cell on {chip.name} "
+            f"({chip.peak_flops_bf16/1e12:.0f} TF/s bf16, {chip.hbm_bw/1e9:.0f} GB/s HBM, "
+            f"{chip.ici_bw_per_link*chip.ici_links/1e9:.0f} GB/s ICI/chip). "
+            "FLOPs/bytes are while-loop trip-count folded (repro.core.hlo_cost); "
+            "collective bytes summed over all-gather/all-reduce/reduce-scatter/"
+            "all-to-all/collective-permute operands in the optimized HLO."
+        ),
+    }
+    save_result(result)
+    return result

@@ -1,0 +1,69 @@
+"""End-to-end measured serving: PD-Swap vs static engine on this host.
+
+Functional companion to fig6: drives the real ServingEngine (continuous
+batching + SwapController) with batched requests on a reduced-config model,
+CPU backend.  Absolute tok/s is a CPU number; the *comparison* exercises the
+identical code paths the TPU deployment uses (program swap, KV relayout,
+decode masking, slot management).  Correctness cross-check: both modes must
+emit identical tokens for identical prompts (greedy).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.models import get_model
+from repro.serving.engine import Request, ServingEngine
+
+from .common import save_result
+
+
+def _drive(mode: str, cfg, params, prompts, *, n_slots=4, max_len=96, prompt_len=24, max_new=16):
+    eng = ServingEngine(cfg, params, n_slots=n_slots, max_len=max_len,
+                        prompt_len=prompt_len, mode=mode)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(f"r{i}", p, max_new=max_new))
+    stats = eng.run()
+    outs = {rid: r.out_tokens for rid, r in eng.finished.items()}
+    return stats, outs
+
+
+def run() -> dict:
+    cfg = reduced_config("smollm-135m", num_layers=3, d_model=192, vocab_size=2048,
+                         num_heads=6, num_kv_heads=2)
+    api = get_model(cfg)
+    params = api.init(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=24).astype(np.int32) for _ in range(6)]
+
+    stats_pd, outs_pd = _drive("pdswap", cfg, params, prompts)
+    stats_st, outs_st = _drive("static", cfg, params, prompts)
+
+    same = all(outs_pd[k] == outs_st[k] for k in outs_pd)
+    hidden = [t.hidden_fraction for t in stats_pd.swap_timings if t.t_relayout or t.t_total_overlapped]
+    rows = [
+        {"engine": "pdswap", "decode_tokens": stats_pd.decode_tokens,
+         "decode_tok/s (CPU)": stats_pd.decode_tput(), "swaps": stats_pd.swaps,
+         "prefill_s": stats_pd.t_prefill},
+        {"engine": "static", "decode_tokens": stats_st.decode_tokens,
+         "decode_tok/s (CPU)": stats_st.decode_tput(), "swaps": stats_st.swaps,
+         "prefill_s": stats_st.t_prefill},
+    ]
+    checks = {
+        "identical greedy tokens across engines": same,
+        "all requests finished (both engines)": len(outs_pd) == len(prompts) == len(outs_st),
+    }
+    result = {
+        "name": "serving_e2e",
+        "rows": rows,
+        "notes": (
+            "Measured continuous-batching run on this host (reduced config; CPU "
+            "numbers validate the mechanism, not TPU perf).  Claim checks: "
+            + ", ".join(f"{k}={'PASS' if v else 'FAIL'}" for k, v in checks.items())
+        ),
+        "checks": checks,
+    }
+    save_result(result)
+    return result

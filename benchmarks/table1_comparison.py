@@ -1,0 +1,79 @@
+"""Table 1 analogue: cross-platform edge LLM inference comparison.
+
+Reprints the paper's measured rows (for context) and adds the v5e rows this
+framework targets, derived from the same roofline arithmetic the paper uses:
+decode is memory-bound -> tok/s = bw / bytes-per-token; energy efficiency =
+tok/s / W.  The point of the row is the *technique transfer*: ternary
+weights resident at 0.25 B/param keep decode weight traffic 8x below bf16,
+on TPU exactly as on the FPGA.
+"""
+from __future__ import annotations
+
+from repro.common.hardware import TPU_V5E
+from repro.configs import get_config
+
+from .common import save_result
+
+# Paper Table 1 (measured, reprinted for comparison)
+PAPER_ROWS = [
+    {"work": "Raspberry Pi 5 [19]", "platform": "SoC", "model": "Qwen 0.6B W4", "power_W": 7.8,
+     "prefill_tok/s": 61.8, "decode_tok/s": 16.6, "decode_tok/J": 2.12},
+    {"work": "Jetson Orin Nano [20]", "platform": "GPU SoC", "model": "TinyLLaMA 1.1B W4", "power_W": 25,
+     "prefill_tok/s": 324.9, "decode_tok/s": 67.6, "decode_tok/J": 2.70},
+    {"work": "LLaMAF [21]", "platform": "ZCU102", "model": "TinyLLaMA 1.1B W8", "power_W": 5.1,
+     "prefill_tok/s": 100, "decode_tok/s": 1.5, "decode_tok/J": 0.29},
+    {"work": "MEADOW [1]", "platform": "ZCU102", "model": "OPT 1.3B W8", "power_W": 10,
+     "prefill_tok/s": 143, "decode_tok/s": 2, "decode_tok/J": 0.20},
+    {"work": "TeLLMe [10]", "platform": "KV260", "model": "BitNet 0.73B W1.58", "power_W": 4.8,
+     "prefill_tok/s": "-", "decode_tok/s": 25, "decode_tok/J": 5.2},
+    {"work": "PD-Swap (paper)", "platform": "KV260", "model": "BitNet 0.73B W1.58", "power_W": 4.9,
+     "prefill_tok/s": 148, "decode_tok/s": 27.8, "decode_tok/J": 5.67},
+]
+
+V5E_POWER_W = 170  # chip TDP-class figure for the efficiency column
+
+
+def _v5e_row(arch: str, ternary: bool, batch: int, ctx: int) -> dict:
+    cfg = get_config(arch, quant_mode="ternary" if ternary else "bf16")
+    chip = TPU_V5E
+    wbytes = cfg.active_param_count() * (0.25 if ternary else 2.0)
+    kv_per_tok = 2 * cfg.num_layers * cfg.num_kv_heads * cfg.head_dim * 2
+    t_dec = (wbytes + kv_per_tok * ctx * batch) / chip.hbm_bw
+    decode_tps = batch / t_dec
+    # prefill: compute-bound at peak (int8 path for ternary)
+    peak = chip.peak_flops_int8 if ternary else chip.peak_flops_bf16
+    prefill_tps = peak / (2 * cfg.active_param_count())
+    return {
+        "work": f"this repo ({'W1.58' if ternary else 'bf16'}, b={batch})",
+        "platform": "TPU v5e x1",
+        "model": f"{arch} ctx={ctx}",
+        "power_W": V5E_POWER_W,
+        "prefill_tok/s": prefill_tps,
+        "decode_tok/s": decode_tps,
+        "decode_tok/J": decode_tps / V5E_POWER_W,
+    }
+
+
+def run() -> dict:
+    rows = list(PAPER_ROWS)
+    rows.append(_v5e_row("bitnet-730m", ternary=True, batch=1, ctx=512))
+    rows.append(_v5e_row("bitnet-730m", ternary=False, batch=1, ctx=512))
+    rows.append(_v5e_row("bitnet-730m", ternary=True, batch=64, ctx=512))
+    t = next(r for r in rows if r["work"].startswith("this repo (W1.58, b=1)"))
+    b = next(r for r in rows if r["work"].startswith("this repo (bf16"))
+    checks = {
+        "ternary decode > 4x bf16 decode at b=1 (weight-bound)": t["decode_tok/s"] > 4 * b["decode_tok/s"],
+    }
+    result = {
+        "name": "table1_comparison",
+        "rows": rows,
+        "notes": (
+            "Paper rows reprinted (measured on-device); v5e rows are roofline-"
+            "derived for the same BitNet 0.73B.  The ternary-vs-bf16 pair shows "
+            "the TLMM memory-system win transfers to TPU: "
+            + ", ".join(f"{k}={'PASS' if v else 'FAIL'}" for k, v in checks.items())
+        ),
+        "checks": checks,
+    }
+    save_result(result)
+    return result

@@ -1,0 +1,83 @@
+"""Table 2 analogue: per-module resource breakdown + 'equivalent utilization'.
+
+The paper's headline is the 106% "equivalent total": because prefill and
+decode attention time-share one reconfigurable region, the design implements
+more logic than the chip statically holds.
+
+TPU analogue: each phase program claims a VMEM working set (kernel tiles —
+the LUT/URAM stand-in, DESIGN.md §2).  We report, per phase RM, the DSE-
+chosen kernel block footprints plus the compiled per-device HBM footprint
+from the dry-run, and compute equivalent utilization =
+(static TLMM tiles + prefill RM + decode RM) / VMEM — >100% means the
+logic-swap packs more than a static design could co-host, without either
+phase shrinking (Eq. 2 uses max, a static design uses sum).
+"""
+from __future__ import annotations
+
+from repro.common.hardware import TPU_V5E
+from repro.configs import get_config
+from repro.core.dse import DseConfig, best_config, run_dse
+
+from .common import load_dryrun_records, save_result
+
+
+def run() -> dict:
+    chip = TPU_V5E
+    cfg = get_config("bitnet-730m")
+    p = best_config(cfg)
+    vm_static = p.vmem_static()
+    vm_pre = p.vmem_prefill(cfg)
+    vm_dec = p.vmem_decode(cfg)
+
+    # a static design must co-host both attention configs: shrink until the
+    # SUM fits (the paper's "shrink modules for simultaneous fit")
+    static_pts = run_dse(cfg, static_baseline=True)
+    static_best = next((x for x in static_pts if x.feasible), static_pts[0])
+
+    rows = [
+        {"module": "TLMM linear tiles (static region)", "vmem_KiB": vm_static / 1024,
+         "resident": "always", "phase": "both"},
+        {"module": "prefill attention RM", "vmem_KiB": vm_pre / 1024,
+         "resident": "prefill only", "phase": f"blk={p.prefill_blk}"},
+        {"module": "decode attention RM", "vmem_KiB": vm_dec / 1024,
+         "resident": "decode only", "phase": f"bk={p.decode_bk}"},
+        {"module": "PD-Swap occupancy (Eq. 2: static+max)", "vmem_KiB": (vm_static + max(vm_pre, vm_dec)) / 1024,
+         "resident": "-", "phase": f"{100*(vm_static+max(vm_pre,vm_dec))/chip.vmem_bytes:.1f}% of VMEM"},
+        {"module": "equivalent total (static+sum)", "vmem_KiB": (vm_static + vm_pre + vm_dec) / 1024,
+         "resident": "-", "phase": f"{100*(vm_static+vm_pre+vm_dec)/chip.vmem_bytes:.1f}% equiv-util"},
+        {"module": "static-design best (both RMs co-resident)", "vmem_KiB": static_best.vmem_bytes / 1024,
+         "resident": "always", "phase": f"blk=bk={static_best.config.prefill_blk} (shrunk)"},
+    ]
+
+    # per-phase compiled footprints from the dry-run (HBM bytes per device)
+    for rec in load_dryrun_records():
+        if rec.get("status") != "ok" or rec["arch"] not in ("bitnet-730m", "deepseek-7b"):
+            continue
+        if rec["mesh"] != "pod16x16":
+            continue
+        rows.append({
+            "module": f"compiled {rec['arch']} {rec['shape']} program",
+            "vmem_KiB": "-",
+            "resident": f"{(rec.get('peak_memory_per_device') or 0)/2**30:.2f} GiB HBM/dev",
+            "phase": rec["kind"],
+        })
+
+    swap_obj = run_dse(cfg)[0].objective
+    checks = {
+        "equivalent utilization > PD-Swap occupancy": (vm_static + vm_pre + vm_dec)
+        > (vm_static + max(vm_pre, vm_dec)),
+        "swap objective beats static-best (Eq. 6)": swap_obj <= static_best.objective,
+    }
+    result = {
+        "name": "table2_resources",
+        "rows": rows,
+        "notes": (
+            "VMEM working-set budget per RM (the LUT/URAM analogue) for the DSE-"
+            "chosen bitnet-730m configs, plus compiled HBM/device footprints from "
+            "the dry-run.  Claim checks: "
+            + ", ".join(f"{k}={'PASS' if v else 'FAIL'}" for k, v in checks.items())
+        ),
+        "checks": checks,
+    }
+    save_result(result)
+    return result

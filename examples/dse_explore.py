@@ -1,0 +1,45 @@
+"""Design-space exploration walkthrough (paper Eq. 2-6).
+
+Runs the roofline-guided DSE for the paper's BitNet 0.73B and one assigned
+arch, printing the feasible frontier and the chosen phase-RM configurations,
+plus the static-baseline comparison the paper's Fig. 6 quantifies.
+
+    PYTHONPATH=src python examples/dse_explore.py [--arch qwen2.5-14b]
+"""
+import argparse
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.core.dse import best_config, run_dse
+
+
+def explore(arch: str, top: int = 5):
+    cfg = get_config(arch)
+    if cfg.attention_free:
+        print(f"{arch}: attention-free — no attention RM to size (phase split still applies)")
+        return
+    print(f"\n=== {arch} ===")
+    pts = run_dse(cfg)
+    print(f"{'feas':4s} {'blk':>5s} {'bk':>5s} {'tlmm':>13s} {'vmem KiB':>9s} "
+          f"{'T_pre':>8s} {'T_dec(2k)':>9s} {'Eq6 obj':>8s}")
+    for pt in pts[:top]:
+        c = pt.config
+        print(f"{'y' if pt.feasible else 'n':4s} {c.prefill_blk:5d} {c.decode_bk:5d} "
+              f"{c.tlmm_bm}x{c.tlmm_bk}x{c.tlmm_bn:>4d} {pt.vmem_bytes/1024:9.0f} "
+              f"{pt.t_pre:8.3f} {pt.t_dec_long:9.4f} {pt.objective:8.3f}")
+    static = run_dse(cfg, static_baseline=True)
+    sbest = next((x for x in static if x.feasible), static[0])
+    best = next((x for x in pts if x.feasible), pts[0])
+    print(f"swap objective {best.objective:.3f}s vs static-best {sbest.objective:.3f}s "
+          f"-> logic swapping wins {sbest.objective/best.objective:.2f}x (Eq. 6, alpha=0.7)")
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", choices=ALL_ARCHS, default="qwen2.5-14b")
+    args = p.parse_args()
+    explore("bitnet-730m")
+    explore(args.arch)
+
+
+if __name__ == "__main__":
+    main()

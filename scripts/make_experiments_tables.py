@@ -1,0 +1,111 @@
+"""Render the EXPERIMENTS.md §Dry-run and §Roofline tables from
+results/dryrun/*.json (optimized) and results/dryrun_baseline/*.json.
+
+    PYTHONPATH=src python scripts/make_experiments_tables.py > results/tables.md
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+CHIP_FLOPS, HBM_BW, ICI_BW = 197e12, 819e9, 200e9
+
+
+def load(d):
+    out = {}
+    for p in sorted((REPO / d).glob("*.json")):
+        r = json.loads(p.read_text())
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def row_terms(rec, key="roofline"):
+    r = rec[key]
+    return r["t_compute"], r["t_memory"], r["t_collective"]
+
+
+def fmt(x):
+    return f"{x:.3g}"
+
+
+def main():
+    opt = load("results/dryrun")
+    base = load("results/dryrun_baseline")
+
+    print("### §Dry-run — compile certification (all cells, both meshes)\n")
+    print("| arch | shape | mesh | status | peak mem/dev (compiled) | HLO collective bytes/dev |")
+    print("|---|---|---|---|---|---|")
+    for key in sorted(opt):
+        r = opt[key]
+        if r.get("status") == "skipped":
+            print(f"| {key[0]} | {key[1]} | {key[2]} | SKIP (full-attention @500k; DESIGN §4) | - | - |")
+            continue
+        pm = r.get("peak_memory_per_device") or 0
+        coll = sum((r.get("collective_bytes") or {}).values())
+        print(f"| {key[0]} | {key[1]} | {key[2]} | ok | {pm/2**30:.2f} GiB | {coll/1e9:.3f} GB |")
+
+    print("\n### §Roofline — three terms per cell, single-pod (256 chips)\n")
+    print("paper-faithful static-generic baseline vs PD-Swap optimized+kernel-substituted.")
+    print("rf_mem = irreducible traffic (Pallas-kernel HBM bytes + one TP-sharded weight")
+    print("pass) / counted HBM bytes — the roofline fraction that matters for these\n"
+          "memory-dominated programs; rf_comp = model-FLOPs time / bound (MFU-style).\n")
+    print("| arch | shape | base t_mem | opt t_comp | opt t_mem | opt t_coll | dominant | useful | rf_comp | rf_mem | speedup |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    from repro.configs import get_config
+
+    for key in sorted(opt):
+        if key[2] != "pod16x16":
+            continue
+        r = opt[key]
+        if r.get("status") == "skipped":
+            continue
+        b = base.get(key)
+        tb = max(row_terms(b)) if b and b.get("status") == "ok" else float("nan")
+        tc, tm, tl = row_terms(r)
+        t_bound = max(tc, tm, tl)
+        rr = r["roofline"]
+        t_ideal = rr["model_flops"] / (rr["chips"] * CHIP_FLOPS)
+        rf = t_ideal / t_bound if t_bound else 0.0
+        speed = tb / t_bound if t_bound and tb == tb else float("nan")
+        # memory-roofline fraction (inference cells with kernel substitution)
+        rf_mem = ""
+        if r.get("kernel_substituted") and r["kind"] in ("prefill", "decode"):
+            from repro.configs.base import SHAPES
+            from repro.core.kernel_substitution import kernel_costs_for_cell
+
+            cfg = get_config(key[0])
+            kb = r["roofline"]["hbm_bytes/dev"]
+            # irreducible = analytic kernel bytes + one pass over TP-sharded weights
+            kc = kernel_costs_for_cell(cfg, SHAPES[key[1]], dp=16, tp=16)
+            weights_once = cfg.active_param_count() * 2 / 16
+            irreducible = kc.hbm_bytes + weights_once
+            rf_mem = f"{min(irreducible / kb, 1.0):.2f}" if kb else ""
+        print(f"| {key[0]} | {key[1]} | {fmt(tb)} | {fmt(tc)} | {fmt(tm)} | {fmt(tl)} "
+              f"| {rr['dominant']} | {rr['useful_frac']:.2f} | {rf:.3f} | {rf_mem} | {speed:.1f}x |")
+
+    # summary stats
+    speeds, boundcnt = [], {}
+    for key in sorted(opt):
+        if key[2] != "pod16x16" or opt[key].get("status") == "skipped":
+            continue
+        b = base.get(key)
+        if not b or b.get("status") != "ok":
+            continue
+        tb = max(row_terms(b))
+        t_bound = max(row_terms(opt[key]))
+        if t_bound:
+            speeds.append(tb / t_bound)
+        dom = opt[key]["roofline"]["dominant"]
+        boundcnt[dom] = boundcnt.get(dom, 0) + 1
+    if speeds:
+        import statistics
+
+        print(f"\nmedian speedup vs paper-faithful baseline: "
+              f"{statistics.median(speeds):.1f}x (min {min(speeds):.1f}x, max {max(speeds):.1f}x, n={len(speeds)})")
+        print(f"dominant-term census: {boundcnt}")
+
+
+if __name__ == "__main__":
+    main()

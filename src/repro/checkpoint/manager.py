@@ -1,0 +1,130 @@
+"""Checkpointing: atomic, async, resharding-on-restore (elastic restart).
+
+Format: one directory per step containing ``arrays.npz`` (flattened pytree
+leaves keyed by '/'-joined paths) + ``meta.json`` (step, treedef token,
+config fingerprint).  Writes go to ``<dir>.tmp`` then ``os.rename`` —
+a checkpoint is either complete or absent (crash-safe).  ``save_async``
+snapshots device arrays to host, then writes on a background thread so the
+training loop keeps stepping (fault-tolerance requirement: checkpoint
+cadence must not stall the step).
+
+Restore takes *target shardings*: leaves are ``device_put`` against whatever
+mesh the restarted job has — a job can come back on a different device count
+(elastic shrink/grow) and the optimizer state reshards with the params.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.common.tree import tree_map_with_path_names
+
+
+def _flatten_named(tree: Any) -> dict:
+    out = {}
+    tree_map_with_path_names(lambda p, x: out.__setitem__(p, np.asarray(x)), tree)
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._last_error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------- saving --
+
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None) -> Path:
+        arrays = _flatten_named(jax.device_get(tree))
+        return self._write(step, arrays, extra or {})
+
+    def save_async(self, step: int, tree: Any, extra: Optional[dict] = None) -> None:
+        """Snapshot to host synchronously, write in the background."""
+        self.wait()  # one outstanding write max
+        arrays = _flatten_named(jax.device_get(tree))
+
+        def work():
+            try:
+                self._write(step, arrays, extra or {})
+            except BaseException as e:  # surfaced on next wait()
+                self._last_error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._last_error is not None:
+            err, self._last_error = self._last_error, None
+            raise err
+
+    def _write(self, step: int, arrays: dict, extra: dict) -> Path:
+        final = self.dir / f"step_{step:08d}"
+        tmp = self.dir / f".tmp_step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        np.savez(tmp / "arrays.npz", **arrays)
+        (tmp / "meta.json").write_text(json.dumps({"step": step, "time": time.time(), **extra}))
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # ------------------------------------------------------------ restore --
+
+    def all_steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            if (p / "meta.json").exists():
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None, shardings: Any = None) -> tuple[Any, int]:
+        """Restore into the structure of ``template``; device_put against
+        ``shardings`` (same pytree structure) when given — this is the
+        elastic-resharding path."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        path = self.dir / f"step_{step:08d}"
+        with np.load(path / "arrays.npz") as data:
+            arrays = {k: data[k] for k in data.files}
+
+        flat_sh = None
+        if shardings is not None:
+            flat_sh = {}
+            tree_map_with_path_names(lambda p, s: flat_sh.__setitem__(p, s), shardings)
+
+        def load(p, t):
+            a = arrays[p]
+            assert a.shape == tuple(t.shape), (p, a.shape, t.shape)
+            a = a.astype(t.dtype)
+            if flat_sh is not None and p in flat_sh and flat_sh[p] is not None:
+                return jax.device_put(a, flat_sh[p])
+            return jax.device_put(a)
+
+        return tree_map_with_path_names(load, template), step

@@ -1,0 +1,2 @@
+from repro.common.hardware import TPU_V5E, DEFAULT_CHIP, ChipSpec, mesh_chips
+from repro.common.tree import tree_bytes, tree_param_count, tree_map_with_path_names

@@ -1,0 +1,49 @@
+"""Small pytree helpers used across the framework (no flax/optax installed)."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_param_count(tree: Any) -> int:
+    """Total number of *logical* parameters.
+
+    Ternary-packed uint8 leaves hold 4 weights per byte; we count logical
+    weights so 6*N*D model-FLOP math stays correct regardless of packing.
+    """
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        if hasattr(leaf, "dtype") and leaf.dtype == jnp.uint8:
+            n *= 4
+        total += n
+    return total
+
+
+def tree_bytes(tree: Any) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        total += int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize if leaf.shape else jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def tree_map_with_path_names(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """tree_map where fn receives a '/'-joined string path (for sharding rules)."""
+
+    def _name(path) -> str:
+        parts = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                parts.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                parts.append(str(p.idx))
+            elif isinstance(p, jax.tree_util.GetAttrKey):
+                parts.append(str(p.name))
+            else:
+                parts.append(str(p))
+        return "/".join(parts)
+
+    return jax.tree_util.tree_map_with_path(lambda p, x: fn(_name(p), x), tree)

@@ -1,0 +1,67 @@
+"""Architecture registry: ``--arch <id>`` resolves through here."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.configs.base import (
+    ModelConfig,
+    QuantConfig,
+    ShapeCell,
+    SHAPES,
+    applicable_shapes,
+)
+
+# arch-id -> module path (one module per assigned architecture + paper's own)
+_ARCH_MODULES = {
+    "granite-moe-3b-a800m": "repro.configs.granite_moe_3b_a800m",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "xlstm-1.3b": "repro.configs.xlstm_1_3b",
+    "chameleon-34b": "repro.configs.chameleon_34b",
+    "whisper-large-v3": "repro.configs.whisper_large_v3",
+    "deepseek-7b": "repro.configs.deepseek_7b",
+    "qwen2.5-14b": "repro.configs.qwen2_5_14b",
+    "minicpm-2b": "repro.configs.minicpm_2b",
+    "smollm-135m": "repro.configs.smollm_135m",
+    "hymba-1.5b": "repro.configs.hymba_1_5b",
+    "bitnet-730m": "repro.configs.bitnet_730m",
+}
+
+ASSIGNED_ARCHS = [a for a in _ARCH_MODULES if a != "bitnet-730m"]
+ALL_ARCHS = list(_ARCH_MODULES)
+
+
+def get_config(arch: str, *, quant_mode: str | None = None) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    cfg: ModelConfig = importlib.import_module(_ARCH_MODULES[arch]).CONFIG
+    if quant_mode is not None:
+        cfg = dataclasses.replace(cfg, quant=QuantConfig(mode=quant_mode))
+    return cfg
+
+
+def reduced_config(arch: str, **overrides) -> ModelConfig:
+    """A tiny same-family config for CPU smoke tests (per-arch smoke tests
+    instantiate REDUCED configs; full configs are exercised only by the
+    dry-run)."""
+    cfg = get_config(arch)
+    small = dict(
+        num_layers=min(cfg.num_layers, 2),
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=2 if cfg.num_kv_heads < cfg.num_heads else 4,
+        head_dim=32,
+        d_ff=0 if cfg.d_ff == 0 else 256,
+        vocab_size=256,
+        max_position_embeddings=2048,
+    )
+    if cfg.moe:
+        small.update(num_experts=4, top_k=2, moe_d_ff=64)
+    if cfg.family == "encdec":
+        small.update(encoder_layers=2, encoder_seq=16)
+    if cfg.family == "hymba":
+        small.update(sliding_window=32, global_attn_layers=(0,), ssm_state=8)
+    if cfg.family == "xlstm":
+        small.update(num_heads=4, num_kv_heads=4, head_dim=32, slstm_every=2)
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

@@ -1,0 +1,22 @@
+"""bitnet-730m — the paper's own model (BitNet b1.58 0.73B, W1.58-A8).
+
+Not part of the assigned 10-arch pool; included so the paper-faithful
+experiments (Fig. 5/6, Tables 1/2 analogues) run the same model the paper
+ran: ternary weights, int8 activations, table-lookup linear path.
+LLaMA-shaped 700M-class config per BitNet b1.58 (arXiv:2402.17764).
+"""
+from repro.configs.base import ModelConfig, QuantConfig
+
+CONFIG = ModelConfig(
+    name="bitnet-730m",
+    family="transformer",
+    num_layers=24,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=24,
+    d_ff=4096,
+    vocab_size=32002,
+    rope_theta=10000.0,
+    tie_embeddings=True,
+    quant=QuantConfig(mode="ternary"),
+)

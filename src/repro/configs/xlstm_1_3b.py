@@ -1,0 +1,22 @@
+"""xlstm-1.3b  [ssm]  (arXiv:2405.04517)
+
+48L d_model=2048 4H d_ff=0 vocab=50304 — sLSTM + mLSTM blocks at the paper's
+7:1 ratio (one sLSTM block per 8).  Attention-free: the PD-Swap *attention*
+RMs don't apply, but the phase asymmetry does — chunkwise-parallel prefill vs
+O(1)-state recurrent decode are the two phase-specialized programs
+(DESIGN.md §4).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="xlstm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    slstm_every=8,
+    tie_embeddings=False,
+)

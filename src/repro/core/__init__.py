@@ -1,0 +1,13 @@
+"""PD-Swap core: phase-specialized engines, logic-swap controller, DSE."""
+from repro.core.phase_engine import PhaseEngine, PhaseProgram, make_pctx
+from repro.core.swap import SwapController, SwapTiming
+from repro.core.kv_cache import KVSlotManager, insert_prefill_kv
+from repro.core.dse import run_dse, best_config, DseConfig, DsePoint
+from repro.core.roofline import (
+    RooflineReport,
+    roofline_from_artifacts,
+    collective_bytes_from_hlo,
+    cost_analysis_dict,
+    memory_analysis_bytes,
+)
+from repro.core.disagg import split_pod_meshes, DisaggCostModel

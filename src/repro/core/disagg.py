@@ -1,0 +1,83 @@
+"""Spatial prefill/decode disaggregation across pods (beyond-paper mode).
+
+The paper time-multiplexes ONE fabric between phases because an edge FPGA is
+a single device.  At pod scale the same asymmetry argument supports *spatial*
+disaggregation: dedicate pod 0 to prefill (compute-heavy program resident)
+and pod 1 to decode (bandwidth-heavy program resident); the "bitstream load"
+becomes a KV transfer over DCN.  Both modes share the PhaseEngine programs —
+only meshes and the transfer differ.
+
+This module provides the mesh split, the KV-transfer program (a device_put /
+resharding across the pod axis — XLA emits the DCN collective), and the
+analytic cost model the fig6/disagg benchmark uses to compare temporal vs
+spatial modes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common.hardware import DEFAULT_CHIP, ChipSpec
+from repro.configs.base import ModelConfig
+
+
+def split_pod_meshes(mesh: Mesh) -> Tuple[Mesh, Mesh]:
+    """(prefill_mesh, decode_mesh) from a (pod, data, model) mesh."""
+    assert "pod" in mesh.axis_names, "spatial disaggregation needs a pod axis"
+    devs = mesh.devices  # (pods, data, model)
+    assert devs.shape[0] >= 2, "need >= 2 pods"
+    axes = mesh.axis_names[1:]
+    return Mesh(devs[0], axes), Mesh(devs[1], axes)
+
+
+def kv_transfer_program(decode_mesh: Mesh, spec: P):
+    """Program moving prefill-pod KV into the decode pod's sharding."""
+    sharding = NamedSharding(decode_mesh, spec)
+
+    def transfer(kv):
+        return jax.tree.map(lambda x: jax.device_put(x, sharding), kv)
+
+    return transfer
+
+
+@dataclasses.dataclass
+class DisaggCostModel:
+    """Analytic comparison of temporal swap vs spatial disaggregation."""
+
+    cfg: ModelConfig
+    chips_per_pod: int
+    chip: ChipSpec = DEFAULT_CHIP
+
+    def kv_bytes(self, batch: int, seq: int) -> float:
+        c = self.cfg
+        if c.attention_free:
+            # recurrent state instead of KV
+            hd = c.d_model // c.num_heads
+            return c.num_layers * batch * c.num_heads * (hd * hd + hd) * 4
+        return 2 * c.num_layers * batch * c.num_kv_heads * seq * c.head_dim * 2
+
+    def temporal_swap_latency(self, batch: int, seq: int) -> float:
+        """KV relayout: one read + one write of the cache over HBM, plus the
+        resharding all-to-all over ICI (heads->sequence resharding moves each
+        byte once)."""
+        b = self.kv_bytes(batch, seq) / self.chips_per_pod
+        t_hbm = 2 * b / self.chip.hbm_bw
+        t_ici = b / (self.chip.ici_bw_per_link * self.chip.ici_links)
+        return max(t_hbm, t_ici)
+
+    def spatial_transfer_latency(self, batch: int, seq: int) -> float:
+        """Cross-pod KV move over DCN (per-chip share, all NICs in parallel)."""
+        b = self.kv_bytes(batch, seq) / self.chips_per_pod
+        return b / self.chip.dcn_bw
+
+    def better_mode(self, batch: int, seq: int, decode_steps: int) -> str:
+        """Spatial wins when prefill/decode can pipeline across requests and
+        the DCN transfer hides under a decode batch; temporal wins for single
+        bursty requests (the paper's edge scenario)."""
+        t_sp = self.spatial_transfer_latency(batch, seq)
+        t_tm = self.temporal_swap_latency(batch, seq)
+        return "spatial" if t_sp < t_tm * 4 and decode_steps > 64 else "temporal"

@@ -1,0 +1,349 @@
+"""Trip-count-aware cost accounting over optimized HLO text.
+
+XLA's ``HloCostAnalysis`` (what ``compiled.cost_analysis()`` reports) counts
+while-loop bodies ONCE — under scan-over-layers that under-reports FLOPs,
+bytes and collective traffic by the trip count (verified experimentally in
+tests/test_hlo_cost.py).  Fortunately the optimized HLO annotates every scan
+loop with ``backend_config={"known_trip_count":{"n":...}}``.
+
+This analyzer parses the module into computations with a per-computation
+symbol table (op name -> result shape), accounts per-op costs:
+
+  * FLOPs: dot ops — 2 x elems(result) x prod(lhs contracting dims)
+  * bytes: result + operand bytes of memory-relevant ops (fusion call sites,
+    dots, copies, gathers, slices, collectives, ...)
+  * collective bytes: operand bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute (per kind)
+
+and folds the call graph bottom-up, multiplying while bodies by their known
+trip counts (nested scans multiply).  Fusion-computation internals count for
+FLOPs only — their memory traffic is the fusion call site's operands.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OP_LINE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"\b([a-z][a-z0-9\-]*)\(")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+_MEM_OPS = set(
+    (
+        "fusion", "dot", "convolution", "copy", "gather", "scatter",
+        "dynamic-slice", "dynamic-update-slice", "reduce", "sort", "transpose",
+        "reshape", "broadcast", "iota", "concatenate", "pad", "slice",
+        "select-and-scatter", "reduce-window", "custom-call", "cholesky",
+        "triangular-solve", "rng", "convert", "bitcast-convert",
+    )
+) | set(COLLECTIVES)
+
+_SKIP_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "opt-barrier",
+}
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _type_bytes(type_text: str) -> int:
+    """Total bytes of a (possibly tuple) type string."""
+    return sum(
+        _shape_elems(dims) * _DTYPE_BYTES.get(dt, 0)
+        for dt, dims in _SHAPE_RE.findall(type_text)
+    )
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    opcode: str
+    result_type: str
+    operands: List[str]
+    attrs: str
+    operand_text: str = ""
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    calls: List[Tuple[str, float]] = dataclasses.field(default_factory=list)  # (callee, mult)
+    flops_only_calls: List[str] = dataclasses.field(default_factory=list)
+
+
+def _parse_ops(block: List[str]) -> List[_Op]:
+    ops = []
+    for line in block:
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        name, body = m.group(1), m.group(2)
+        oc = _OPCODE_RE.search(body)
+        if not oc:
+            continue
+        opcode = oc.group(1)
+        # result type = text before the opcode occurrence
+        result_type = body[: oc.start()].strip()
+        paren_start = body.index("(", oc.start())
+        # operand refs inside the first balanced paren group
+        depth, i = 0, paren_start
+        end = len(body)
+        for i in range(paren_start, len(body)):
+            if body[i] == "(":
+                depth += 1
+            elif body[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_text = body[paren_start:end]
+        attrs = body[end:]
+        ops.append(_Op(name, opcode, result_type, _OPERANDS_RE.findall(operand_text), attrs, operand_text))
+    return ops
+
+
+def parse_hlo(hlo: str) -> Tuple[Dict[str, List[_Op]], Optional[str], set]:
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    current = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        st = line.strip()
+        if current is None:
+            if st.endswith("{") and "->" in st and (st.startswith("%") or st.startswith("ENTRY")):
+                name_m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)", st)
+                if name_m:
+                    current = name_m.group(1)
+                    comps[current] = []
+                    if st.startswith("ENTRY"):
+                        entry = current
+            continue
+        if st == "}":
+            current = None
+            continue
+        comps[current].append(line)
+
+    parsed = {name: _parse_ops(block) for name, block in comps.items()}
+    fusion_callees = set()
+    for ops in parsed.values():
+        for op in ops:
+            if op.opcode in ("fusion", "reduce", "sort", "scatter", "map", "reduce-window", "select-and-scatter", "custom-call", "all-reduce", "reduce-scatter"):
+                fusion_callees.update(_CALLS_RE.findall(op.attrs))
+    return parsed, entry, fusion_callees
+
+
+def _pure_convert_callees(parsed: Dict[str, List[_Op]]) -> set:
+    """Fusion computations that are pure dtype converts (convert/bitcast/
+    copy-free elementwise casts).  On TPU these never materialize — the MXU
+    consumes bf16 directly and the VPU converts in-register — but XLA:CPU
+    rewrites every bf16 dot as convert-to-f32 + f32 dot and LICM hoists the
+    converts (for a KV cache that is a whole-buffer f32 copy).  Counting
+    them would charge the TPU roofline for a CPU-lowering artifact."""
+    out = set()
+    for name, ops in parsed.items():
+        body = [o for o in ops if o.opcode not in _SKIP_OPS]
+        if body and all(o.opcode in ("convert", "bitcast-convert", "broadcast") for o in body):
+            out.add(name)
+    return out
+
+
+def _fusion_param_reads(callee_ops: List[_Op], n_params: int) -> Optional[Dict[int, float]]:
+    """Per-parameter effective read bytes for a fusion computation.
+
+    A fusion whose parameter is consumed ONLY by dynamic-slice/slice ops
+    reads just the sliced window from HBM, not the whole operand (the
+    classic scan-over-layers pattern: slice layer l from the stacked cache).
+    Returns {param_index: bytes} for parameters where the cap applies."""
+    # map param name -> index: the N of "parameter(N)" sits in operand_text
+    idx_of = {}
+    for op in callee_ops:
+        if op.opcode == "parameter":
+            digits = op.operand_text.strip("() ")
+            if digits.isdigit():
+                idx_of[op.name] = int(digits)
+    if not idx_of:
+        return None
+    reads: Dict[int, float] = {}
+    for pname, pidx in idx_of.items():
+        uses = [o for o in callee_ops if pname in o.operands and o.opcode != "parameter"]
+        if uses and all(u.opcode in ("dynamic-slice", "slice") for u in uses):
+            reads[pidx] = sum(_type_bytes(u.result_type) for u in uses)
+    return reads or None
+
+
+def _comp_cost(
+    name: str,
+    ops: List[_Op],
+    is_fusion: bool,
+    parsed: Optional[Dict[str, List[_Op]]] = None,
+    convert_callees: Optional[set] = None,
+) -> CompCost:
+    shapes = {op.name: op.result_type for op in ops}
+    parsed = parsed or {}
+    convert_callees = convert_callees or set()
+    # ops that are free dtype casts: resolve operands through them so
+    # consumers charge the ORIGINAL width
+    alias: Dict[str, str] = {}
+    for op in ops:
+        if op.opcode == "convert" and op.operands:
+            alias[op.name] = op.operands[0]
+        elif op.opcode == "fusion" and op.operands:
+            callees = _CALLS_RE.findall(op.attrs)
+            if callees and all(cn in convert_callees for cn in callees):
+                alias[op.name] = op.operands[0]
+
+    def resolve(o: str) -> str:
+        seen = set()
+        while o in alias and o not in seen:
+            seen.add(o)
+            o = alias[o]
+        return o
+
+    c = CompCost()
+    for op in ops:
+        if op.opcode in _SKIP_OPS:
+            continue
+        if op.opcode == "while":
+            trip = 1.0
+            tm = _TRIP_RE.search(op.attrs)
+            if tm:
+                trip = float(tm.group(1))
+            bm = _BODY_RE.search(op.attrs)
+            cm = _COND_RE.search(op.attrs)
+            if bm:
+                c.calls.append((bm.group(1), trip))
+            if cm:
+                c.calls.append((cm.group(1), trip))
+            continue
+        if op.opcode in ("call", "conditional", "async-start"):
+            for callee in _OPERANDS_RE.findall(op.attrs):
+                pass
+            for callee in _CALLS_RE.findall(op.attrs):
+                c.calls.append((callee, 1.0))
+            for callee in re.findall(r"(?:true_computation|false_computation)=%?([\w.\-]+)", op.attrs):
+                c.calls.append((callee, 1.0))
+            continue
+        if op.opcode in ("dot", "convolution"):
+            cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+            k = 1
+            if cm and op.operands:
+                lhs_type = shapes.get(op.operands[0], "")
+                sm = _SHAPE_RE.search(lhs_type)
+                if sm:
+                    lhs_dims = [int(x) for x in sm.group(2).split(",") if x]
+                    for idx in (int(x) for x in cm.group(1).split(",") if x):
+                        if idx < len(lhs_dims):
+                            k *= lhs_dims[idx]
+            c.flops += 2.0 * (_type_bytes(op.result_type) / max(_DTYPE_BYTES.get(_SHAPE_RE.search(op.result_type).group(1), 1), 1)) * k if _SHAPE_RE.search(op.result_type) else 0.0
+        for kind in COLLECTIVES:
+            if op.opcode.startswith(kind) and not op.opcode.endswith("-done"):
+                b = sum(_type_bytes(shapes.get(o, "")) for o in op.operands)
+                if b == 0:
+                    b = _type_bytes(op.result_type)
+                c.coll_bytes += b
+                c.coll_by_kind[kind] = c.coll_by_kind.get(kind, 0.0) + b
+                break
+        if op.opcode == "fusion":
+            for callee in _CALLS_RE.findall(op.attrs):
+                c.flops_only_calls.append(callee)
+        if not is_fusion and op.opcode in _MEM_OPS:
+            if op.opcode == "fusion" and op.name in alias:
+                b = 0.0  # pure dtype cast: free on TPU (fuses into consumer)
+            elif op.opcode in ("fusion", "scatter") and (
+                "dynamic-update-slice" in op.name or "scatter" in op.name
+            ):
+                # In-place-update fusions (DUS / scatter roots): XLA aliases
+                # the big buffer operand; real traffic is the update slice
+                # (read-modify-write), not the whole KV cache.
+                ob = [_type_bytes(shapes.get(resolve(o), "")) for o in op.operands]
+                b = 2 * (sum(ob) - max(ob)) if ob else _type_bytes(op.result_type)
+            elif op.opcode == "dynamic-update-slice":
+                # In-place DUS touches only the updated slice (read-modify-
+                # write), not the whole buffer — critical for KV caches.
+                upd = _type_bytes(shapes.get(op.operands[1], "")) if len(op.operands) > 1 else 0
+                b = 2 * upd
+            elif op.opcode == "dynamic-slice":
+                # Reads only the sliced window.
+                b = 2 * _type_bytes(op.result_type)
+            else:
+                b = _type_bytes(op.result_type)
+                # per-parameter effective reads: a fusion that only
+                # dynamic-slices a parameter reads the window, not the buffer
+                reads = None
+                if op.opcode == "fusion" and parsed:
+                    callees = _CALLS_RE.findall(op.attrs)
+                    if len(callees) == 1 and callees[0] in parsed:
+                        reads = _fusion_param_reads(parsed[callees[0]], len(op.operands))
+                for i, o in enumerate(op.operands):
+                    if reads and i in reads:
+                        b += reads[i]
+                    else:
+                        b += _type_bytes(shapes.get(resolve(o), ""))
+            c.bytes += b
+    return c
+
+
+def total_costs(hlo: str) -> Dict[str, float]:
+    """Trip-count-folded totals for the entry computation, projected to TPU
+    execution semantics (pure-convert fusions free, slice-only fusion reads
+    window-sized, in-place DUS/scatter at update size)."""
+    parsed, entry, fusion_callees = parse_hlo(hlo)
+    convert_callees = _pure_convert_callees(parsed)
+    costs = {
+        name: _comp_cost(name, ops, name in fusion_callees, parsed, convert_callees)
+        for name, ops in parsed.items()
+    }
+    memo: Dict[str, Tuple[float, float, float, Dict[str, float]]] = {}
+
+    def fold(name: str, depth=0):
+        if name in memo:
+            return memo[name]
+        c = costs.get(name)
+        if c is None or depth > 64:
+            return (0.0, 0.0, 0.0, {})
+        memo[name] = (0.0, 0.0, 0.0, {})
+        fl, by, co = c.flops, c.bytes, c.coll_bytes
+        kinds = dict(c.coll_by_kind)
+        for callee in c.flops_only_calls:
+            cf, _, _, _ = fold(callee, depth + 1)
+            fl += cf
+        for callee, mult in c.calls:
+            cf, cb, cc, ck = fold(callee, depth + 1)
+            fl += mult * cf
+            by += mult * cb
+            co += mult * cc
+            for k, v in ck.items():
+                kinds[k] = kinds.get(k, 0.0) + mult * v
+        memo[name] = (fl, by, co, kinds)
+        return memo[name]
+
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0}
+    fl, by, co, kinds = fold(entry)
+    out = {"flops": fl, "bytes": by, "collective_bytes": co}
+    for k, v in kinds.items():
+        out[f"coll_{k}"] = v
+    return out

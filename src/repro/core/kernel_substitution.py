@@ -1,0 +1,115 @@
+"""Per-cell analytic kernel costs for the kernel-substituted roofline.
+
+The dry-run lowers each prefill/decode cell twice:
+
+  * ``attn_impl='xla'``  — generic XLA attention: the compiled program a
+    static (TeLLMe-style) deployment would run.  Its HLO-derived roofline is
+    the paper-faithful BASELINE.
+  * ``attn_impl='stub'`` — attention cores stubbed out; this module supplies
+    the exact BlockSpec-derived cost of the phase-specialized Pallas RMs
+    (kernels/costs.py).  stub-HLO + kernel analytic = the PD-Swap program.
+
+Sharding model (launch/sharding_rules + layers/sharding rules):
+  prefill: batch over dp, q-heads over tp (replicated when H % tp != 0).
+  decode:  batch over dp, KV sequence over tp (flash-decoding split: every
+           device streams S/tp of the cache; the cross-device LSE merge is
+           a tiny collective already present in the stub HLO).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.kernels.costs import (
+    ZERO,
+    KernelCost,
+    decode_attention_cost,
+    mlstm_chunk_cost,
+    prefill_attention_cost,
+    slstm_scan_cost,
+)
+
+_FULL_WINDOW = 1 << 30
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _layer_windows(cfg: ModelConfig) -> list[Optional[int]]:
+    if cfg.sliding_window is None:
+        return [None] * cfg.num_layers
+    return [
+        None if l in cfg.global_attn_layers else cfg.sliding_window
+        for l in range(cfg.num_layers)
+    ]
+
+
+# Flash-attention training multipliers over the forward kernel: the backward
+# re-streams q/k/v/o/do and recomputes the score tiles while producing
+# dq/dk/dv (the standard FlashAttention-2 backward dataflow; same BlockSpec
+# family as the forward kernel in kernels/prefill_attention).
+TRAIN_FLOPS_MULT = 3.5  # fwd + bwd(2.5x, incl. in-kernel score recompute)
+TRAIN_BYTES_MULT = 3.0  # fwd io + bwd reads(q,k,v,o,do) + writes(dq,dk,dv)
+
+
+def kernel_costs_for_cell(cfg: ModelConfig, cell: ShapeCell, *, dp: int, tp: int) -> KernelCost:
+    """Per-device Pallas-kernel cost of one phase step for this cell."""
+    if cfg.family == "xlstm":
+        # Attention-free: the phase RMs are the chunkwise-mLSTM and
+        # sLSTM-scan kernels (prefill/train — decode is the O(1) recurrent
+        # update, kept in XLA).  Ideal TP split of the head-state dim.
+        if cell.kind == "decode":
+            return ZERO
+        b_loc = _ceil_div(cell.global_batch, dp)
+        h, hd, d = cfg.num_heads, cfg.d_model // cfg.num_heads, cfg.d_model
+        n_s = cfg.num_layers // cfg.slstm_every
+        n_m = cfg.num_layers - n_s
+        total = ZERO
+        for _ in range(n_m):
+            c = mlstm_chunk_cost(b_loc, h, cell.seq_len, hd)
+            total = total + KernelCost(c.flops / tp, c.hbm_bytes / tp, c.vmem_bytes)
+        for _ in range(n_s):
+            c = slstm_scan_cost(b_loc, cell.seq_len, d, h)
+            total = total + KernelCost(c.flops / tp, c.hbm_bytes / tp, c.vmem_bytes)
+        if cell.kind == "train":
+            total = KernelCost(total.flops * TRAIN_FLOPS_MULT,
+                               total.hbm_bytes * TRAIN_BYTES_MULT, total.vmem_bytes)
+        return total
+
+    b_loc = _ceil_div(cell.global_batch, dp)
+    h, hkv, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    total = ZERO
+
+    if cell.kind in ("prefill", "train"):
+        h_loc = h // tp if h % tp == 0 else h  # replicated when indivisible
+        hkv_loc = max(hkv // tp, 1) if h % tp == 0 else hkv
+        for w in _layer_windows(cfg):
+            total = total + prefill_attention_cost(
+                b_loc, h_loc, hkv_loc, cell.seq_len, d, window=w
+            )
+        if cfg.family == "encdec":
+            senc = _ceil_div(cfg.encoder_seq, 128) * 128
+            for _ in range(cfg.encoder_layers):  # encoder self-attn, non-causal
+                total = total + prefill_attention_cost(
+                    b_loc, h_loc, hkv_loc, senc, d, causal=False
+                )
+            for _ in range(cfg.num_layers):  # cross-attn: S queries x Senc keys
+                total = total + prefill_attention_cost(
+                    b_loc, h_loc, hkv_loc, cell.seq_len, d, causal=False, skv=senc
+                )
+        if cell.kind == "train":
+            total = KernelCost(total.flops * TRAIN_FLOPS_MULT,
+                               total.hbm_bytes * TRAIN_BYTES_MULT, total.vmem_bytes)
+    else:  # decode
+        s_loc = _ceil_div(cell.seq_len, tp)  # KV-sequence sharding
+        for w in _layer_windows(cfg):
+            w_loc = None if w is None else _ceil_div(min(w, cell.seq_len), tp)
+            total = total + decode_attention_cost(b_loc, h, hkv, s_loc, d, window=w_loc)
+        if cfg.family == "encdec":
+            senc_loc = _ceil_div(_ceil_div(cfg.encoder_seq, 128) * 128, tp)
+            for _ in range(cfg.num_layers):
+                total = total + decode_attention_cost(b_loc, h, hkv, senc_loc, d)
+    return total

@@ -1,0 +1,79 @@
+"""KV-cache slot manager for continuous batching.
+
+The decode buffer is a fixed (L, B_slots, Hkv, max_len, D) allocation in the
+*decode* layout (sequence-sharded, §DECODE_RULES).  Prefilled requests are
+inserted into free slots by the relayout program; per-slot ``lengths`` drive
+the masking inside the decode attention kernel (scalar-prefetched), so slots
+of different ages batch together — exactly the paper's "decode attention
+scales with the accumulated sequence length" regime, with per-slot lengths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class SlotState:
+    request_id: Optional[str] = None
+    length: int = 0
+    max_new: int = 0
+    generated: int = 0
+
+
+class KVSlotManager:
+    def __init__(self, n_slots: int):
+        self.slots: List[SlotState] = [SlotState() for _ in range(n_slots)]
+
+    @property
+    def n_slots(self) -> int:
+        return len(self.slots)
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.request_id is None]
+
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.request_id is not None]
+
+    def assign(self, request_id: str, length: int, max_new: int) -> int:
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError("no free KV slots")
+        i = free[0]
+        self.slots[i] = SlotState(request_id, length, max_new, 0)
+        return i
+
+    def step(self, finished_cb=None) -> None:
+        """Advance all active slots by one generated token; free finished."""
+        for i, s in enumerate(self.slots):
+            if s.request_id is None:
+                continue
+            s.length += 1
+            s.generated += 1
+            if s.generated >= s.max_new:
+                if finished_cb:
+                    finished_cb(i, s)
+                self.slots[i] = SlotState()
+
+    def lengths_array(self) -> jnp.ndarray:
+        return jnp.asarray([s.length for s in self.slots], jnp.int32)
+
+    def active_mask(self) -> jnp.ndarray:
+        return jnp.asarray([s.request_id is not None for s in self.slots], bool)
+
+
+def insert_prefill_kv(cache, prefill_kv, slot: int, seq_len: int):
+    """Write a prefilled request's relayouted KV into cache slot ``slot``.
+
+    cache leaves: (B_slots, L, ...) — decode layout, batch-leading;
+    prefill_kv leaves: (1, L, ...) already padded to max_len and transposed
+    by the relayout program.
+    """
+
+    def ins(buf, new):
+        return jax.lax.dynamic_update_slice_in_dim(buf, new.astype(buf.dtype), slot, axis=0)
+
+    return jax.tree.map(ins, cache, prefill_kv)

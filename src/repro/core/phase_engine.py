@@ -1,0 +1,257 @@
+"""Phase-specialized compiled programs — the TPU analogue of the paper's
+reconfigurable modules (DESIGN.md §2, C1).
+
+On an FPGA a "configuration" is a bitstream; on TPU it is a compiled XLA
+executable: fusion plan, kernel block shapes, layouts and collective
+schedule.  ``PhaseEngine`` owns, for one (arch x mesh x shape):
+
+  * ``prefill``        — token-parallel program (compute-optimized RM)
+  * ``prefill_body``   — prefill through the LAST layer's attention
+  * ``prefill_tail``   — last FFN + norm + logits (runs during the swap)
+  * ``kv_relayout``    — the *swap itself*: prefill-layout KV -> decode-layout
+                         cache (reshard + pad + optional int8 compression).
+                         This is the physically-real analogue of the 45 ms
+                         PCAP bitstream load.
+  * ``decode``         — KV-streaming program (bandwidth-optimized RM)
+
+Weights are never touched by the swap: both phase programs consume the same
+param buffers with identical shardings — the paper's static region.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.layers.sharding import (
+    DECODE_RULES,
+    LONG_DECODE_RULES,
+    MeshAxes,
+    NULL_CTX,
+    PREFILL_RULES,
+    PartitionCtx,
+)
+from repro.models import get_model
+from repro.launch.sharding_rules import params_shardings
+
+
+@dataclasses.dataclass
+class PhaseProgram:
+    name: str
+    fn: Callable  # jitted
+    abstract_inputs: tuple = ()
+    lowered: Any = None
+    compiled: Any = None
+
+    def lower_and_compile(self, *args):
+        args = args or self.abstract_inputs
+        self.lowered = self.fn.lower(*args)
+        self.compiled = self.lowered.compile()
+        return self.compiled
+
+
+def _mesh_axes(mesh: Optional[Mesh]) -> MeshAxes:
+    if mesh is None:
+        return MeshAxes()
+    names = mesh.axis_names
+    dp = tuple(n for n in names if n in ("pod", "data")) or (None,)
+    dp = dp[0] if len(dp) == 1 else dp
+    return MeshAxes(dp=dp, tp="model" if "model" in names else None, fsdp="data" if "data" in names else None)
+
+
+def make_pctx(mesh: Optional[Mesh], phase: str) -> PartitionCtx:
+    rules = {"prefill": PREFILL_RULES, "decode": DECODE_RULES, "long_decode": LONG_DECODE_RULES}.get(
+        phase, PREFILL_RULES
+    )
+    return PartitionCtx(mesh=mesh, axes=_mesh_axes(mesh), rules=rules)
+
+
+class PhaseEngine:
+    """Builds and caches the phase programs for one architecture."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        mesh: Optional[Mesh] = None,
+        *,
+        max_len: int = 0,
+        long_context: bool = False,
+        kv_quant: Optional[str] = None,  # None | "int8" (beyond-paper)
+    ):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.api = get_model(cfg)
+        self.max_len = max_len
+        self.kv_quant = kv_quant
+        self.decode_phase = "long_decode" if long_context else "decode"
+        self.prefill_ctx = make_pctx(mesh, "prefill")
+        self.decode_ctx = make_pctx(mesh, self.decode_phase)
+        self._programs: Dict[str, PhaseProgram] = {}
+
+    # ------------------------------------------------------------ helpers --
+
+    def param_shardings(self, params_abstract):
+        if self.mesh is None:
+            return None
+        return params_shardings(params_abstract, self.cfg, self.mesh, train=False)
+
+    def _sd(self, pctx: PartitionCtx, *logical):
+        return pctx.named_sharding(*logical)
+
+    def _jit(self, fn, in_shardings=None, out_shardings=None, donate=()):
+        if self.mesh is None:
+            return jax.jit(fn, donate_argnums=donate)
+        return jax.jit(fn, in_shardings=in_shardings, out_shardings=out_shardings, donate_argnums=donate)
+
+    # ----------------------------------------------------------- programs --
+
+    def prefill_program(self, params_abstract, batch: int, seq: int, *, frames: bool = False) -> PhaseProgram:
+        key = f"prefill:{batch}x{seq}"
+        if key in self._programs:
+            return self._programs[key]
+        cfg, api, pctx = self.cfg, self.api, self.prefill_ctx
+
+        if frames:
+            def fn(params, tokens, frame_emb):
+                return api.forward_prefill(params, tokens, cfg, pctx, frames=frame_emb)
+        else:
+            def fn(params, tokens):
+                return api.forward_prefill(params, tokens, cfg, pctx)
+
+        in_sh = None
+        if self.mesh is not None:
+            tok_sh = self._sd(pctx, "batch", "seq")
+            in_sh = (self.param_shardings(params_abstract), tok_sh)
+            if frames:
+                in_sh = in_sh + (self._sd(pctx, "batch", "seq", "embed"),)
+        prog = PhaseProgram(key, self._jit(fn, in_shardings=in_sh))
+        self._programs[key] = prog
+        return prog
+
+    def prefill_split_programs(self, params_abstract, batch: int, seq: int) -> Tuple[PhaseProgram, PhaseProgram]:
+        """(body, tail): the overlap split at the last layer's attention."""
+        cfg, pctx = self.cfg, self.prefill_ctx
+        assert cfg.family == "transformer", "overlap split implemented for the transformer family"
+        from repro.models import transformer as T
+
+        def body_fn(params, tokens):
+            return T.forward_prefill(params, tokens, cfg, pctx, split_tail=True)
+
+        def tail_fn(params, x_mid):
+            return T.prefill_tail(params, x_mid, cfg, pctx)
+
+        in_body = in_tail = None
+        if self.mesh is not None:
+            psh = self.param_shardings(params_abstract)
+            in_body = (psh, self._sd(pctx, "batch", "seq"))
+            in_tail = (psh, self._sd(pctx, "batch", "seq", "embed"))
+        body = PhaseProgram(f"prefill_body:{batch}x{seq}", self._jit(body_fn, in_shardings=in_body))
+        tail = PhaseProgram(f"prefill_tail:{batch}x{seq}", self._jit(tail_fn, in_shardings=in_tail))
+        return body, tail
+
+    def relayout_program(self, batch: int, seq: int, max_len: int) -> PhaseProgram:
+        """The swap: prefill-layout KV -> decode-layout cache buffer.
+
+        Implements (i) the reshard from prefill sharding (batch x heads) to
+        decode sharding (batch x *sequence*) — the collective this program
+        pays is the TPU bitstream-load analogue; (ii) right-padding into the
+        persistent decode buffer; (iii) optional int8 KV compression
+        (beyond-paper knob, halves decode KV traffic).
+        """
+        cfg, pctx = self.cfg, self.decode_ctx
+        key = f"relayout:{batch}x{seq}->{max_len}"
+        if key in self._programs:
+            return self._programs[key]
+
+        def fn(kv):
+            def relay(x):  # prefill layout (L, B, Hkv, S, D)
+                pad = [(0, 0)] * x.ndim
+                pad[-2] = (0, max_len - x.shape[-2])
+                y = jnp.pad(x, pad)
+                # the layout swap proper: layer-major (prefill writes KV per
+                # layer) -> batch-leading decode layout (token-granular
+                # in-place appends; see attention.scatter_new_tokens)
+                y = jnp.moveaxis(y, 0, 1)
+                return pctx.shard(y, "batch", "layers", "kv_heads", "kv_seq", "head_dim")
+
+            kv = jax.tree.map(relay, kv)
+            if self.kv_quant == "int8":
+                def q(x):
+                    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0 + 1e-8
+                    return (x / s).astype(jnp.int8), s.astype(jnp.float32)
+                kv = jax.tree.map(q, kv)
+            return kv
+
+        prog = PhaseProgram(key, self._jit(fn))
+        self._programs[key] = prog
+        return prog
+
+    def decode_program(self, params_abstract, batch: int, max_len: int) -> PhaseProgram:
+        key = f"decode:{batch}x{max_len}"
+        if key in self._programs:
+            return self._programs[key]
+        cfg, api, pctx = self.cfg, self.api, self.decode_ctx
+
+        def fn(params, token, cache, lengths):
+            return api.decode_step(params, token, cache, lengths, cfg, pctx)
+
+        in_sh = None
+        if self.mesh is not None:
+            psh = self.param_shardings(params_abstract)
+            tok_sh = self._sd(pctx, "batch")
+            cache_abstract = jax.eval_shape(lambda: api.init_cache(cfg, batch, max_len))
+            cache_sh = self._cache_shardings(cache_abstract)
+            in_sh = (psh, tok_sh, cache_sh, self._sd(pctx, "batch"))
+        prog = PhaseProgram(key, self._jit(fn, in_shardings=in_sh, donate=(2,)))
+        self._programs[key] = prog
+        return prog
+
+    def _cache_shardings(self, cache_abstract):
+        """Decode-layout cache shardings: KV sequence over the model axis,
+        recurrent/SSM states over channels."""
+        pctx = self.decode_ctx
+
+        from repro.layers.sharding import sanitize_named_sharding
+
+        def rule(path, leaf):
+            ns = _raw_rule(path, leaf)
+            return sanitize_named_sharding(ns, leaf.shape) if ns is not None else None
+
+        def _raw_rule(path, leaf):
+            nd = leaf.ndim
+            p = path.lower()
+            if "mlstm" in p:  # (G, nm, B, H, dk[, dv])
+                names = [None] * nd
+                if nd >= 3:
+                    names[2] = "batch"
+                if nd >= 5:
+                    names[-1] = "state"  # matrix memory dv over tp (long ctx)
+                return self._sd(pctx, *names)
+            if "slstm" in p:  # (G, B, H, hd)
+                return self._sd(pctx, None, "batch", None, "state")
+            if nd == 5:  # (B, L, Hkv, S, D) KV — decode layout, batch-leading
+                return self._sd(pctx, "batch", "layers", "kv_heads", "kv_seq", "head_dim")
+            if "conv" in p and nd == 4:  # (L, B, w-1, d_in)
+                return self._sd(pctx, "layers", "batch", None, "state")
+            if nd == 4:  # (L, B, d_in, N) hymba ssm state
+                return self._sd(pctx, "layers", "batch", "state", None)
+            if nd == 3:  # (L, B, conv) hymba conv state etc.
+                return self._sd(pctx, "layers", "batch", None)
+            return self._sd(pctx, *([None] * nd)) if nd else None
+
+        from repro.common.tree import tree_map_with_path_names
+
+        return tree_map_with_path_names(rule, cache_abstract)
+
+
+def static_engine_decode_rules():
+    """The static-accelerator baseline (TeLLMe-style): decode runs with the
+    *prefill* configuration — no relayout, KV stays in prefill sharding, the
+    decode program is compiled with the compromise layout.  Used by the
+    fig6 benchmark to reproduce the paper's PD-Swap-vs-static comparison."""
+    return PREFILL_RULES

@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataConfig, data_iterator, make_source

@@ -1,0 +1,143 @@
+"""Analytic cost models of the Pallas kernels, derived from their BlockSpecs.
+
+The dry-run runs on a CPU host, where ``pallas_call`` cannot compile for the
+real target (Mosaic is TPU-only) and the interpret-mode inlining pollutes the
+HLO with materialized intermediates the TPU kernel never creates (f32 score
+tensors, hoisted dtype converts, loop-feed layout copies).  A Pallas kernel's
+dataflow is *fully determined* by its grid + BlockSpecs, so its HBM traffic,
+FLOPs and VMEM working set can be written down exactly.  The dry-run lowers
+the model with the attention core stubbed (``cfg.attn_impl='stub'``) and adds
+these terms — that pair (XLA-generic vs kernel-substituted) is also exactly
+the paper's static-baseline vs phase-specialized-RM comparison, measured on
+the TPU roofline.
+
+All functions return per-DEVICE costs given the per-device (post-sharding)
+shapes the caller derives from the mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelCost:
+    flops: float  # MXU flops
+    hbm_bytes: float  # HBM<->VMEM DMA traffic
+    vmem_bytes: int  # peak VMEM working set (double-buffered tiles + scratch)
+
+    def __add__(self, other: "KernelCost") -> "KernelCost":
+        return KernelCost(
+            self.flops + other.flops,
+            self.hbm_bytes + other.hbm_bytes,
+            max(self.vmem_bytes, other.vmem_bytes),
+        )
+
+
+ZERO = KernelCost(0.0, 0.0, 0)
+
+
+def prefill_attention_cost(
+    b: int, h: int, hkv: int, s: int, d: int, *, blk: int = 256, elt: int = 2,
+    causal: bool = True, window: int | None = None, skv: int | None = None,
+) -> KernelCost:
+    """Reverse-scheduled causal flash attention (kernels/prefill_attention).
+
+    Grid (b, h, nblk_q, nblk_kv) with the KV walk innermost; per (q-head,
+    q-block i) the kernel streams K/V blocks j<=i (causal): K/V HBM traffic
+    is sum_i (i+1) * blk = nblk(nblk+1)/2 * blk elements per head — each q
+    head re-streams its group's KV (VMEM cannot hold S*D at 32k).  A sliding
+    window caps the walk at ceil(window/blk)+1 blocks.  ``skv`` covers the
+    rectangular cross-attention case (q length s against skv keys).
+    """
+    skv = s if skv is None else skv
+    nblk = max(s // blk, 1)
+    nblk_kv = max(skv // blk, 1)
+    if causal and skv == s:
+        blocks_per_q = (nblk + 1) / 2  # average of i+1
+    else:
+        blocks_per_q = nblk_kv
+    if window is not None and window < skv:
+        blocks_per_q = min(blocks_per_q, window / blk + 1)
+    kv_elems_streamed = b * h * nblk * blocks_per_q * blk * d * 2  # K and V
+    q_o_elems = 2 * b * h * s * d
+    # score + PV matmuls: 2 * (blk x d x blk) each per (q-block, kv-block) pair
+    flops = b * h * nblk * blocks_per_q * (2 * blk * blk * d) * 2
+    vmem = (
+        2 * blk * d * elt  # q tile
+        + 2 * (2 * blk * d * elt)  # double-buffered k, v streams
+        + 2 * (blk * 128 * 4)  # m, l scratch
+        + blk * d * 4  # acc
+        + blk * blk * 4  # score tile
+    )
+    return KernelCost(flops, (kv_elems_streamed + q_o_elems) * elt, vmem)
+
+
+def decode_attention_cost(
+    b: int, h: int, hkv: int, s: int, d: int, *, bk: int = 512, elt: int = 2,
+    window: int | None = None,
+) -> KernelCost:
+    """KV-streaming flash-decode (kernels/decode_attention).
+
+    Grid (b, hkv, s/bk): K and V are read ONCE per kv-head group (the
+    2xK+2xV port-remap analogue — all G query heads of a group ride one KV
+    stream); Q/O/stats are O(b*h*d).  A sliding window skips dead blocks.
+    """
+    eff_s = min(window, s) if window is not None else s
+    kv_bytes = b * hkv * eff_s * d * 2 * elt
+    qo_bytes = (2 * b * h * d + 2 * b * h * 128) * 4
+    g = max(h // hkv, 1)
+    flops = b * hkv * eff_s * (2 * g * d) * 2  # QK^T + PV
+    vmem = (
+        2 * g * d * elt  # pinned q group
+        + 2 * (2 * bk * d * elt)  # double-buffered k and v streams (2 DMAs)
+        + 2 * (g * 128 * 4)  # m, l
+        + g * d * 4  # acc
+        + g * bk * 4  # score tile
+    )
+    return KernelCost(flops, kv_bytes + qo_bytes, vmem)
+
+
+def mlstm_chunk_cost(b: int, h: int, s: int, hd: int, *, chunk: int = 64, elt: int = 2) -> KernelCost:
+    """Chunkwise-parallel mLSTM kernel (the xlstm prefill RM; [§Perf X2]).
+
+    Flash-linear-attention dataflow: grid (b, h, s/chunk) sequential over
+    chunks; q/k/v chunk tiles stream HBM->VMEM, the (hd, hd) matrix memory
+    and (hd,) normalizer stay VMEM-resident across the walk, h streams out.
+    Per chunk: qk (c x c x hd), inner-weighted PV (c x c x hd), state update
+    (c x hd x hd) and query-state (c x hd x hd) contractions."""
+    nc = max(s // chunk, 1)
+    io = 4 * b * h * s * hd * elt  # q, k, v in; h out
+    flops = b * h * nc * (4 * chunk * chunk * hd + 4 * chunk * hd * hd)
+    vmem = (
+        hd * hd * 4 + 2 * hd * 4  # resident state c, n (+m)
+        + 3 * 2 * chunk * hd * elt  # double-buffered q/k/v tiles
+        + chunk * chunk * 4  # decay/score tile
+        + chunk * hd * 4  # h accumulator
+    )
+    return KernelCost(flops, float(io), vmem)
+
+
+def slstm_scan_cost(b: int, s: int, d: int, h: int, *, elt: int = 2) -> KernelCost:
+    """Sequential sLSTM kernel: reads the (B,S,4d) pre-activations once,
+    carries the per-head recurrent state in VMEM, writes (B,S,d) h out.
+    Recurrence flops: R h (hd x 4hd per head) + gate elementwise."""
+    hd = d // h
+    io = b * s * (4 * d + d) * elt
+    flops = b * s * h * (2 * hd * 4 * hd) + 10.0 * b * s * d
+    vmem = h * hd * 4 * 4 + 4 * d * elt * 2 + h * hd * 4 * hd * elt
+    return KernelCost(flops, float(io), vmem)
+
+
+def tlmm_cost(m: int, k: int, n: int, *, bm: int = 128, bn: int = 128, bk: int = 512) -> KernelCost:
+    """Ternary table-lookup matmul (kernels/tlmm): x int8 (m,k) @ w 2-bit
+    (k,n).  Weights stream at 0.25 B/weight; x re-streams once per N tile
+    (grid (m/bm, n/bn, k/bk), K innermost)."""
+    n_tiles_n = max(n // bn, 1)
+    x_bytes = m * k * n_tiles_n  # int8, re-read per n tile
+    w_bytes = (k // 4) * n  # packed 2-bit, read once per m sweep
+    m_tiles = max(m // bm, 1)
+    w_bytes *= m_tiles  # re-read per m tile
+    out_bytes = m * n * 2 + m * 4
+    flops = 2.0 * m * k * n
+    vmem = 2 * (bm * bk) + 2 * (bk // 4 * bn) + 4 * bm * bn + bm * bn * 2
+    return KernelCost(flops, float(x_bytes + w_bytes + out_bytes), vmem)

@@ -1,0 +1,150 @@
+"""Pallas TPU kernel: bandwidth-optimized decode attention (the decode RM).
+
+Paper (C3 + §3.2.3): in decode, L=1 — no Q reuse exists; attention degenerates
+to q_t · K^T -> softmax -> · V streaming the whole KV cache.  The FPGA design
+re-maps the four DDR HP ports to 2xK + 2xV (instead of Q/K/V/O), streams the
+one Q token into an on-chip buffer before the walk, and holds the output
+token locally until the KV transfer finishes.
+
+TPU mapping (DESIGN.md §2):
+  * Q tile (G, D) for one KV head's query group is pinned in VMEM for the
+    whole kernel (BlockSpec index constant in the KV-walk dim) — the "stream
+    Q into the on-chip buffer first" step.
+  * K and V have *separate* block specs walking the cache, so Mosaic
+    double-buffers two independent HBM->VMEM DMA streams — the 2+2 port
+    remap analogue; the HBM roofline term is ~ bytes(KV)/bw.
+  * The output (G, D) is accumulated in VMEM scratch and written exactly
+    once, after the last KV block ("write back after KV transfers complete").
+  * GQA: the grid iterates KV heads; all G = H/Hkv query heads of a group
+    ride the same KV stream (KV bytes read once per group, not per head).
+
+Variable sequence lengths (continuous batching) come in via scalar prefetch:
+``lengths[b]`` masks tail positions and skips fully-inactive KV blocks.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    start_ref,  # scalar-prefetch: (B,) int32 — window start (0 for full attn)
+    len_ref,  # scalar-prefetch: (B,) int32
+    q_ref,  # (1, 1, G, D)
+    k_ref,  # (1, 1, bk, D)
+    v_ref,  # (1, 1, bk, D)
+    out_ref,  # (1, 1, G, D)
+    out_l_ref,  # (1, 1, G, 128) — softmax denominator (stats output)
+    out_m_ref,  # (1, 1, G, 128) — running max (stats output)
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    bk: int,
+    n_steps: int,
+    sm_scale: float,
+):
+    b = pl.program_id(0)
+    t = pl.program_id(2)
+    length = len_ref[b]
+    start = start_ref[b]
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Skip KV blocks entirely outside [start, length) — sliding windows skip
+    # the dead prefix, full attention (start=0) streams everything live.
+    @pl.when(jnp.logical_and(t * bk < length, (t + 1) * bk > start))
+    def _step():
+        q = q_ref[...].astype(jnp.float32)[0, 0]  # (G, D)
+        k = k_ref[...].astype(jnp.float32)[0, 0]  # (bk, D)
+        v = v_ref[...].astype(jnp.float32)[0, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * sm_scale  # (G, bk)
+        pos = t * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        s = jnp.where(jnp.logical_and(pos >= start, pos < length), s, NEG_INF)
+
+        m_prev = m_ref[...][:, :1]
+        l_prev = l_ref[...][:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = jnp.broadcast_to(alpha * l_prev + jnp.sum(p, axis=1, keepdims=True), l_ref.shape)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ()))
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(t == n_steps - 1)  # single writeback after the KV walk
+    def _finalize():
+        l = l_ref[...][:, :1]
+        out_ref[...] = (acc_ref[...] / jnp.maximum(l, 1e-30))[None, None].astype(out_ref.dtype)
+        out_l_ref[...] = l_ref[...][None, None]
+        out_m_ref[...] = m_ref[...][None, None]
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "sm_scale", "interpret"))
+def decode_attention_pallas(
+    q: jax.Array,  # (B, Hkv, G, D) — query heads grouped by KV head
+    k: jax.Array,  # (B, Hkv, S, D)
+    v: jax.Array,  # (B, Hkv, S, D)
+    lengths: jax.Array,  # (B,) int32 — per-sequence valid cache length
+    starts: jax.Array | None = None,  # (B,) int32 — window start (default 0)
+    *,
+    bk: int = 512,
+    sm_scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hkv, g, d = q.shape
+    s = k.shape[2]
+    assert s % bk == 0, (s, bk)
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    n_steps = s // bk
+
+    if starts is None:
+        starts = jnp.zeros_like(lengths)
+    kernel = functools.partial(_decode_kernel, bk=bk, n_steps=n_steps, sm_scale=sm_scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, n_steps),
+        # NB: with scalar prefetch, index maps receive the scalar refs as
+        # trailing arguments (absorbed by *_).
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, ti, *_: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bi, hi, ti, *_: (bi, hi, ti, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bi, hi, ti, *_: (bi, hi, ti, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, ti, *_: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, g, 128), lambda bi, hi, ti, *_: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, g, 128), lambda bi, hi, ti, *_: (bi, hi, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32),  # normalized out
+            jax.ShapeDtypeStruct((b, hkv, g, 128), jnp.float32),  # l
+            jax.ShapeDtypeStruct((b, hkv, g, 128), jnp.float32),  # m
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(starts.astype(jnp.int32), lengths.astype(jnp.int32), q, k, v)

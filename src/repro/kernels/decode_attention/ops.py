@@ -1,0 +1,102 @@
+"""Jitted wrapper for the decode attention kernel.
+
+Accepts flat (B, H, D) queries, regroups to (B, Hkv, G, D), pads the cache
+length to the KV block, and dispatches kernel vs oracle.
+
+``_decode_attention_streaming`` is the compiled jnp path (kernel-shaped
+dataflow): K/V stay in their storage dtype and the dots accumulate in f32
+via ``preferred_element_type`` — the MXU semantics of the Pallas kernel.
+The f32-upcast ``decode_attention_reference`` stays the max-precision
+oracle for the kernel tests.  [§Perf iteration D1: the upcast version made
+XLA hoist a full-cache f32 convert out of the layer scan — a whole-cache
+HBM copy (2x KV bytes write + read) and a 2x peak-memory spike.]
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_reference
+
+
+def _decode_attention_streaming(
+    q: jax.Array,  # (B, Hkv, G, D)
+    k: jax.Array,  # (B, Hkv, S, D) — storage dtype (bf16/f32), never upcast
+    v: jax.Array,
+    lengths: jax.Array,
+    starts: Optional[jax.Array],
+    *,
+    sm_scale: Optional[float] = None,
+    return_stats: bool = False,
+):
+    b, hkv, g, d = q.shape
+    s = k.shape[2]
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    if starts is None:
+        starts = jnp.zeros_like(lengths)
+    scores = jnp.einsum(
+        "bhgd,bhsd->bhgs", q.astype(k.dtype), k, preferred_element_type=jnp.float32
+    ) * sm_scale
+    pos = jnp.arange(s)[None, :]
+    mask = (pos < lengths[:, None]) & (pos >= starts[:, None])  # (B, S)
+    mask4 = mask[:, None, None, :]
+    scores = jnp.where(mask4, scores, -1e30)
+    m = jnp.max(scores, axis=-1, keepdims=True)  # (B,Hkv,G,1); -1e30 if empty
+    p = jnp.where(mask4, jnp.exp(scores - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum(
+        "bhgs,bhsd->bhgd", p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    ) / jnp.maximum(l, 1e-30)
+    if return_stats:
+        return out, l, m
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, H, D)
+    k: jax.Array,  # (B, Hkv, S, D)
+    v: jax.Array,
+    lengths: jax.Array,  # (B,) int32
+    starts: Optional[jax.Array] = None,  # (B,) int32 — sliding-window start
+    *,
+    bk: int = 512,
+    use_kernel: bool = False,
+    interpret: bool = True,
+    sm_scale: Optional[float] = None,
+    return_stats: bool = False,
+):
+    """Attention of one query token per sequence over a masked KV cache.
+
+    ``return_stats=True`` additionally returns the online-softmax stats
+    (l, m) of shape (B, H, 1) — in f32, with the output UN-astype'd — so the
+    caller can merge further blocks (e.g. the freshly-projected token)."""
+    b, h, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, d)
+    if not use_kernel:
+        if return_stats:
+            out, l, m = _decode_attention_streaming(
+                qg, k, v, lengths, starts, sm_scale=sm_scale, return_stats=True
+            )
+            return out.reshape(b, h, d), l.reshape(b, h, 1), m.reshape(b, h, 1)
+        out = _decode_attention_streaming(qg, k, v, lengths, starts, sm_scale=sm_scale)
+        return out.reshape(b, h, d)
+    bk = min(bk, s)
+    pad = (-s) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    out, l, m = decode_attention_pallas(
+        qg, k, v, lengths.astype(jnp.int32), None if starts is None else starts.astype(jnp.int32),
+        bk=bk, interpret=interpret, sm_scale=sm_scale
+    )
+    if return_stats:
+        return (out.reshape(b, h, d),
+                l[:, :, :, :1].reshape(b, h, 1), m[:, :, :, :1].reshape(b, h, 1))
+    return out.reshape(b, h, d).astype(q.dtype)

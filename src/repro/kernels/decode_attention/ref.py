@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_reference(
+    q: jax.Array,  # (B, Hkv, G, D)
+    k: jax.Array,  # (B, Hkv, S, D)
+    v: jax.Array,
+    lengths: jax.Array,  # (B,) int32
+    starts: Optional[jax.Array] = None,  # (B,) int32 window start
+    *,
+    sm_scale: Optional[float] = None,
+) -> jax.Array:
+    b, hkv, g, d = q.shape
+    s = k.shape[2]
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    if starts is None:
+        starts = jnp.zeros_like(lengths)
+    scores = jnp.einsum("bhgd,bhsd->bhgs", q.astype(jnp.float32), k.astype(jnp.float32)) * sm_scale
+    pos = jnp.arange(s)[None, :]
+    mask = (pos < lengths[:, None]) & (pos >= starts[:, None])  # (B, S)
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,44 @@
+"""Jitted wrapper for the prefill attention kernel (padding + dispatch)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.prefill_attention.kernel import prefill_attention_pallas
+from repro.kernels.prefill_attention.ref import prefill_attention_reference
+
+
+def prefill_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    blk: int = 256,
+    schedule: str = "reverse",
+    use_kernel: bool = False,
+    interpret: bool = True,
+    window: Optional[int] = None,
+    sm_scale: Optional[float] = None,
+) -> jax.Array:
+    """Causal self-attention over a full prompt, (B,H,S,D) layout.
+
+    use_kernel=False runs the jnp oracle (CPU-fast path used inside jitted
+    model code); use_kernel=True runs the Pallas prefill RM (TPU target,
+    interpret=True on CPU).  Sliding windows fall back to the oracle — the
+    hymba SWA layers are never the prefill bottleneck.
+    """
+    if not use_kernel or window is not None:
+        return prefill_attention_reference(q, k, v, window=window, sm_scale=sm_scale)
+    b, h, s, d = q.shape
+    blk = min(blk, s)
+    pad = (-s) % blk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    out = prefill_attention_pallas(
+        q, k, v, blk=blk, schedule=schedule, interpret=interpret, sm_scale=sm_scale
+    )
+    return out[:, :, :s] if pad else out

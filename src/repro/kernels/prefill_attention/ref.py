@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for causal (optionally windowed) prefill attention."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def prefill_attention_reference(
+    q: jax.Array,  # (B, H, S, D)
+    k: jax.Array,  # (B, Hkv, S, D)
+    v: jax.Array,
+    *,
+    sm_scale: Optional[float] = None,
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jax.Array:
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)) * sm_scale
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= qi >= ki
+    if window is not None:
+        mask &= qi - ki < window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.tlmm.ops import tlmm_matmul
+from repro.kernels.tlmm.kernel import tlmm_pallas
+from repro.kernels.tlmm.ref import tlmm_reference, tlmm_lut_reference

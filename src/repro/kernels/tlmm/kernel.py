@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: ternary table-lookup matmul (TLMM), adapted to the MXU.
+
+Paper (C2, §3.2.2): ternary weights live on-chip as base-3 group indices; a
+per-activation-group lookup table of precomputed add/sub partial sums turns
+matmul into index->lookup->accumulate, eliminating DDR weight streaming.
+
+TPU adaptation (DESIGN.md §2): the *memory-system* property is what matters —
+1.58-bit weights resident in fast memory so the linear layers stop being
+weight-bandwidth-bound.  Here the packed 2-bit weights (uint8, 4 weights/byte,
+see repro.quant.ternary) are streamed HBM->VMEM at 0.25 B/weight, decoded to
+int8 *inside* the kernel, and multiplied on the MXU (int8 x int8 -> int32),
+which is the roofline-correct compute engine on TPU — a LUT-gather
+realization would run on the VPU at ~1/50th the throughput.  The faithful
+LUT algorithm is kept as an oracle in ref.py (tlmm_lut_reference) and the
+property tests assert all three agree exactly in integer arithmetic.
+
+VMEM tiling: grid (M/bm, N/bn, K/bk); per step the kernel holds
+  x tile   (bm, bk)   int8
+  w tile   (bk/4, bn) uint8   <- 4x smaller than an int8 weight tile
+  acc      (bm, bn)   int32 scratch (persistent across the K dimension)
+K is the innermost, sequential ("arbitrary") grid dim; M/N are parallel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _decode_ternary_tile(wp: jax.Array) -> jax.Array:
+    """uint8 (bk/4, bn) -> int8 (bk, bn) inside the kernel.
+
+    Value k = 4j + i sits in bits [2i, 2i+2) of byte j (codes 0/+1/-1 =
+    0b00/0b01/0b10).  The stack+reshape is a sublane interleave; an
+    alternative that avoids it is four strided dots
+    acc += sum_i dot(x[:, i::4], part_i) — measured equivalent in interpret
+    mode, kept simple here.
+    """
+    parts = []
+    for i in range(4):
+        bits = (wp >> (2 * i)) & 0x3
+        val = jnp.where(bits == 1, jnp.int8(1), jnp.where(bits == 2, jnp.int8(-1), jnp.int8(0)))
+        parts.append(val)
+    kq, bn = wp.shape
+    return jnp.stack(parts, axis=1).reshape(kq * 4, bn)
+
+
+def _tlmm_kernel(x_ref, wp_ref, scale_ref, out_ref, acc_ref, *, n_k_steps: int, out_dtype):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]  # (bm, bk) int8
+    w = _decode_ternary_tile(wp_ref[...])  # (bk, bn) int8
+    acc_ref[...] += jax.lax.dot_general(
+        x,
+        w,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k_step == n_k_steps - 1)
+    def _finalize():
+        # scale_ref: (bm, 1) f32 = act_scale * weight_scale (folded in ops.py)
+        out_ref[...] = (acc_ref[...].astype(jnp.float32) * scale_ref[...]).astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "out_dtype", "interpret"),
+)
+def tlmm_pallas(
+    x_q: jax.Array,  # (M, K) int8
+    w_packed: jax.Array,  # (K//4, N) uint8
+    scale: jax.Array,  # (M, 1) f32 — combined act*weight scale
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    out_dtype=jnp.bfloat16,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = x_q.shape
+    kq, n = w_packed.shape
+    assert kq * 4 == k, (k, kq)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    assert bk % 4 == 0
+    n_k_steps = k // bk
+
+    grid = (m // bm, n // bn, n_k_steps)
+    kernel = functools.partial(_tlmm_kernel, n_k_steps=n_k_steps, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk // 4, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, s: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x_q, w_packed, scale)

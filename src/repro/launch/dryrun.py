@@ -1,0 +1,262 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines, before ANY other import: jax locks the host
+#   platform device count at first init, and the production meshes below need
+#   512 placeholder devices (2 pods x 16 x 16).  Only the dry-run does this.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver builds the real phase program (train_step for
+train shapes, forward_prefill for prefill shapes, decode_step for decode
+shapes), lowers it against ShapeDtypeStruct inputs (no allocation), compiles
+it for the production mesh, and records:
+
+  * memory_analysis()   — proves the cell fits per-device HBM
+  * cost_analysis()     — FLOPs / bytes for the §Roofline terms
+  * collective bytes    — parsed from the optimized HLO
+  * the three roofline terms + dominant bottleneck + MODEL_FLOPS ratio
+
+Results go to results/dryrun/<arch>__<shape>__<mesh>.json (incremental:
+existing cells are skipped unless --force).
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-135m --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, get_config
+from repro.configs.base import SHAPES, ModelConfig, ShapeCell, applicable_shapes
+from repro.core.kernel_substitution import kernel_costs_for_cell
+from repro.core.phase_engine import PhaseEngine
+from repro.core.roofline import (
+    collective_bytes_from_hlo,
+    cost_analysis_dict,
+    memory_analysis_bytes,
+    roofline_from_artifacts,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding_rules import eval_shape_params
+from repro.models import get_model
+from repro.train.trainer import TrainConfig, jit_train_step
+from repro.optim.adamw import adamw_init
+
+
+def input_specs(arch: str, shape: str, *, multi_pod: bool = False) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    b, s = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    specs: dict = {}
+    if cell.kind == "train":
+        specs["batch"] = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "targets": jax.ShapeDtypeStruct((b, s), i32),
+            "mask": jax.ShapeDtypeStruct((b, s), jnp.float32),
+        }
+        if cfg.family == "encdec":
+            specs["batch"]["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        specs["step"] = jax.ShapeDtypeStruct((), i32)
+    elif cell.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    else:  # decode: one new token against a seq_len-deep cache
+        specs["token"] = jax.ShapeDtypeStruct((b,), i32)
+        specs["lengths"] = jax.ShapeDtypeStruct((b,), i32)
+        api = get_model(cfg)
+        if api.init_cache is not None and cfg.family != "xlstm":
+            specs["cache"] = jax.eval_shape(lambda: api.init_cache(cfg, b, s))
+        else:
+            specs["cache"] = jax.eval_shape(lambda: api.init_cache(cfg, b))
+    return specs
+
+
+def _model_flops(cfg: ModelConfig, cell: ShapeCell) -> float:
+    n = cfg.active_param_count()
+    tokens = cell.global_batch * cell.seq_len
+    if cell.kind == "train":
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        return 2.0 * n * tokens
+    return 2.0 * n * cell.global_batch  # decode: one token per sequence
+
+
+def _train_microbatches(cfg: ModelConfig) -> int:
+    return 2 if cfg.d_model >= 8192 else 1
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: Path, *, force: bool = False) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    out_path = out_dir / f"{arch}__{shape}__{mesh_name}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    if cell.name == "long_500k" and not cfg.sub_quadratic:
+        rec = {
+            "arch": arch, "shape": shape, "mesh": mesh_name, "status": "skipped",
+            "reason": "pure full-attention arch: 500k dense decode is the quadratic/KV wall "
+                      "this cell probes; see DESIGN.md §4",
+        }
+        out_path.write_text(json.dumps(rec, indent=2))
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    specs = input_specs(arch, shape, multi_pod=multi_pod)
+    params_abs = eval_shape_params(cfg, dtype=jnp.bfloat16)
+    api = get_model(cfg)
+
+    def lower_variant(variant_cfg: ModelConfig):
+        if cell.kind == "train":
+            tcfg = TrainConfig(microbatches=_train_microbatches(variant_cfg))
+            step_fn = jit_train_step(variant_cfg, tcfg, mesh, params_abs, donate=True)
+            opt_abs = jax.eval_shape(adamw_init, params_abs)
+            return step_fn.lower(params_abs, opt_abs, specs["batch"], specs["step"])
+        long_ctx = cell.name == "long_500k"
+        engine = PhaseEngine(variant_cfg, mesh, max_len=cell.seq_len, long_context=long_ctx)
+        if cell.kind == "prefill":
+            prog = engine.prefill_program(params_abs, cell.global_batch, cell.seq_len,
+                                          frames=variant_cfg.family == "encdec")
+            args = (params_abs, specs["tokens"]) + ((specs["frames"],) if variant_cfg.family == "encdec" else ())
+            return prog.fn.lower(*args)
+        prog = engine.decode_program(params_abs, cell.global_batch, cell.seq_len)
+        return prog.fn.lower(params_abs, specs["token"], specs["cache"], specs["lengths"])
+
+    def analyze(variant_cfg, *, kernel_sub: bool):
+        lowered = lower_variant(variant_cfg)
+        compiled = lowered.compile()
+        cost = cost_analysis_dict(compiled)
+        peak_mem = memory_analysis_bytes(compiled)
+        hlo = compiled.as_text()
+        kc = None
+        if kernel_sub:
+            tp = mesh.shape["model"]
+            dp = chips // tp
+            kc = kernel_costs_for_cell(cfg, cell, dp=dp, tp=tp)
+        report = roofline_from_artifacts(
+            f"{arch}/{shape}/{mesh_name}", cost, hlo, chips,
+            model_flops=_model_flops(cfg, cell), peak_memory=peak_mem,
+            kernel_cost=kc,
+        )
+        try:
+            ma = compiled.memory_analysis()
+            mem_str = str(ma)
+            mem_fields = {
+                "args": float(ma.argument_size_in_bytes),
+                "temp": float(ma.temp_size_in_bytes),
+                "output": float(ma.output_size_in_bytes),
+                "alias": float(ma.alias_size_in_bytes),
+            }
+        except Exception as e:  # pragma: no cover
+            mem_str, mem_fields = f"unavailable: {e}", {}
+        return report, cost, peak_mem, mem_str, len(hlo), mem_fields
+
+    # Variant 1 — generic XLA attention: the static-baseline program.
+    report_xla, cost, peak_mem, mem_str, hlo_bytes, mem_fields = analyze(cfg, kernel_sub=False)
+    t_xla = time.time() - t0
+
+    # Variant 2 — kernel-substituted (PD-Swap phase RM / flash-train kernel).
+    report_kernel = None
+    mem_fields_stub = {}
+    if not (cfg.family == "xlstm" and cell.kind == "decode"):
+        stub_cfg = dataclasses.replace(cfg, attn_impl="stub")
+        report_kernel, _, peak_stub, _, _, mem_fields_stub = analyze(stub_cfg, kernel_sub=True)
+
+    headline = report_kernel or report_xla
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_name,
+        "status": "ok",
+        "chips": chips,
+        "kind": cell.kind,
+        "lower_compile_s": round(t_xla, 2),
+        "compile_s": round(t_xla, 2),
+        "memory_analysis": mem_str,
+        "peak_memory_per_device": peak_mem,
+        "cost_analysis": {k: float(v) for k, v in cost.items() if isinstance(v, (int, float))},
+        "xla_vs_loop_aware": report_xla.extras.get("xla_cost_analysis", {}),
+        "collective_bytes": headline.collective_breakdown,
+        # headline roofline: kernel-substituted (PD-Swap) when applicable
+        "roofline": headline.row(),
+        # the static-generic program's roofline (paper's baseline comparison)
+        "roofline_xla_generic": report_xla.row(),
+        "kernel_substituted": report_kernel is not None,
+        "hlo_bytes": hlo_bytes,
+    }
+    rec["memory_fields"] = mem_fields
+    if report_kernel is not None:
+        rec["peak_memory_stub_per_device"] = peak_stub
+        rec["kernel_vmem_bytes"] = report_kernel.extras.get("kernel_vmem_bytes")
+        rec["memory_fields_stub"] = mem_fields_stub
+        # TPU-projected HBM footprint: sharded args (params + cache) + the
+        # kernel's VMEM-resident working set; the CPU compile's temp buffers
+        # hold bf16-dot upcast copies that do not exist on TPU.
+        rec["hbm_footprint_projected"] = (
+            mem_fields_stub.get("args", 0.0)
+            + float(report_kernel.extras.get("kernel_vmem_bytes") or 0)
+        )
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", choices=ALL_ARCHS)
+    p.add_argument("--shape", choices=list(SHAPES))
+    p.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    p.add_argument("--all", action="store_true", help="run the full assigned matrix")
+    p.add_argument("--force", action="store_true")
+    p.add_argument("--out", default="results/dryrun")
+    args = p.parse_args()
+
+    out_dir = Path(args.out)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    cells = []
+    if args.all:
+        for arch in ASSIGNED_ARCHS:
+            for cell in applicable_shapes(get_config(arch)):
+                cells.append((arch, cell.name))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch} x {shape} x {'multi' if mp else 'single'}"
+            try:
+                rec = run_cell(arch, shape, mp, out_dir, force=args.force)
+                if rec["status"] == "ok":
+                    r = rec["roofline"]
+                    print(f"[ok]   {tag}: dominant={r['dominant']} "
+                          f"t=({r['t_compute']:.2e},{r['t_memory']:.2e},{r['t_collective']:.2e})s "
+                          f"compile={rec['compile_s']}s")
+                else:
+                    print(f"[skip] {tag}: {rec['reason']}")
+            except Exception as e:
+                failures.append((tag, repr(e)))
+                print(f"[FAIL] {tag}: {e}")
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run cells failed: {[f[0] for f in failures]}")
+    print("dry-run complete.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""Cluster training entrypoint with the fault-tolerance loop.
+
+    python -m repro.launch.train --arch smollm-135m --steps 500 \
+        --ckpt-dir /tmp/ckpt --mesh host
+
+Fault-tolerance design (DESIGN.md §3):
+  * async checkpoint every ``--ckpt-every`` steps (snapshot-to-host is
+    synchronous, the write happens on a background thread — the step loop
+    never stalls on storage);
+  * crash-safe checkpoint format (tmp dir + atomic rename);
+  * restart: ``--restore`` resumes from the latest complete checkpoint —
+    params/optimizer are ``device_put`` against the CURRENT mesh, so a job
+    can come back on a different device count (elastic shrink/grow);
+  * the data pipeline is a pure function of (seed, step): restart-at-step-N
+    is exact with zero bookkeeping;
+  * in-process retry: a step that dies with a transient error (preemption
+    signal, DMA failure) triggers restore-from-last-checkpoint and replay —
+    the same loop a cluster scheduler runs across processes;
+  * straggler mitigation: synchronous SPMD + re-mesh on restore is the
+    framework's answer at this scale (per-step hedging cannot be expressed
+    inside one XLA program; see DESIGN.md).
+
+On the multi-host cluster this same file is launched per host with
+``jax.distributed.initialize`` (env-driven); here it runs single-process.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import ALL_ARCHS, get_config, reduced_config
+from repro.data.pipeline import DataConfig, make_source
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.sharding_rules import params_shardings
+from repro.optim.adamw import AdamWState, adamw_init
+from repro.train.trainer import TrainConfig, init_train_state, jit_train_step
+
+
+def build_mesh(kind: str):
+    if kind == "none":
+        return None
+    if kind == "host":
+        return make_host_mesh()
+    return make_production_mesh(multi_pod=(kind == "multi"))
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", choices=ALL_ARCHS, default="smollm-135m")
+    p.add_argument("--reduced", action="store_true", help="reduced same-family config (CPU)")
+    p.add_argument("--steps", type=int, default=100)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=256)
+    p.add_argument("--lr", type=float, default=3e-4)
+    p.add_argument("--schedule", default="cosine", choices=["cosine", "wsd"])
+    p.add_argument("--microbatches", type=int, default=1)
+    p.add_argument("--mesh", default="none", choices=["none", "host", "single", "multi"])
+    p.add_argument("--ckpt-dir", default=None)
+    p.add_argument("--ckpt-every", type=int, default=50)
+    p.add_argument("--restore", action="store_true")
+    p.add_argument("--max-retries", type=int, default=2)
+    p.add_argument("--log-every", type=int, default=10)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    tcfg = TrainConfig(lr=args.lr, schedule=args.schedule, warmup=max(args.steps // 20, 5),
+                       total_steps=args.steps, microbatches=args.microbatches)
+    mesh = build_mesh(args.mesh)
+    dcfg = DataConfig(batch=args.batch, seq_len=args.seq, vocab_size=cfg.vocab_size, seed=args.seed)
+    source = make_source(dcfg)
+
+    params, opt = init_train_state(cfg, jax.random.PRNGKey(args.seed), mesh, dtype=jnp.float32)
+    step_fn = jit_train_step(cfg, tcfg, mesh, jax.eval_shape(lambda: params), donate=True)
+
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    if mgr and args.restore and mgr.latest_step() is not None:
+        psh = params_shardings(params, cfg, mesh, train=True) if mesh is not None else None
+        osh = AdamWState(step=None, mu=psh, nu=psh) if psh is not None else None
+        (params, opt), start = mgr.restore((params, opt), shardings=(psh, osh) if psh else None)
+        print(f"[restore] resumed from step {start} (mesh={args.mesh})")
+
+    def checkpoint(step, blocking=False):
+        if not mgr:
+            return
+        mgr.save_async(step, (params, opt))
+        if blocking:
+            mgr.wait()
+
+    step = start
+    retries = 0
+    t0 = time.time()
+    while step < args.steps:
+        try:
+            batch = {k: jnp.asarray(v) for k, v in source.batch(step).items()}
+            params, opt, metrics = step_fn(params, opt, batch, jnp.int32(step))
+            if step % args.log_every == 0:
+                loss = float(metrics["loss"])
+                tput = dcfg.batch * dcfg.seq_len * max(step - start, 1) / (time.time() - t0)
+                print(f"step {step:5d}  loss {loss:.4f}  lr {float(metrics['lr']):.2e}  "
+                      f"{tput:,.0f} tok/s")
+            step += 1
+            if mgr and step % args.ckpt_every == 0:
+                checkpoint(step)
+        except KeyboardInterrupt:
+            raise
+        except Exception as e:  # transient failure -> restore & replay
+            retries += 1
+            print(f"[fault] step {step} failed ({e!r}); retry {retries}/{args.max_retries}")
+            if retries > args.max_retries or mgr is None:
+                raise
+            mgr.wait()
+            (params, opt), step = mgr.restore((params, opt))
+            print(f"[fault] restored step {step}, replaying")
+
+    if mgr:
+        checkpoint(step, blocking=True)
+        print(f"[done] final checkpoint at step {step} -> {mgr.dir}")
+    final_loss = float(metrics["loss"]) if step > start else float("nan")
+    print(f"[done] {step - start} steps in {time.time()-t0:.1f}s, final loss {final_loss:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,307 @@
+"""Attention layer: the *dynamic region* of PD-Swap.
+
+One parameter set, two phase-specialized execution paths (the two RMs):
+
+* ``attention_prefill``  — token-parallel blocked attention (compute-bound
+  engine).  Dispatches to the Pallas reverse-scheduled flash kernel
+  (``cfg.use_pallas``) or to a memory-bounded chunked-scan jnp path whose
+  peak live set is O(S·chunk) instead of O(S²) — required for the 32k/500k
+  dry-run cells.
+* ``attention_decode``   — single-token KV-cache-streaming attention
+  (bandwidth-bound engine), Pallas flash-decode kernel or jnp oracle, with
+  per-sequence lengths for continuous batching and ring-buffer caches for
+  sliding-window layers.
+
+Projections (Q/K/V/O) are TLMM/dense linears — the paper's *static region* —
+and are shared verbatim by both phases.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.prefill_attention.ops import prefill_attention
+from repro.layers.linear import linear_apply, linear_init
+from repro.layers.rotary import apply_rope
+from repro.layers.sharding import PartitionCtx
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, Hkv, Smax, D)
+    v: jax.Array  # (B, Hkv, Smax, D)
+
+
+def attention_init(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> dict:
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": linear_init(k1, d, h * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": linear_init(k2, d, hkv * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": linear_init(k3, d, hkv * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": linear_init(k4, h * hd, d, dtype=dtype, scale=1.0 / (h * hd) ** 0.5),
+    }
+
+
+def _project_qkv(params, x, cfg: ModelConfig, positions, *, training, rope=True):
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    kw = dict(quant=cfg.quant, training=training, use_pallas=cfg.use_pallas)
+    q = linear_apply(params["wq"], x, **kw).reshape(b, s, h, hd)
+    k = linear_apply(params["wk"], x, **kw).reshape(b, s, hkv, hd)
+    v = linear_apply(params["wv"], x, **kw).reshape(b, s, hkv, hd)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _chunked_attention(
+    q: jax.Array,  # (B, H, Sq, D)
+    k: jax.Array,  # (B, Hkv, Skv, D)
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: Optional[int],
+    chunk: int = 512,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Exact attention with O(S·chunk) live memory: scan over query chunks.
+
+    GQA is handled grouped — KV is never expanded to H heads (that expansion
+    is the hidden memory bug of naive GQA at 32k).
+    """
+    b, h, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = h // hkv
+    sm = 1.0 / math.sqrt(d)
+    chunk = min(chunk, sq)
+    pad = (-sq) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nc = (sq + pad) // chunk
+    qg = q.reshape(b, hkv, g, nc, chunk, d)
+    qg = jnp.moveaxis(qg, 3, 0)  # (nc, B, Hkv, G, chunk, D)
+    kpos = jnp.arange(skv)
+
+    def body(_, args):
+        ci, qc = args  # qc: (B, Hkv, G, chunk, D)
+        qpos = q_offset + ci * chunk + jnp.arange(chunk)
+        # bf16 operands + f32 accumulation (preferred_element_type) — the
+        # MXU semantics; never materialize f32 copies of K/V [§Perf T1]
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qc.astype(k.dtype), k,
+                       preferred_element_type=jnp.float32) * sm
+        mask = jnp.ones((chunk, skv), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            mask &= qpos[:, None] - kpos[None, :] < window
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        return None, o.astype(q.dtype)
+
+    # checkpoint: without it, backward saves every chunk's (.., chunk, Skv)
+    # score tensor — the full S^2 matrix in aggregate.
+    body = jax.checkpoint(body)
+    _, out = jax.lax.scan(body, None, (jnp.arange(nc), qg))
+    out = jnp.moveaxis(out, 0, 3).reshape(b, hkv, g, sq + pad, d)
+    out = out.reshape(b, h, sq + pad, d)
+    return out[:, :, :sq]
+
+
+def attention_prefill(
+    params: dict,
+    x: jax.Array,  # (B, S, d)
+    positions: jax.Array,  # (B, S)
+    cfg: ModelConfig,
+    pctx: PartitionCtx,
+    *,
+    window: Optional[int] = None,
+    causal: bool = True,
+    training: bool = False,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """The prefill RM.  Returns (y, (k, v)) with k/v in (B, Hkv, S, D) cache layout."""
+    b, s, _ = x.shape
+    rope = cross_kv is None and cfg.rope_theta > 0
+    q, k, v = _project_qkv(params, x, cfg, positions, training=training, rope=rope)
+    q = pctx.shard(q, "batch", "seq", "heads", "head_dim")
+    qt = q.transpose(0, 2, 1, 3)  # (B, H, S, D)
+    if cross_kv is not None:
+        kt, vt = cross_kv  # encoder KV, (B, Hkv, Senc, D)
+        causal = False
+    else:
+        kt = pctx.shard(k, "batch", "seq", "kv_heads", "head_dim").transpose(0, 2, 1, 3)
+        vt = pctx.shard(v, "batch", "seq", "kv_heads", "head_dim").transpose(0, 2, 1, 3)
+
+    if cfg.attn_impl == "stub":
+        # Kernel-substituted lowering (dry-run): the attention core is a
+        # shape-correct identity; kernels/costs.py supplies the Pallas
+        # kernel's exact analytic cost.  Projections/KV collection stay real.
+        out = qt
+    elif cfg.use_pallas and window is None and causal and qt.shape[2] == kt.shape[2]:
+        out = prefill_attention(qt, kt, vt, use_kernel=True, interpret=True)
+    elif s <= 1024 and kt.shape[2] <= 1024:
+        from repro.kernels.prefill_attention.ref import prefill_attention_reference
+
+        g = cfg.num_heads // kt.shape[1]
+        kk = jnp.repeat(kt, g, axis=1) if g > 1 else kt
+        vv = jnp.repeat(vt, g, axis=1) if g > 1 else vt
+        sm = 1.0 / math.sqrt(cfg.head_dim)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", qt.astype(jnp.float32), kk.astype(jnp.float32)) * sm
+        qi, ki = jnp.arange(s)[:, None], jnp.arange(kt.shape[2])[None, :]
+        mask = jnp.ones((s, kt.shape[2]), bool)
+        if causal:
+            mask &= qi >= ki
+        if window is not None:
+            mask &= qi - ki < window
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        out = jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(scores, -1), vv.astype(jnp.float32)).astype(x.dtype)
+    else:
+        out = _chunked_attention(qt, kt, vt, causal=causal, window=window)
+
+    out = pctx.shard(out, "batch", "heads", "seq", "head_dim")
+    y = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.num_heads * cfg.head_dim)
+    y = linear_apply(params["wo"], y, quant=cfg.quant, training=training, use_pallas=cfg.use_pallas)
+    return y, (kt, vt)
+
+
+def update_cache(cache: KVCache, k_new: jax.Array, v_new: jax.Array, lengths: jax.Array) -> KVCache:
+    """Insert one token's K/V per sequence at its current length."""
+    smax = cache.k.shape[2]
+    idx = jnp.minimum(lengths, smax - 1)
+
+    def upd(c, new, i):  # c: (Hkv, Smax, D); new: (Hkv, 1, D)
+        return jax.lax.dynamic_update_slice(c, new.astype(c.dtype), (0, i, 0))
+
+    k = jax.vmap(upd)(cache.k, k_new, idx)
+    v = jax.vmap(upd)(cache.v, v_new, idx)
+    return KVCache(k, v)
+
+
+def scatter_new_tokens(buf: jax.Array, new: jax.Array, lengths: jax.Array) -> jax.Array:
+    """Write every layer's new token into the decode cache in ONE update.
+
+    buf: (B, L, Hkv, Smax, D) — the decode cache is BATCH-LEADING; new:
+    (L, B, Hkv, 1, D), the per-layer tokens collected as scan ys.
+
+    [§Perf iteration D2] During the decode scan the cache is READ-ONLY (the
+    online-softmax merge folds each layer's fresh token into its attention
+    output); afterwards, per batch element, all L layers' tokens land at ONE
+    sequence position — with batch leading that is a single contiguous
+    (L, Hkv, 1, D)-window dynamic_update_slice under a single-level leading-
+    axis vmap.  Write traffic O(L*B*Hkv*D); the donated buffer aliases in
+    place.
+
+    (Earlier formulations all made XLA materialize/transpose the full cache:
+    cache-as-carry + vmap-over-batch-axis-1 DUS — vmap moved the batch axis
+    to the front, full transpose copies EVERY layer, 3.5x WORSE than
+    baseline; jnp advanced indexing with non-adjacent indices — whole-buffer
+    transpose to index-leading order and back; nested vmap over (L, B) —
+    transposed f32 full-buffer scatters; reshape-flattening (L, B) — merged
+    an unsharded dim into the batch-sharded dim and REPLICATED the cache on
+    every device.  Lesson: batch-leading layout + one leading vmap axis is
+    the only shape XLA updates in place.)
+    """
+    b, l, hkv, smax, d = buf.shape
+    idx = jnp.minimum(lengths, smax - 1)  # (B,)
+    newb = jnp.moveaxis(new[:, :, :, 0, :], 1, 0).astype(buf.dtype)  # (B, L, Hkv, D)
+
+    def upd_one(c, n, i):  # c: (L, Hkv, Smax, D); n: (L, Hkv, D); i scalar
+        return jax.lax.dynamic_update_slice(c, n[:, :, None, :], (0, 0, i, 0))
+
+    return jax.vmap(upd_one)(buf, newb, idx)
+
+
+def _merge_new_token(
+    out_cache: jax.Array,  # (B, H, D) — attention over cache, f32-normalized
+    l_cache: jax.Array,  # (B, H, 1) — softmax denominator over cache
+    m_cache: jax.Array,  # (B, H, 1) — running max over cache
+    q: jax.Array,  # (B, H, D)
+    k_new: jax.Array,  # (B, Hkv, 1, D)
+    v_new: jax.Array,
+    sm_scale: float,
+) -> jax.Array:
+    """Fold the freshly-projected token's K/V into cache attention output.
+
+    [§Perf iteration D2] The classic online-softmax merge: the new token is
+    one extra 'block', so the decode step never materializes an updated
+    cache slice (update-then-attend would write+read O(cache) bytes; the
+    merge is O(tokens)).
+    """
+    b, h, d = q.shape
+    g = h // k_new.shape[1]
+    kn = jnp.repeat(k_new[:, :, 0, :], g, axis=1) if g > 1 else k_new[:, :, 0, :]
+    vn = jnp.repeat(v_new[:, :, 0, :], g, axis=1) if g > 1 else v_new[:, :, 0, :]
+    s_new = jnp.sum(q.astype(jnp.float32) * kn.astype(jnp.float32), axis=-1, keepdims=True) * sm_scale
+    m = jnp.maximum(m_cache, s_new)
+    alpha = jnp.exp(m_cache - m)
+    p_new = jnp.exp(s_new - m)
+    l = alpha * l_cache + p_new
+    out = (out_cache * (alpha * l_cache) + p_new * vn.astype(jnp.float32)) / jnp.maximum(l, 1e-30)
+    return out
+
+
+def attention_decode(
+    params: dict,
+    x: jax.Array,  # (B, 1, d)
+    cache: KVCache,
+    lengths: jax.Array,  # (B,) tokens already in cache
+    cfg: ModelConfig,
+    pctx: PartitionCtx,
+    *,
+    window: Optional[int] = None,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+    cross_len: Optional[int] = None,
+) -> Tuple[jax.Array, KVCache]:
+    """The decode RM: one token against the streamed KV cache.
+
+    Returns (y, (k_new, v_new)) — the NEW token's K/V only, shape
+    (B, Hkv, 1, D); the caller scatters it into its carried cache buffer
+    (``scatter_token``).  The attention output already includes the new
+    token via the online-softmax merge, so the updated cache slice is never
+    materialized.  Cross-attention (read-only KV) returns ``cache``
+    unchanged.
+    """
+    b = x.shape[0]
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    rope = cross_kv is None and cfg.rope_theta > 0
+    q, k, v = _project_qkv(params, x, cfg, lengths[:, None], training=False, rope=rope)
+    qd = q.reshape(b, h, hd)
+
+    if cross_kv is not None:
+        kt, vt = cross_kv
+        if cfg.attn_impl == "stub":
+            out = qd
+        else:
+            eff_len = jnp.full((b,), cross_len if cross_len is not None else kt.shape[2], jnp.int32)
+            out = decode_attention(qd, kt, vt, eff_len, use_kernel=cfg.use_pallas, interpret=True)
+        y = out.reshape(b, 1, h * hd)
+        y = linear_apply(params["wo"], y, quant=cfg.quant, training=False, use_pallas=cfg.use_pallas)
+        return y, cache
+
+    k_new = k.transpose(0, 2, 1, 3)  # (B, Hkv, 1, D)
+    v_new = v.transpose(0, 2, 1, 3)
+    if cfg.attn_impl == "stub":
+        out = qd  # kernel-substituted lowering; see kernels/costs.py
+    else:
+        # Attend over the EXISTING cache ([start, len) valid), then merge the
+        # new token analytically.  Window start accounts for the appended
+        # token: valid range becomes [max(0, len+1-window), len+1).
+        starts = None if window is None else jnp.maximum(0, lengths + 1 - window).astype(jnp.int32)
+        sm_scale = 1.0 / math.sqrt(hd)
+        out_c, l_c, m_c = decode_attention(
+            qd, cache.k, cache.v, lengths.astype(jnp.int32), starts,
+            use_kernel=cfg.use_pallas, interpret=True, return_stats=True,
+        )
+        out = _merge_new_token(out_c, l_c, m_c, qd, k_new, v_new, sm_scale).astype(x.dtype)
+
+    y = out.reshape(b, 1, h * hd)
+    y = linear_apply(params["wo"], y, quant=cfg.quant, training=False, use_pallas=cfg.use_pallas)
+    return y, KVCache(k_new, v_new)

@@ -1,0 +1,85 @@
+"""Linear layers: dense bf16 and TLMM-backed ternary (the paper's static region).
+
+Three execution regimes, all sharing one param layout:
+
+* ``bf16``            — plain matmul on latent weights.
+* ``ternary`` (train) — BitNet QAT: STE ternary weights + STE int8 acts.
+* ``ternary`` (infer) — weights converted once to :class:`TernaryWeight`
+                        (2-bit packed) and multiplied by the TLMM op; this is
+                        the "static region" engine shared by both phases.
+
+The param dict is {"w": (K, N)} (+"b") for latent weights, or
+{"w": TernaryWeight} after ``convert_linear_for_inference``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import QuantConfig
+from repro.kernels.tlmm.ops import tlmm_matmul
+from repro.quant.act_quant import quantize_activations_int8
+from repro.quant.ternary import TernaryWeight, quantize_and_pack, ternary_quantize_ste
+
+
+def linear_init(key, k: int, n: int, *, bias: bool = False, dtype=jnp.bfloat16, scale: Optional[float] = None) -> dict:
+    if scale is None:
+        scale = 1.0 / (k**0.5)
+    p = {"w": (jax.random.normal(key, (k, n), jnp.float32) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((n,), dtype)
+    return p
+
+
+def _act_fake_quant_ste(x: jax.Array) -> jax.Array:
+    x_q, scale = quantize_activations_int8(x)
+    deq = (x_q.astype(jnp.float32) * scale).astype(x.dtype)
+    return x + jax.lax.stop_gradient(deq - x)
+
+
+def linear_apply(
+    params: dict,
+    x: jax.Array,
+    quant: QuantConfig,
+    *,
+    training: bool = False,
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    w = params["w"]
+    if isinstance(w, TernaryWeight):
+        # inference TLMM path (packed 2-bit weights)
+        y = tlmm_matmul(x, w, out_dtype=x.dtype, use_kernel=use_pallas, interpret=interpret)
+    elif quant.ternary:
+        if training:
+            # BitNet QAT: STE through both weight and activation quantizers
+            w_ste, _ = ternary_quantize_ste(w.astype(jnp.float32))
+            y = _act_fake_quant_ste(x).astype(jnp.float32) @ w_ste
+            y = y.astype(x.dtype)
+        else:
+            # unconverted ternary inference: quantize on the fly (slow path)
+            x_q, s = quantize_activations_int8(x)
+            from repro.quant.ternary import ternary_quantize
+
+            w_q, beta = ternary_quantize(w.astype(jnp.float32))
+            acc = jax.lax.dot_general(
+                x_q.reshape(-1, x.shape[-1]), w_q, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+            y = (acc * s.reshape(-1, 1) * beta).reshape(*x.shape[:-1], w.shape[1]).astype(x.dtype)
+    else:
+        y = x @ w.astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def convert_linear_for_inference(params: dict, quant: QuantConfig) -> dict:
+    """Latent fp weights -> packed TernaryWeight (one-time model conversion)."""
+    if not quant.ternary or isinstance(params["w"], TernaryWeight):
+        return params
+    out = dict(params)
+    out["w"] = quantize_and_pack(params["w"].astype(jnp.float32))
+    return out

@@ -1,0 +1,25 @@
+"""Rotary position embeddings (llama convention: rotate-half).
+
+Model convention throughout this repo: projected q/k tensors are
+(batch, seq, heads, head_dim); positions are (batch, seq).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int -> same shape, rotated."""
+    d = x.shape[-1]
+    inv = rope_frequencies(d, theta)  # (D/2,)
+    ang = positions[:, :, None, None].astype(jnp.float32) * inv  # (B, S, 1, D/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1 = x[..., : d // 2].astype(jnp.float32)
+    x2 = x[..., d // 2 :].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,179 @@
+"""Hymba (arXiv:2411.13676): parallel attention + SSM heads per layer.
+
+Every layer runs an attention branch and a selective-SSM branch on the same
+input and fuses them (per-branch RMSNorm, learned scalar gates, mean).
+Attention is sliding-window everywhere except ``global_attn_layers`` — under
+scan-over-layers the per-layer window is a *traced* scalar (full-attention
+layers get a huge sentinel window), keeping the scanned computation uniform.
+
+PD-Swap applicability: the attention sub-heads swap prefill/decode RMs like
+any transformer; the SSM sub-heads use the xlstm-style O(1) recurrent decode.
+SWA + SSM ⇒ sub-quadratic: this arch runs the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.attention import KVCache, attention_decode, attention_init, attention_prefill
+from repro.layers.mlp import mlp_apply, mlp_init
+from repro.layers.norm import apply_norm, norm_init
+from repro.layers.sharding import NULL_CTX, PartitionCtx
+from repro.models.ssm import ssm_decode, ssm_init, ssm_prefill
+
+_FULL_WINDOW = 1 << 30
+
+
+class HymbaCache(NamedTuple):
+    kv: KVCache  # (L, B, Hkv, Smax, D)
+    ssm_h: jax.Array  # (L, B, d_in, N)
+    conv: jax.Array  # (L, B, ssm_conv-1, d_in)
+
+
+def layer_windows(cfg: ModelConfig) -> jnp.ndarray:
+    """Per-layer attention window; full-attention layers get the sentinel."""
+    w = jnp.full((cfg.num_layers,), cfg.sliding_window or _FULL_WINDOW, jnp.int32)
+    for l in cfg.global_attn_layers:
+        w = w.at[l].set(_FULL_WINDOW)
+    return w
+
+
+def init(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> dict:
+    vp = cfg.padded_vocab()
+    ke, kl = jax.random.split(key)
+
+    def layer_init(k):
+        ka, ks, kf = jax.random.split(k, 3)
+        return {
+            "attn": attention_init(cfg, ka, dtype),
+            "ssm": ssm_init(cfg, ks, dtype),
+            "ln1": norm_init("rmsnorm", cfg.d_model),
+            "ln2": norm_init("rmsnorm", cfg.d_model),
+            "attn_norm": norm_init("rmsnorm", cfg.d_model),
+            "ssm_norm": norm_init("rmsnorm", cfg.d_model),
+            "gate_a": jnp.ones((), jnp.float32),
+            "gate_s": jnp.ones((), jnp.float32),
+            "mlp": mlp_init(cfg, kf, dtype),
+        }
+
+    return {
+        "emb": (jax.random.normal(ke, (vp, cfg.d_model), jnp.float32) * 0.02).astype(dtype),
+        "layers": jax.vmap(layer_init)(jax.random.split(kl, cfg.num_layers)),
+        "ln_f": norm_init("rmsnorm", cfg.d_model),
+    }
+
+
+def _fuse(lp, attn_out, ssm_out, cfg):
+    a = apply_norm(lp["attn_norm"], attn_out, "rmsnorm", cfg.norm_eps)
+    s = apply_norm(lp["ssm_norm"], ssm_out, "rmsnorm", cfg.norm_eps)
+    return 0.5 * (lp["gate_a"] * a.astype(jnp.float32) + lp["gate_s"] * s.astype(jnp.float32)).astype(attn_out.dtype)
+
+
+def _block_prefill(x, lp, window, positions, cfg, pctx, *, training):
+    h = apply_norm(lp["ln1"], x, "rmsnorm", cfg.norm_eps)
+    attn_out, kv = attention_prefill(lp["attn"], h, positions, cfg, pctx, window=window, training=training)
+    ssm_out, (ssm_h, conv) = ssm_prefill(lp["ssm"], h, cfg)
+    x = x + _fuse(lp, attn_out, ssm_out, cfg)
+    h2 = apply_norm(lp["ln2"], x, "rmsnorm", cfg.norm_eps)
+    x = x + mlp_apply(lp["mlp"], h2, cfg, pctx, training=training)
+    x = pctx.shard(x, "batch", "seq", "embed")
+    return x, (kv, ssm_h, conv)
+
+
+def forward_hidden(params, tokens, cfg: ModelConfig, pctx: PartitionCtx = NULL_CTX, *, training=True):
+    b, s = tokens.shape
+    x = params["emb"][tokens]
+    x = pctx.shard(x, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    windows = layer_windows(cfg)
+
+    def body(x, scanned):
+        lp, w = scanned
+        x, _ = _block_prefill(x, lp, w, positions, cfg, pctx, training=training)
+        return x, None
+
+    if cfg.remat != "none" and training:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, (params["layers"], windows))
+    return apply_norm(params["ln_f"], x, "rmsnorm", cfg.norm_eps)
+
+
+def forward_train(params, tokens, cfg: ModelConfig, pctx: PartitionCtx = NULL_CTX):
+    x = forward_hidden(params, tokens, cfg, pctx, training=True)
+    logits = x.astype(jnp.float32) @ params["emb"].astype(jnp.float32).T
+    return pctx.shard(logits, "batch", "seq", "vocab"), jnp.float32(0)
+
+
+def loss_fn(params, batch, cfg, pctx: PartitionCtx = NULL_CTX, aux_weight: float = 0.0):
+    from repro.train.losses import chunked_ce_loss
+
+    x = forward_hidden(params, batch["tokens"], cfg, pctx, training=True)
+    loss = chunked_ce_loss(x, params["emb"].T, batch["targets"], batch["mask"], pctx)
+    return loss, {"nll": loss, "aux": jnp.float32(0)}
+
+
+def forward_prefill(params, tokens, cfg: ModelConfig, pctx: PartitionCtx = NULL_CTX):
+    b, s = tokens.shape
+    x = params["emb"][tokens]
+    x = pctx.shard(x, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    windows = layer_windows(cfg)
+
+    def body(x, scanned):
+        lp, w = scanned
+        x, (kv, ssm_h, conv) = _block_prefill(x, lp, w, positions, cfg, pctx, training=False)
+        return x, (kv[0], kv[1], ssm_h, conv)
+
+    x, (ks, vs, hs, convs) = jax.lax.scan(body, x, (params["layers"], windows))
+    x = apply_norm(params["ln_f"], x[:, -1:, :], "rmsnorm", cfg.norm_eps)
+    logits = x.astype(jnp.float32) @ params["emb"].astype(jnp.float32).T
+    return logits[:, -1, :], HymbaCache(KVCache(ks, vs), hs, convs)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> HymbaCache:
+    l = cfg.num_layers
+    # KV batch-leading (B, L, Hkv, S, D) — see attention.scatter_new_tokens.
+    kv = KVCache(
+        jnp.zeros((batch, l, cfg.num_kv_heads, max_len, cfg.head_dim), dtype),
+        jnp.zeros((batch, l, cfg.num_kv_heads, max_len, cfg.head_dim), dtype),
+    )
+    return HymbaCache(
+        kv=kv,
+        ssm_h=jnp.zeros((l, batch, cfg.d_model, cfg.ssm_state), jnp.float32),
+        conv=jnp.zeros((l, batch, cfg.ssm_conv - 1, cfg.d_model), jnp.float32),
+    )
+
+
+def decode_step(params, token, cache: HymbaCache, lengths, cfg: ModelConfig, pctx: PartitionCtx = NULL_CTX):
+    """[§Perf iteration D2] Batch-leading KV cache, read-only through the
+    scan; one post-scan scatter writes all layers' new tokens.  The small
+    SSM/conv states still ride xs/ys — their re-stack is O(B·d·N)."""
+    from repro.layers.attention import scatter_new_tokens
+
+    b = token.shape[0]
+    x = params["emb"][token[:, None]]
+    windows = layer_windows(cfg)
+
+    def body(x, scanned):
+        lp, w, li, sh, cs = scanned
+        ck = jax.lax.dynamic_index_in_dim(cache.kv.k, li, axis=1, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(cache.kv.v, li, axis=1, keepdims=False)
+        h = apply_norm(lp["ln1"], x, "rmsnorm", cfg.norm_eps)
+        attn_out, new_kv = attention_decode(lp["attn"], h, KVCache(ck, cv), lengths, cfg, pctx, window=w)
+        ssm_out, (new_h, new_cs) = ssm_decode(lp["ssm"], h, cfg, sh, cs)
+        x = x + _fuse(lp, attn_out, ssm_out, cfg)
+        h2 = apply_norm(lp["ln2"], x, "rmsnorm", cfg.norm_eps)
+        x = x + mlp_apply(lp["mlp"], h2, cfg, pctx, training=False)
+        return x, (new_kv.k, new_kv.v, new_h, new_cs)
+
+    x, (tok_k, tok_v, hs, convs) = jax.lax.scan(
+        body, x, (params["layers"], windows, jnp.arange(cfg.num_layers), cache.ssm_h, cache.conv)
+    )
+    ks = scatter_new_tokens(cache.kv.k, tok_k, lengths)
+    vs = scatter_new_tokens(cache.kv.v, tok_v, lengths)
+    x = apply_norm(params["ln_f"], x, "rmsnorm", cfg.norm_eps)
+    logits = x.astype(jnp.float32) @ params["emb"].astype(jnp.float32).T
+    return logits[:, 0, :], HymbaCache(KVCache(ks, vs), hs, convs)

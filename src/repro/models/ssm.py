@@ -1,0 +1,124 @@
+"""Selective SSM (Mamba-style) branch used by hymba's parallel heads.
+
+Prefill: chunk-parallel linear recurrence — ``associative_scan`` within a
+chunk (so the (B, c, d, N) working set stays bounded), sequential carry
+across chunks.  Decode: O(1) state update.  tests/test_hymba.py asserts the
+two agree step-by-step.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.norm import apply_norm, norm_init
+
+
+def ssm_init(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> dict:
+    d, n = cfg.d_model, cfg.ssm_state
+    d_in = d  # parallel-heads design: branch width == d_model
+    ks = jax.random.split(key, 6)
+    s = 1.0 / d**0.5
+    return {
+        "w_in": (jax.random.normal(ks[0], (d, 2 * d_in), jnp.float32) * s).astype(dtype),
+        "conv": (jax.random.normal(ks[1], (cfg.ssm_conv, d_in), jnp.float32) * 0.2).astype(dtype),
+        "w_bc": (jax.random.normal(ks[2], (d_in, 2 * n), jnp.float32) * s).astype(dtype),
+        "w_dt": (jax.random.normal(ks[3], (d_in, 1), jnp.float32) * s).astype(dtype),
+        "dt_bias": jnp.full((d_in,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (d_in, 1))),
+        "d_skip": jnp.ones((d_in,), jnp.float32),
+        "w_out": (jax.random.normal(ks[4], (d_in, d), jnp.float32) * s).astype(dtype),
+    }
+
+
+def _ssm_inputs(p, x, cfg: ModelConfig, conv_state=None):
+    """x: (B, S, d) -> gates and per-step scan elements.
+
+    Returns (xc, z, dt, b_mat, c_mat, new_conv_state); conv_state is the last
+    (ssm_conv-1) inputs for streaming decode.
+    """
+    b, s, d = x.shape
+    xz = x.astype(jnp.float32) @ p["w_in"].astype(jnp.float32)
+    x_in, z = jnp.split(xz, 2, axis=-1)  # (B,S,d_in)
+    w = cfg.ssm_conv
+    if conv_state is None:
+        ctx = jnp.pad(x_in, ((0, 0), (w - 1, 0), (0, 0)))
+    else:
+        ctx = jnp.concatenate([conv_state.astype(x_in.dtype), x_in], axis=1)
+    # depthwise causal conv via stacked shifts (w is tiny: 4)
+    xc = sum(ctx[:, i : i + s, :] * p["conv"].astype(jnp.float32)[i] for i in range(w))
+    new_conv_state = ctx[:, -(w - 1) :, :] if w > 1 else None
+    xc = jax.nn.silu(xc)
+    dt = jax.nn.softplus(xc @ p["w_dt"].astype(jnp.float32) + p["dt_bias"])  # (B,S,d_in)? w_dt (d,1)->(B,S,1)
+    dt = jnp.broadcast_to(dt, xc.shape)
+    bc = xc @ p["w_bc"].astype(jnp.float32)
+    b_mat, c_mat = jnp.split(bc, 2, axis=-1)  # (B,S,N)
+    return xc, z, dt, b_mat, c_mat, new_conv_state
+
+
+def _scan_chunk(a, u):
+    """Associative scan of h_t = a_t * h_{t-1} + u_t within axis 1."""
+
+    def combine(x, y):
+        a1, u1 = x
+        a2, u2 = y
+        return a1 * a2, a2 * u1 + u2
+
+    return jax.lax.associative_scan(combine, (a, u), axis=1)
+
+
+def ssm_prefill(p, x, cfg: ModelConfig, h0=None, conv_state=None, chunk: int = 128):
+    """Returns (y (B,S,d), (h_last (B,d_in,N), conv_state))."""
+    b, s, d = x.shape
+    n = cfg.ssm_state
+    xc, z, dt, b_mat, c_mat, conv_state = _ssm_inputs(p, x, cfg, conv_state)
+    a_cont = -jnp.exp(p["a_log"])  # (d_in, N)
+    if h0 is None:
+        h0 = jnp.zeros((b, xc.shape[-1], n), jnp.float32)
+
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        xc_p = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+        dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_p = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_p = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    else:
+        xc_p, dt_p, b_p, c_p = xc, dt, b_mat, c_mat
+    nc = (s + pad) // c
+    resh = lambda t: jnp.moveaxis(t.reshape(b, nc, c, t.shape[-1]), 1, 0)
+    xcs, dts, bs, cs = resh(xc_p), resh(dt_p), resh(b_p), resh(c_p)
+
+    def body(h_prev, inp):
+        xci, dti, bi, ci = inp  # (B,c,d_in)/(B,c,N)
+        a = jnp.exp(dti[..., None] * a_cont)  # (B,c,d_in,N)
+        u = (dti * xci)[..., None] * bi[:, :, None, :]  # (B,c,d_in,N)
+        a_s, u_s = _scan_chunk(a, u)
+        h_all = a_s * h_prev[:, None] + u_s  # (B,c,d_in,N)
+        y = jnp.einsum("bcdn,bcn->bcd", h_all, ci)
+        return h_all[:, -1], y
+
+    # checkpoint: keeps backward from saving (B, c, d_in, N) per chunk
+    body = jax.checkpoint(body)
+    h_last, ys = jax.lax.scan(body, h0, (xcs, dts, bs, cs))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * c, -1)[:, :s]
+    y = y + p["d_skip"] * xc
+    y = y * jax.nn.silu(z)
+    out = y @ p["w_out"].astype(jnp.float32)
+    return out.astype(x.dtype), (h_last, conv_state)
+
+
+def ssm_decode(p, x, cfg: ModelConfig, h_prev, conv_state):
+    """x: (B,1,d); h_prev: (B,d_in,N); conv_state: (B,ssm_conv-1,d_in)."""
+    xc, z, dt, b_mat, c_mat, conv_state = _ssm_inputs(p, x, cfg, conv_state)
+    a_cont = -jnp.exp(p["a_log"])
+    a = jnp.exp(dt[:, 0, :, None] * a_cont)  # (B,d_in,N)
+    u = (dt[:, 0] * xc[:, 0])[..., None] * b_mat[:, 0, None, :]
+    h_new = a * h_prev + u
+    y = jnp.einsum("bdn,bn->bd", h_new, c_mat[:, 0])[:, None, :]
+    y = y + p["d_skip"] * xc
+    y = y * jax.nn.silu(z)
+    out = y @ p["w_out"].astype(jnp.float32)
+    return out.astype(x.dtype), (h_new, conv_state)

@@ -1,0 +1,255 @@
+"""Decoder-only transformer (dense + MoE): granite, moonshot, chameleon,
+deepseek, qwen, minicpm, smollm, bitnet.
+
+Layer-stacked parameters (leading dim = num_layers) consumed by
+``jax.lax.scan`` so the HLO stays one-layer-sized — essential for compiling
+the 512-device dry-run of 48-layer models on a single CPU host.
+
+Three entry points = the PD-Swap phase programs:
+  * ``forward_train``  — full causal pass -> per-token loss (train_4k cells)
+  * ``forward_prefill``— full causal pass -> logits + per-layer KV (prefill RM)
+  * ``decode_step``    — one token against the cache (decode RM)
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.attention import (
+    KVCache,
+    attention_decode,
+    attention_init,
+    attention_prefill,
+)
+from repro.layers.mlp import mlp_apply, mlp_init
+from repro.layers.moe import moe_apply, moe_init
+from repro.layers.norm import apply_norm, norm_init
+from repro.layers.sharding import NULL_CTX, PartitionCtx
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)  # "full": save nothing
+
+
+def init(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> dict:
+    vp = cfg.padded_vocab()
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+
+    def layer_init(k):
+        ka, kf = jax.random.split(k)
+        p = {
+            "attn": attention_init(cfg, ka, dtype),
+            "ln1": norm_init(cfg.norm, cfg.d_model),
+            "ln2": norm_init(cfg.norm, cfg.d_model),
+        }
+        if cfg.moe:
+            p["moe"] = moe_init(cfg, kf, dtype)
+        else:
+            p["mlp"] = mlp_init(cfg, kf, dtype)
+        return p
+
+    params = {
+        "emb": (jax.random.normal(k_emb, (vp, cfg.d_model), jnp.float32) * 0.02).astype(dtype),
+        "layers": jax.vmap(layer_init)(jax.random.split(k_layers, cfg.num_layers)),
+        "ln_f": norm_init(cfg.norm, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(k_head, (cfg.d_model, vp), jnp.float32) * 0.02
+        ).astype(dtype)
+    return params
+
+
+def _logits(params, x, cfg: ModelConfig, pctx: PartitionCtx) -> jax.Array:
+    x = apply_norm(params["ln_f"], x, cfg.norm, cfg.norm_eps)
+    head = params["emb"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x.astype(jnp.float32) @ head.astype(jnp.float32)
+    return pctx.shard(logits, "batch", "seq", "vocab")
+
+
+def _embed(params, tokens, cfg, pctx):
+    x = params["emb"][tokens]
+    return pctx.shard(x, "batch", "seq", "embed")
+
+
+def _block_prefill(x, lp, positions, cfg, pctx, *, training, collect_kv):
+    h = apply_norm(lp["ln1"], x, cfg.norm, cfg.norm_eps)
+    attn_out, kv = attention_prefill(
+        lp["attn"], h, positions, cfg, pctx,
+        window=cfg.sliding_window, training=training,
+    )
+    x = x + attn_out
+    h = apply_norm(lp["ln2"], x, cfg.norm, cfg.norm_eps)
+    if cfg.moe:
+        ffn_out, aux = moe_apply(lp["moe"], h, cfg, pctx, training=training)
+    else:
+        ffn_out, aux = mlp_apply(lp["mlp"], h, cfg, pctx, training=training), jnp.float32(0)
+    x = pctx.shard(x + ffn_out, "batch", "seq", "embed")
+    return x, aux, (kv if collect_kv else None)
+
+
+def forward_hidden(
+    params: dict,
+    tokens: jax.Array,  # (B, S)
+    cfg: ModelConfig,
+    pctx: PartitionCtx = NULL_CTX,
+    *,
+    training: bool = True,
+):
+    """Returns (final normed hidden (B,S,d), aux loss)."""
+    b, s = tokens.shape
+    x = _embed(params, tokens, cfg, pctx)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(carry, lp):
+        x, aux = carry
+        x, aux_l, _ = _block_prefill(x, lp, positions, cfg, pctx, training=training, collect_kv=False)
+        return (x, aux + aux_l), None
+
+    body = _remat(body, cfg)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0)), params["layers"])
+    return apply_norm(params["ln_f"], x, cfg.norm, cfg.norm_eps), aux
+
+
+def _head(params, cfg: ModelConfig):
+    return params["emb"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def forward_train(params, tokens, cfg: ModelConfig, pctx: PartitionCtx = NULL_CTX):
+    """Full logits (B, S, Vp) — small-model/test path; training uses the
+    chunked loss below to avoid materializing this tensor."""
+    x, aux = forward_hidden(params, tokens, cfg, pctx, training=True)
+    logits = x.astype(jnp.float32) @ _head(params, cfg).astype(jnp.float32)
+    return pctx.shard(logits, "batch", "seq", "vocab"), aux
+
+
+def loss_fn(params, batch: dict, cfg: ModelConfig, pctx: PartitionCtx = NULL_CTX,
+            aux_weight: float = 0.01):
+    """batch: tokens (B,S), targets (B,S), mask (B,S)."""
+    from repro.train.losses import chunked_ce_loss
+
+    x, aux = forward_hidden(params, batch["tokens"], cfg, pctx, training=True)
+    loss = chunked_ce_loss(x, _head(params, cfg), batch["targets"], batch["mask"], pctx)
+    return loss + aux_weight * aux / max(cfg.num_layers, 1), {"nll": loss, "aux": aux}
+
+
+def forward_prefill(
+    params: dict,
+    tokens: jax.Array,  # (B, S)
+    cfg: ModelConfig,
+    pctx: PartitionCtx = NULL_CTX,
+    *,
+    split_tail: bool = False,
+):
+    """The prefill RM.  Returns (logits_last (B, Vp), kv_caches (L-pytree)).
+
+    ``split_tail=True`` returns after the *last layer's attention* with a
+    continuation closure — the hook the latency-overlapped swap (paper §3.4,
+    Fig. 5) uses: KV is complete at that point, so the controller can launch
+    the decode-engine relayout while the tail (last FFN + norm + logits)
+    still runs.  See repro.core.swap.
+    """
+    b, s = tokens.shape
+    x = _embed(params, tokens, cfg, pctx)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    n_scan = cfg.num_layers - 1 if split_tail else cfg.num_layers
+    scan_layers = jax.tree.map(lambda a: a[:n_scan], params["layers"])
+
+    def body(x, lp):
+        x, _, kv = _block_prefill(x, lp, positions, cfg, pctx, training=False, collect_kv=True)
+        return x, kv
+
+    x, kvs = jax.lax.scan(body, x, scan_layers)
+
+    if not split_tail:
+        # logits only for the last position — never the (B, S, V) tensor
+        logits = _logits(params, x[:, -1:, :], cfg, pctx)
+        return logits[:, -1, :], KVCache(kvs[0], kvs[1])
+
+    # --- split point: run the last layer only through its attention ---
+    last = jax.tree.map(lambda a: a[-1], params["layers"])
+    h = apply_norm(last["ln1"], x, cfg.norm, cfg.norm_eps)
+    attn_out, kv_last = attention_prefill(
+        last["attn"], h, positions, cfg, pctx, window=cfg.sliding_window, training=False
+    )
+    x_mid = x + attn_out
+    k_all = jnp.concatenate([kvs[0], kv_last[0][None]], axis=0)
+    v_all = jnp.concatenate([kvs[1], kv_last[1][None]], axis=0)
+    # The caller jits `prefill_tail` as its own program and dispatches the KV
+    # relayout in between — that dispatch gap is the paper's overlap window.
+    return x_mid, KVCache(k_all, v_all)
+
+
+def prefill_tail(params, x_mid, cfg: ModelConfig, pctx: PartitionCtx = NULL_CTX):
+    """Standalone jittable tail (last FFN + logits) for the overlapped swap."""
+    last = jax.tree.map(lambda a: a[-1], params["layers"])
+    h2 = apply_norm(last["ln2"], x_mid, cfg.norm, cfg.norm_eps)
+    if cfg.moe:
+        ffn_out, _ = moe_apply(last["moe"], h2, cfg, pctx, training=False)
+    else:
+        ffn_out = mlp_apply(last["mlp"], h2, cfg, pctx, training=False)
+    logits = _logits(params, (x_mid + ffn_out)[:, -1:, :], cfg, pctx)
+    return logits[:, -1, :]
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> KVCache:
+    # Decode cache is BATCH-LEADING (B, L, Hkv, S, D): all layers' new
+    # tokens for one sequence land in one contiguous DUS window, and the
+    # leading dim is the vmap/sharding axis (see attention.scatter_new_tokens).
+    shape = (batch, cfg.num_layers, cfg.num_kv_heads, max_len, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def decode_step(
+    params: dict,
+    token: jax.Array,  # (B,) int32 — current input token
+    cache: KVCache,  # (L, B, Hkv, Smax, D)
+    lengths: jax.Array,  # (B,)
+    cfg: ModelConfig,
+    pctx: PartitionCtx = NULL_CTX,
+):
+    """The decode RM: one step.  Returns (logits (B, Vp), new_cache).
+
+    [§Perf iteration D2] The (batch-leading) cache is closed over and
+    READ-ONLY during the scan: each layer dynamic-slices its K/V, the
+    online-softmax merge folds the fresh token into the attention output,
+    and the scan emits only the tiny (L,B,Hkv,1,D) new-token ys.  One
+    post-scan ``scatter_new_tokens`` writes all layers' tokens into the
+    (donated, aliased-in-place) cache — per-step cache write traffic is
+    O(L*B*Hkv*D), not O(cache).
+    """
+    from repro.layers.attention import scatter_new_tokens
+
+    b = token.shape[0]
+    x = _embed(params, token[:, None], cfg, pctx)
+
+    def body(x, scanned):
+        lp, li = scanned
+        ck = jax.lax.dynamic_index_in_dim(cache.k, li, axis=1, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(cache.v, li, axis=1, keepdims=False)
+        h = apply_norm(lp["ln1"], x, cfg.norm, cfg.norm_eps)
+        attn_out, new_kv = attention_decode(
+            lp["attn"], h, KVCache(ck, cv), lengths, cfg, pctx, window=cfg.sliding_window
+        )
+        x = x + attn_out
+        h = apply_norm(lp["ln2"], x, cfg.norm, cfg.norm_eps)
+        if cfg.moe:
+            ffn_out, _ = moe_apply(lp["moe"], h, cfg, pctx, training=False)
+        else:
+            ffn_out = mlp_apply(lp["mlp"], h, cfg, pctx, training=False)
+        return x + ffn_out, (new_kv.k, new_kv.v)
+
+    x, (tok_k, tok_v) = jax.lax.scan(body, x, (params["layers"], jnp.arange(cfg.num_layers)))
+    new_k = scatter_new_tokens(cache.k, tok_k, lengths)
+    new_v = scatter_new_tokens(cache.v, tok_v, lengths)
+    logits = _logits(params, x, cfg, pctx)
+    return logits[:, 0, :], KVCache(new_k, new_v)

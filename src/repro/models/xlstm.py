@@ -1,0 +1,388 @@
+"""xLSTM (arXiv:2405.04517): mLSTM + sLSTM blocks at a 7:1 ratio.
+
+Attention-free — the PD-Swap *attention* RMs don't apply, but the
+prefill/decode asymmetry does and maps onto the same phase-engine machinery
+(DESIGN.md §4):
+
+* prefill RM  = **chunkwise-parallel** mLSTM (matrix-memory linear recurrence
+  evaluated block-parallel within chunks, sequential across chunks — the
+  compute-bound form), sLSTM via sequential scan.
+* decode RM   = **O(1) recurrent state update** per token (the
+  bandwidth-bound form: state + weights streaming, no KV cache at all).
+
+The chunkwise and recurrent forms are the same math; tests/test_xlstm.py
+asserts step-by-step decode equals chunkwise prefill to fp tolerance.
+
+Layer grouping for scan: layers come in groups of ``slstm_every`` =
+(slstm_every-1) mLSTM + 1 sLSTM, so the group is the scanned unit and both
+param stacks stay uniform.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.norm import apply_norm, norm_init
+from repro.layers.sharding import NULL_CTX, PartitionCtx
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array  # (B, H, dk, dv) matrix memory
+    n: jax.Array  # (B, H, dk) normalizer
+    m: jax.Array  # (B, H) stabilizer
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, H, hd)
+    n: jax.Array  # (B, H, hd)
+    h: jax.Array  # (B, H, hd)
+    m: jax.Array  # (B, H, hd)
+
+
+class XLSTMCache(NamedTuple):
+    """Grouped states: leaves have leading dim = n_groups (scan axis)."""
+
+    mlstm: MLSTMState  # (G, n_m, B, H, dk, dv) etc.
+    slstm: SLSTMState  # (G, B, H, hd)
+
+
+# ---------------------------------------------------------------- mLSTM ----
+
+
+def _mlstm_init(cfg: ModelConfig, key, dtype):
+    d, h = cfg.d_model, cfg.num_heads
+    ks = jax.random.split(key, 5)
+    s = 1.0 / d**0.5
+    mk = lambda k, shape: (jax.random.normal(k, shape, jnp.float32) * s).astype(dtype)
+    return {
+        "ln": norm_init("rmsnorm", d),
+        "w_qkv": mk(ks[0], (d, 3 * d)),
+        "w_if": mk(ks[1], (d, 2 * h)),
+        "w_og": mk(ks[2], (d, d)),
+        "w_out": mk(ks[3], (d, d)),
+        "hnorm": norm_init("rmsnorm", d),
+    }
+
+
+def _mlstm_chunk(q, k, v, it, ft, state: MLSTMState):
+    """One chunk, batch-parallel.  q/k/v: (B,H,c,hd); it/ft: (B,H,c).
+
+    [§Perf iteration X1] q/k/v arrive bf16 and are upcast HERE, on the
+    (B,H,c,hd) chunk — materializing f32 only at chunk granularity keeps the
+    (B,S,d)-sized streams bf16 (the memory term of the prefill program
+    halves); gate/stabilizer math stays f32 throughout.
+    """
+    q, k, v = (t.astype(jnp.float32) for t in (q, k, v))
+    b, h, c, dk = q.shape
+    f_cum = jnp.cumsum(ft, axis=-1)  # F_t
+    a = f_cum + state.m[..., None]  # (B,H,c) init-state branch
+    # D[t,s] = F_t - F_s + i_s for s<=t
+    dmat = f_cum[..., :, None] - f_cum[..., None, :] + it[..., None, :]
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    dmat = jnp.where(tri, dmat, -jnp.inf)
+    m_t = jnp.maximum(a, jnp.max(dmat, axis=-1))  # (B,H,c)
+    init_w = jnp.exp(a - m_t)  # (B,H,c)
+    inner_w = jnp.exp(dmat - m_t[..., None])  # (B,H,c,c)
+
+    qk = jnp.einsum("bhtd,bhsd->bhts", q, k)  # (B,H,c,c)
+    num = init_w[..., None] * jnp.einsum("bhtd,bhdv->bhtv", q, state.c) + jnp.einsum(
+        "bhts,bhts,bhsv->bhtv", inner_w, qk, v
+    )
+    den = init_w * jnp.einsum("bhtd,bhd->bht", q, state.n) + jnp.einsum(
+        "bhts,bhts->bht", inner_w, qk
+    )
+    h_out = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+    # end-of-chunk state
+    f_tot = f_cum[..., -1]  # (B,H)
+    m_new = jnp.maximum(f_tot + state.m, jnp.max(f_tot[..., None] - f_cum + it, axis=-1))
+    w_init = jnp.exp(f_tot + state.m - m_new)  # (B,H)
+    w_s = jnp.exp(f_tot[..., None] - f_cum + it - m_new[..., None])  # (B,H,c)
+    c_new = w_init[..., None, None] * state.c + jnp.einsum("bhs,bhsd,bhsv->bhdv", w_s, k, v)
+    n_new = w_init[..., None] * state.n + jnp.einsum("bhs,bhsd->bhd", w_s, k)
+    return h_out, MLSTMState(c_new, n_new, m_new)
+
+
+def _mlstm_step(q, k, v, it, ft, state: MLSTMState):
+    """Single-token recurrent update.  q/k/v: (B,H,hd); it/ft: (B,H)."""
+    m_new = jnp.maximum(ft + state.m, it)
+    w_f = jnp.exp(ft + state.m - m_new)[..., None]
+    w_i = jnp.exp(it - m_new)[..., None]
+    c_new = w_f[..., None] * state.c + w_i[..., None] * (k[..., :, None] * v[..., None, :])
+    n_new = w_f * state.n + w_i * k
+    num = jnp.einsum("bhd,bhdv->bhv", q, c_new)
+    den = jnp.einsum("bhd,bhd->bh", q, n_new)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h, MLSTMState(c_new, n_new, m_new)
+
+
+def _mlstm_project(p, x, cfg):
+    """[§Perf iteration X1] Projections run in the weight dtype (bf16) with
+    f32 accumulation — (B,S,d)-sized q/k/v/og streams stay bf16; only the
+    (B,H,S) gate pre-activations (d/hd-times smaller) are f32."""
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.d_model // cfg.num_heads
+    xn = apply_norm(p["ln"], x, "rmsnorm", cfg.norm_eps).astype(p["w_qkv"].dtype)
+    qkv = xn @ p["w_qkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    shp = (b, s, h, hd)
+    q = q.reshape(shp).transpose(0, 2, 1, 3)
+    k = (k / hd**0.5).reshape(shp).transpose(0, 2, 1, 3)
+    v = v.reshape(shp).transpose(0, 2, 1, 3)
+    gates = (xn @ p["w_if"]).astype(jnp.float32)  # (B,S,2H) — small, f32 math
+    it = gates[..., :h].transpose(0, 2, 1)  # (B,H,S) input gate (exp)
+    ft = jax.nn.log_sigmoid(gates[..., h:]).transpose(0, 2, 1)  # log f in (-inf,0)
+    og = jax.nn.sigmoid((xn @ p["w_og"]).astype(jnp.float32)).astype(xn.dtype)  # (B,S,d)
+    return q, k, v, it, ft, og, xn
+
+
+def _mlstm_finish(p, x, h_seq, og, cfg):
+    """h_seq: (B,H,S,hd) -> residual output (bf16 streams, f32 accum)."""
+    b, _, s, _ = h_seq.shape
+    h_flat = h_seq.transpose(0, 2, 1, 3).reshape(b, s, cfg.d_model)
+    h_flat = apply_norm(p["hnorm"], h_flat.astype(x.dtype), "rmsnorm", cfg.norm_eps)
+    out = (og.astype(h_flat.dtype) * h_flat) @ p["w_out"]
+    return x + out.astype(x.dtype)
+
+
+def mlstm_prefill(p, x, state: MLSTMState, cfg: ModelConfig, chunk: int = 64):
+    b, s, d = x.shape
+    q, k, v, it, ft, og, _ = _mlstm_project(p, x, cfg)
+    if cfg.attn_impl == "stub":
+        # Kernel-substituted lowering: the chunkwise recurrence core is the
+        # Pallas mlstm kernel (kernels/costs.mlstm_chunk_cost); projections
+        # and the output path stay real.  [§Perf X2]
+        return _mlstm_finish(p, x, q, og, cfg), state
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:  # pad with f=0(log f=-inf would kill state; use f=1 -> log 0? pad i with -inf so padded steps are no-ops)
+        q, k, v = (jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0))) for t in (q, k, v))
+        it = jnp.pad(it, ((0, 0), (0, 0), (0, pad)), constant_values=-1e30)
+        ft = jnp.pad(ft, ((0, 0), (0, 0), (0, pad)))
+    nc = (s + pad) // c
+    resh = lambda t: jnp.moveaxis(t.reshape(b, cfg.num_heads, nc, c, -1), 2, 0)
+    qs, ks, vs = resh(q), resh(k), resh(v)
+    its = jnp.moveaxis(it.reshape(b, cfg.num_heads, nc, c), 2, 0)
+    fts = jnp.moveaxis(ft.reshape(b, cfg.num_heads, nc, c), 2, 0)
+
+    def body(st, inp):
+        qc, kc, vc, ic, fc = inp
+        h_out, st = _mlstm_chunk(qc, kc, vc, ic, fc, st)
+        return st, h_out.astype(x.dtype)  # stack the output stream in bf16
+
+    body = jax.checkpoint(body)
+    state, hs = jax.lax.scan(body, state, (qs, ks, vs, its, fts))
+    h_seq = jnp.moveaxis(hs, 0, 2).reshape(b, cfg.num_heads, nc * c, -1)[:, :, :s]
+    return _mlstm_finish(p, x, h_seq, og, cfg), state
+
+
+def mlstm_decode(p, x, state: MLSTMState, cfg: ModelConfig):
+    q, k, v, it, ft, og, _ = _mlstm_project(p, x, cfg)  # S=1
+    h, state = _mlstm_step(q[:, :, 0], k[:, :, 0], v[:, :, 0], it[:, :, 0], ft[:, :, 0], state)
+    return _mlstm_finish(p, x, h[:, :, None, :], og, cfg), state
+
+
+# ---------------------------------------------------------------- sLSTM ----
+
+
+def _slstm_init(cfg: ModelConfig, key, dtype):
+    d, h = cfg.d_model, cfg.num_heads
+    hd = d // h
+    ks = jax.random.split(key, 3)
+    s = 1.0 / d**0.5
+    return {
+        "ln": norm_init("rmsnorm", d),
+        "w": (jax.random.normal(ks[0], (d, 4 * d), jnp.float32) * s).astype(dtype),
+        "r": (jax.random.normal(ks[1], (h, hd, 4 * hd), jnp.float32) * (1.0 / hd**0.5)).astype(dtype),
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "w_out": (jax.random.normal(ks[2], (d, d), jnp.float32) * s).astype(dtype),
+        "hnorm": norm_init("rmsnorm", d),
+    }
+
+
+def _slstm_step(p, wx_t, state: SLSTMState, cfg: ModelConfig):
+    """wx_t: precomputed W x_t (B, 4d).  Recurrent R h_{t-1} added here."""
+    b = wx_t.shape[0]
+    h_, hd = cfg.num_heads, cfg.d_model // cfg.num_heads
+    rh = jnp.einsum("bhd,hde->bhe", state.h.astype(jnp.float32), p["r"].astype(jnp.float32))
+    pre = wx_t.reshape(b, h_, 4 * hd) + rh + p["b"].reshape(h_, 4 * hd)
+    zt, it, ft, ot = jnp.split(pre, 4, axis=-1)  # (B,H,hd) each
+    z = jnp.tanh(zt)
+    o = jax.nn.sigmoid(ot)
+    ft = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(ft + state.m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(ft + state.m - m_new)
+    c_new = f_p * state.c + i_p * z
+    n_new = f_p * state.n + i_p
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return SLSTMState(c_new, n_new, h_new, m_new)
+
+
+def slstm_forward(p, x, state: SLSTMState, cfg: ModelConfig):
+    """Sequential over S (sLSTM has no parallel form — by design).
+
+    [§Perf iteration X1] The (B,S,4d) pre-activation stream and the stacked
+    h outputs stay bf16; the per-step gate/state math upcasts the (B,4d)
+    step slice to f32 inside the scan body."""
+    b, s, d = x.shape
+    xn = apply_norm(p["ln"], x, "rmsnorm", cfg.norm_eps).astype(p["w"].dtype)
+    wx = xn @ p["w"]  # (B,S,4d) bf16 stream
+    if cfg.attn_impl == "stub":
+        # sLSTM recurrence core as a Pallas kernel (slstm_scan_cost) [§Perf X2]
+        # (wx sliced so the W projection — real, non-kernel work — stays live)
+        h_seq = apply_norm(p["hnorm"], wx[..., :d].astype(x.dtype), "rmsnorm", cfg.norm_eps)
+        out = h_seq @ p["w_out"].astype(h_seq.dtype)
+        return x + out.astype(x.dtype), state
+
+    def body(st, wx_t):
+        st = _slstm_step(p, wx_t.astype(jnp.float32), st, cfg)
+        return st, st.h.astype(x.dtype)
+
+    state, hs = jax.lax.scan(body, state, jnp.moveaxis(wx, 1, 0))
+    h_seq = jnp.moveaxis(hs, 0, 1).reshape(b, s, d)
+    h_seq = apply_norm(p["hnorm"], h_seq.astype(x.dtype), "rmsnorm", cfg.norm_eps)
+    out = h_seq @ p["w_out"].astype(h_seq.dtype)
+    return x + out.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------- model ----
+
+
+def _group_counts(cfg: ModelConfig) -> Tuple[int, int]:
+    g = cfg.slstm_every
+    assert cfg.num_layers % g == 0, (cfg.num_layers, g)
+    return cfg.num_layers // g, g - 1  # (n_groups, mlstm per group)
+
+
+def init(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> dict:
+    ng, nm = _group_counts(cfg)
+    vp = cfg.padded_vocab()
+    ke, km, ks, kh = jax.random.split(key, 4)
+
+    def group_init(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "mlstm": jax.vmap(lambda kk: _mlstm_init(cfg, kk, dtype))(jax.random.split(k1, nm)),
+            "slstm": _slstm_init(cfg, k2, dtype),
+        }
+
+    return {
+        "emb": (jax.random.normal(ke, (vp, cfg.d_model), jnp.float32) * 0.02).astype(dtype),
+        "groups": jax.vmap(group_init)(jax.random.split(km, ng)),
+        "ln_f": norm_init("rmsnorm", cfg.d_model),
+        "lm_head": (jax.random.normal(kh, (cfg.d_model, vp), jnp.float32) * 0.02).astype(dtype),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int = 0, dtype=jnp.float32) -> XLSTMCache:
+    ng, nm = _group_counts(cfg)
+    h = cfg.num_heads
+    hd = cfg.d_model // h
+    m = MLSTMState(
+        c=jnp.zeros((ng, nm, batch, h, hd, hd), dtype),
+        n=jnp.zeros((ng, nm, batch, h, hd), dtype),
+        m=jnp.full((ng, nm, batch, h), -1e30, dtype),
+    )
+    s = SLSTMState(
+        c=jnp.zeros((ng, batch, h, hd), dtype),
+        n=jnp.zeros((ng, batch, h, hd), dtype),
+        h=jnp.zeros((ng, batch, h, hd), dtype),
+        m=jnp.full((ng, batch, h, hd), -1e30, dtype),
+    )
+    return XLSTMCache(m, s)
+
+
+def _forward(params, tokens, cfg, pctx, cache: XLSTMCache, *, mode: str, last_only: bool = False):
+    b, s = tokens.shape
+    x = params["emb"][tokens]
+    x = pctx.shard(x, "batch", "seq", "embed")
+
+    def group_body(x, scanned):
+        gp, mstate, sstate = scanned
+
+        def m_body(x, inner):
+            mp, mst = inner
+            if mode == "decode":
+                x, mst = mlstm_decode(mp, x, mst, cfg)
+            else:
+                x, mst = mlstm_prefill(mp, x, mst, cfg)
+            return x, mst
+
+        x, new_m = jax.lax.scan(m_body, x, (gp["mlstm"], mstate))
+        if mode == "decode":
+            new_s = _slstm_decode_block(gp["slstm"], x, sstate, cfg)
+            x, new_s = new_s
+        else:
+            x, new_s = slstm_forward(gp["slstm"], x, sstate, cfg)
+        return x, (new_m, new_s)
+
+    if cfg.remat != "none" and mode == "train":
+        from repro.models.transformer import _remat
+
+        group_body = _remat(group_body, cfg)
+    x, (new_m, new_s) = jax.lax.scan(group_body, x, (params["groups"], cache.mlstm, cache.slstm))
+    x = apply_norm(params["ln_f"], x, "rmsnorm", cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:, :]
+    logits = x.astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
+    return pctx.shard(logits, "batch", "seq", "vocab"), XLSTMCache(new_m, new_s)
+
+
+def forward_hidden(params, tokens, cfg, pctx: PartitionCtx = NULL_CTX):
+    """Final normed hidden states (B,S,d) for the chunked loss."""
+    b, s = tokens.shape
+    x = params["emb"][tokens]
+    x = pctx.shard(x, "batch", "seq", "embed")
+    cache = init_cache(cfg, b)
+
+    def group_body(x, scanned):
+        gp, mstate, sstate = scanned
+
+        def m_body(x, inner):
+            mp, mst = inner
+            x, mst = mlstm_prefill(mp, x, mst, cfg)
+            return x, mst
+
+        x, _ = jax.lax.scan(m_body, x, (gp["mlstm"], mstate))
+        x, _ = slstm_forward(gp["slstm"], x, sstate, cfg)
+        return x, None
+
+    if cfg.remat != "none":
+        from repro.models.transformer import _remat
+
+        group_body = _remat(group_body, cfg)
+    x, _ = jax.lax.scan(group_body, x, (params["groups"], cache.mlstm, cache.slstm))
+    return apply_norm(params["ln_f"], x, "rmsnorm", cfg.norm_eps)
+
+
+def _slstm_decode_block(p, x, state, cfg):
+    return slstm_forward(p, x, state, cfg)
+
+
+def forward_train(params, tokens, cfg, pctx: PartitionCtx = NULL_CTX):
+    logits, _ = _forward(params, tokens, cfg, pctx, init_cache(cfg, tokens.shape[0]), mode="train")
+    return logits, jnp.float32(0)
+
+
+def loss_fn(params, batch, cfg, pctx: PartitionCtx = NULL_CTX, aux_weight: float = 0.0):
+    from repro.train.losses import chunked_ce_loss
+
+    x = forward_hidden(params, batch["tokens"], cfg, pctx)
+    loss = chunked_ce_loss(x, params["lm_head"], batch["targets"], batch["mask"], pctx)
+    return loss, {"nll": loss, "aux": jnp.float32(0)}
+
+
+def forward_prefill(params, tokens, cfg, pctx: PartitionCtx = NULL_CTX):
+    cache = init_cache(cfg, tokens.shape[0])
+    logits, cache = _forward(params, tokens, cfg, pctx, cache, mode="prefill", last_only=True)
+    return logits[:, -1, :], cache
+
+
+def decode_step(params, token, cache: XLSTMCache, lengths, cfg, pctx: PartitionCtx = NULL_CTX):
+    logits, cache = _forward(params, token[:, None], cfg, pctx, cache, mode="decode")
+    return logits[:, 0, :], cache

@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamWConfig, AdamWState, adamw_init, adamw_update, global_norm
+from repro.optim.schedules import warmup_cosine, wsd, SCHEDULES
+from repro.optim.compression import compressed_mean_over_axis, init_error_feedback

@@ -1,0 +1,27 @@
+"""LR schedules: cosine, linear, and WSD (warmup-stable-decay, MiniCPM)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd(step, *, peak_lr: float, warmup: int, total: int, decay_frac: float = 0.1,
+        final_frac: float = 0.01):
+    """MiniCPM's warmup-stable-decay: flat plateau, late exponential-ish decay."""
+    step = jnp.asarray(step, jnp.float32)
+    decay_start = total * (1 - decay_frac)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - decay_start) / jnp.maximum(total - decay_start, 1), 0.0, 1.0)
+    dec = peak_lr * jnp.exp(jnp.log(final_frac) * prog)
+    out = jnp.where(step < warmup, warm, peak_lr)
+    return jnp.where(step > decay_start, dec, out)
+
+
+SCHEDULES = {"cosine": warmup_cosine, "wsd": wsd}

@@ -1,0 +1,8 @@
+from repro.quant.ternary import (
+    ternary_quantize,
+    ternary_quantize_ste,
+    pack_ternary,
+    unpack_ternary,
+    TernaryWeight,
+)
+from repro.quant.act_quant import quantize_activations_int8

@@ -1,0 +1,19 @@
+"""Per-token int8 activation quantization (the A8 side of W1.58-A8)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_activations_int8(x: jax.Array, eps: float = 1e-5) -> Tuple[jax.Array, jax.Array]:
+    """Per-token absmax int8 quantization.
+
+    x: (..., K) float -> (x_q int8 (..., K), scale f32 (..., 1)) with
+    x ~= x_q * scale.  BitNet uses symmetric absmax per token.
+    """
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = absmax / 127.0 + eps
+    x_q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return x_q, scale

@@ -1,0 +1,1 @@
+from repro.train.trainer import TrainConfig, make_train_step, jit_train_step, init_train_state, train_pctx

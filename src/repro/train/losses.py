@@ -1,0 +1,46 @@
+"""Cross-entropy without materializing (B, S, V) logits.
+
+At assigned-architecture scale the full logits tensor is the classic OOM:
+qwen2.5-14b train_4k would need 256 x 4096 x 152064 x 4 B ≈ 638 TB.  The loss
+scans over sequence chunks; each chunk's logits live only inside the scan
+body (recomputed in backward), so the live set is (B, chunk, V_shard).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.sharding import NULL_CTX, PartitionCtx
+
+
+def chunked_ce_loss(
+    x: jax.Array,  # (B, S, d) final hidden states
+    head: jax.Array,  # (d, Vp)
+    targets: jax.Array,  # (B, S)
+    mask: jax.Array,  # (B, S)
+    pctx: PartitionCtx = NULL_CTX,
+    chunk: int = 256,
+) -> jax.Array:
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = (s + pad) // chunk
+    xs = jnp.moveaxis(x.reshape(b, nc, chunk, d), 1, 0)
+    ts = jnp.moveaxis(targets.reshape(b, nc, chunk), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(b, nc, chunk), 1, 0)
+
+    def body(acc, inp):
+        xc, tc, mc = inp
+        logits = xc.astype(jnp.float32) @ head.astype(jnp.float32)  # (B, chunk, Vp)
+        logits = pctx.shard(logits, "batch", "seq", "vocab")
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum((lse - tgt) * mc), None
+
+    body = jax.checkpoint(body)
+    total, _ = jax.lax.scan(body, jnp.float32(0), (xs, ts, ms))
+    return total / jnp.maximum(jnp.sum(mask), 1)

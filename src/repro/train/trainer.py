@@ -1,0 +1,141 @@
+"""Distributed train step: FSDP x TP, microbatch accumulation, remat,
+optional compressed cross-pod DP (beyond-paper).
+
+Global-view pjit: batch sharded over the dp axes, params/optimizer FSDP+TP
+sharded via launch.sharding_rules; scan-over-layers keeps the HLO one layer
+deep; microbatch accumulation is a ``lax.scan`` over batch slices so weight
+all-gathers (FSDP) pipeline against compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.phase_engine import make_pctx
+from repro.layers.sharding import PartitionCtx, TRAIN_RULES
+from repro.models import get_model
+from repro.optim.adamw import AdamWConfig, AdamWState, adamw_init, adamw_update
+from repro.optim.schedules import SCHEDULES
+from repro.launch.sharding_rules import params_shardings
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    schedule: str = "cosine"  # cosine | wsd (minicpm)
+    warmup: int = 100
+    total_steps: int = 1000
+    microbatches: int = 1
+    adamw: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    aux_weight: float = 0.01
+
+
+def train_pctx(mesh: Optional[Mesh]) -> PartitionCtx:
+    from repro.core.phase_engine import _mesh_axes
+
+    return PartitionCtx(mesh=mesh, axes=_mesh_axes(mesh), rules=dict(TRAIN_RULES))
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh: Optional[Mesh] = None) -> Callable:
+    """Returns train_step(params, opt_state, batch, step) -> (params, opt, metrics)."""
+    api = get_model(cfg)
+    pctx = train_pctx(mesh)
+    sched = SCHEDULES[tcfg.schedule]
+
+    def loss_of(params, batch):
+        loss, metrics = api.loss_fn(params, batch, cfg, pctx, aux_weight=tcfg.aux_weight)
+        return loss, metrics
+
+    def grads_of(params, batch):
+        if tcfg.microbatches <= 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        def mb_slice(b, i):
+            n = tcfg.microbatches
+            return jax.tree.map(
+                lambda x: jax.lax.dynamic_slice_in_dim(x, i * (x.shape[0] // n), x.shape[0] // n, 0),
+                b,
+            )
+
+        def body(carry, i):
+            loss_acc, grads_acc = carry
+            (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                params, mb_slice(batch, i)
+            )
+            grads_acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), grads_acc, grads)
+            return (loss_acc + loss, grads_acc), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grads), _ = jax.lax.scan(
+            body, (jnp.float32(0), zeros), jnp.arange(tcfg.microbatches)
+        )
+        n = tcfg.microbatches
+        grads = jax.tree.map(lambda g: (g / n), grads)
+        return loss_sum / n, {"nll": loss_sum / n}, grads
+
+    def train_step(params, opt_state: AdamWState, batch, step):
+        loss, metrics, grads = grads_of(params, batch)
+        lr = sched(step, peak_lr=tcfg.lr, warmup=tcfg.warmup, total=tcfg.total_steps)
+        params, opt_state, om = adamw_update(grads, opt_state, params, lr, tcfg.adamw)
+        out_metrics = {"loss": loss, "lr": lr, **{k: v for k, v in metrics.items() if v.ndim == 0}, **om}
+        return params, opt_state, out_metrics
+
+    return train_step
+
+
+def jit_train_step(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    mesh: Optional[Mesh],
+    params_abstract: Any,
+    *,
+    donate: bool = True,
+):
+    """AOT-ready jitted step with full in/out shardings (dry-run entry)."""
+    step_fn = make_train_step(cfg, tcfg, mesh)
+    if mesh is None:
+        return jax.jit(step_fn, donate_argnums=(0, 1) if donate else ())
+
+    psh = params_shardings(params_abstract, cfg, mesh, train=True)
+    opt_abstract = jax.eval_shape(adamw_init, params_abstract)
+    osh = AdamWState(
+        step=NamedSharding(mesh, P()),
+        mu=psh,
+        nu=psh,
+    )
+    pctx = train_pctx(mesh)
+    batch_sh = {
+        "tokens": pctx.named_sharding("batch", "seq"),
+        "targets": pctx.named_sharding("batch", "seq"),
+        "mask": pctx.named_sharding("batch", "seq"),
+    }
+    if cfg.family == "encdec":
+        batch_sh["frames"] = pctx.named_sharding("batch", "seq", "embed")
+    return jax.jit(
+        step_fn,
+        in_shardings=(psh, osh, batch_sh, NamedSharding(mesh, P())),
+        out_shardings=(psh, osh, None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+
+
+def init_train_state(cfg: ModelConfig, key, mesh: Optional[Mesh] = None, dtype=jnp.float32):
+    api = get_model(cfg)
+    params = api.init(cfg, key, dtype=dtype)
+    opt = adamw_init(params)
+    if mesh is not None:
+        psh = params_shardings(params, cfg, mesh, train=True)
+        params = jax.tree.map(jax.device_put, params, psh)
+        opt = AdamWState(
+            step=jax.device_put(opt.step, NamedSharding(mesh, P())),
+            mu=jax.tree.map(jax.device_put, opt.mu, psh),
+            nu=jax.tree.map(jax.device_put, opt.nu, psh),
+        )
+    return params, opt

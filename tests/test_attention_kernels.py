@@ -1,0 +1,160 @@
+"""Prefill/decode attention kernels: shape/dtype/schedule sweeps vs oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.prefill_attention.ops import prefill_attention
+from repro.kernels.prefill_attention.ref import prefill_attention_reference
+
+
+def _qkv(b, h, hkv, s, d, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("schedule", ["reverse", "forward"])
+@pytest.mark.parametrize(
+    "b,h,hkv,s,d,blk",
+    [
+        (1, 2, 2, 128, 64, 64),
+        (2, 4, 2, 256, 64, 64),
+        (2, 8, 2, 128, 128, 128),  # single kv block
+        (1, 3, 1, 192, 32, 64),  # odd head count, GQA g=3
+    ],
+)
+def test_prefill_kernel_sweep(schedule, b, h, hkv, s, d, blk):
+    q, k, v = _qkv(b, h, hkv, s, d, seed=s + h)
+    ref = prefill_attention_reference(q, k, v)
+    out = prefill_attention(q, k, v, blk=blk, schedule=schedule, use_kernel=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_prefill_bf16():
+    q, k, v = _qkv(1, 2, 2, 128, 64, dtype=jnp.bfloat16)
+    ref = prefill_attention_reference(q, k, v)
+    out = prefill_attention(q, k, v, blk=64, use_kernel=True, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=3e-2, atol=3e-2
+    )
+
+
+def test_prefill_reverse_equals_forward():
+    """The paper's reverse schedule is a pure reordering — identical output."""
+    q, k, v = _qkv(2, 4, 4, 256, 64, seed=3)
+    a = prefill_attention(q, k, v, blk=64, schedule="reverse", use_kernel=True, interpret=True)
+    b = prefill_attention(q, k, v, blk=64, schedule="forward", use_kernel=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "b,h,hkv,s,d,bk",
+    [
+        (2, 4, 2, 256, 64, 64),
+        (1, 8, 1, 512, 64, 128),  # MQA
+        (3, 6, 2, 128, 32, 32),
+        (2, 2, 2, 64, 128, 64),  # MHA single block
+    ],
+)
+def test_decode_kernel_sweep(b, h, hkv, s, d, bk):
+    rng = np.random.default_rng(b * s + d)
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    lengths = jnp.asarray(rng.integers(1, s + 1, size=(b,)), jnp.int32)
+    ref = decode_attention(q, k, v, lengths, use_kernel=False)
+    out = decode_attention(q, k, v, lengths, bk=bk, use_kernel=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+@given(
+    st.integers(1, 3),  # batch
+    st.integers(1, 4),  # kv heads
+    st.integers(1, 4),  # group size
+    st.sampled_from([64, 128, 192]),  # cache len
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_decode_window_property(b, hkv, g, s, seed):
+    """Sliding-window decode == full decode over the truncated cache."""
+    rng = np.random.default_rng(seed)
+    h = hkv * g
+    d = 32
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    length = int(rng.integers(1, s + 1))
+    window = int(rng.integers(1, length + 1))
+    lengths = jnp.full((b,), length, jnp.int32)
+    starts = jnp.full((b,), length - window, jnp.int32)
+    out = decode_attention(q, k, v, lengths, starts, bk=32, use_kernel=True, interpret=True)
+    # oracle: zero-out everything outside the window by slicing
+    ref = decode_attention(
+        q, k[:, :, length - window : length], v[:, :, length - window : length],
+        jnp.full((b,), window, jnp.int32), use_kernel=False,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_decode_stats_merge_matches_appended_cache(use_kernel):
+    """attend(cache) + online-softmax merge of a fresh token ==
+    attend(cache with the token appended) — the [§Perf D2] decode identity
+    (attend-then-merge replaces update-then-attend)."""
+    import math
+
+    from repro.layers.attention import _merge_new_token
+
+    rng = np.random.default_rng(7)
+    b, hkv, g, s, d = 2, 2, 3, 64, 32
+    h = hkv * g
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    lengths = jnp.asarray([13, 40], jnp.int32)
+    k_new = jnp.asarray(rng.normal(size=(b, hkv, 1, d)), jnp.float32)
+    v_new = jnp.asarray(rng.normal(size=(b, hkv, 1, d)), jnp.float32)
+    sm = 1.0 / math.sqrt(d)
+
+    out_c, l_c, m_c = decode_attention(
+        q, k, v, lengths, use_kernel=use_kernel, interpret=True, bk=32, return_stats=True
+    )
+    merged = _merge_new_token(out_c, l_c, m_c, q, k_new, v_new, sm)
+
+    # reference: physically append the token at position `length`
+    def append(buf, new):
+        return jnp.stack([
+            jax.lax.dynamic_update_slice(buf[i], new[i], (0, int(lengths[i]), 0))
+            for i in range(b)
+        ])
+
+    k2, v2 = append(k, k_new), append(v, v_new)
+    ref = decode_attention(q, k2, v2, lengths + 1, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(ref), rtol=3e-5, atol=3e-5)
+
+
+def test_decode_stats_empty_cache_merge_is_new_token_only():
+    """lengths=0: merge must return attention over just the fresh token
+    (softmax of one logit = that token's V)."""
+    import math
+
+    from repro.layers.attention import _merge_new_token
+
+    rng = np.random.default_rng(8)
+    b, hkv, g, s, d = 1, 1, 2, 32, 16
+    h = hkv * g
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    k_new = jnp.asarray(rng.normal(size=(b, hkv, 1, d)), jnp.float32)
+    v_new = jnp.asarray(rng.normal(size=(b, hkv, 1, d)), jnp.float32)
+    lengths = jnp.zeros((b,), jnp.int32)
+    out_c, l_c, m_c = decode_attention(q, k, v, lengths, return_stats=True)
+    merged = _merge_new_token(out_c, l_c, m_c, q, k_new, v_new, 1.0 / math.sqrt(d))
+    expect = jnp.broadcast_to(v_new[:, :, 0, :][:, :, None, :], (b, hkv, g, d)).reshape(b, h, d)
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(expect), atol=1e-5)

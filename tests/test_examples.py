@@ -1,0 +1,40 @@
+"""Smoke tests for the runnable examples (subprocess, minimal args)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _run_example(name: str, *args: str, timeout: int = 420) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    out = subprocess.run(
+        [sys.executable, str(REPO / "examples" / name), *args],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_dse_explore():
+    out = _run_example("dse_explore.py", "--arch", "deepseek-7b")
+    assert "logic swapping wins" in out
+
+
+def test_serve_pdswap():
+    out = _run_example("serve_pdswap.py", "--requests", "3", "--max-new", "4")
+    assert "greedy outputs identical across engines: True" in out
+
+
+def test_train_cli_short():
+    from repro.launch import train as train_cli
+
+    rc = train_cli.main([
+        "--arch", "smollm-135m", "--reduced", "--steps", "4",
+        "--batch", "2", "--seq", "32", "--log-every", "2",
+    ])
+    assert rc == 0

@@ -1,0 +1,174 @@
+"""Hypothesis property tests on the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.configs.base import QuantConfig
+from repro.core.dse import DseConfig, run_dse
+from repro.core.kv_cache import KVSlotManager
+from repro.kernels.decode_attention.ops import _decode_attention_streaming
+from repro.kernels.decode_attention.ref import decode_attention_reference
+from repro.quant.act_quant import quantize_activations_int8
+from repro.quant.ternary import pack_ternary, ternary_quantize, unpack_ternary
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ------------------------------------------------------------ quantization --
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8), st.integers(1, 64))
+@settings(**SETTINGS)
+def test_ternary_pack_roundtrip(seed, rows_q, n):
+    rng = np.random.default_rng(seed)
+    w = rng.integers(-1, 2, size=(rows_q * 4, n)).astype(np.int8)
+    packed = pack_ternary(jnp.asarray(w))
+    assert packed.shape == (rows_q, n)
+    out = np.asarray(unpack_ternary(packed))
+    np.testing.assert_array_equal(out, w)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_ternary_quantize_codes_and_scale(seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(64, 32)).astype(np.float32)
+    wq, beta = ternary_quantize(jnp.asarray(w))
+    assert set(np.unique(np.asarray(wq))) <= {-1, 0, 1}
+    assert float(beta) > 0
+    # absmean property: beta approximates mean |w|
+    np.testing.assert_allclose(float(beta), np.abs(w).mean(), rtol=0.3)
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.1, 100.0))
+@settings(**SETTINGS)
+def test_int8_activation_quant_bounds_error(seed, scale):
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=(4, 128)) * scale).astype(np.float32)
+    xq, s = quantize_activations_int8(jnp.asarray(x))
+    assert xq.dtype == jnp.int8
+    recon = np.asarray(xq, np.float32) * np.asarray(s)
+    err = np.abs(recon - x).max()
+    assert err <= np.abs(x).max() / 127.0 + 1e-6  # one quantization step
+
+
+# ------------------------------------------------ decode attention masking --
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3), st.integers(1, 4))
+@settings(**SETTINGS)
+def test_decode_streaming_matches_oracle(seed, hkv, g):
+    rng = np.random.default_rng(seed)
+    b, s, d = 2, 32, 16
+    q = jnp.asarray(rng.normal(size=(b, hkv, g, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    lengths = jnp.asarray(rng.integers(1, s + 1, size=(b,)), jnp.int32)
+    ours = _decode_attention_streaming(q, k, v, lengths, None)
+    oracle = decode_attention_reference(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(ours), np.asarray(oracle), atol=2e-5)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_decode_attention_ignores_positions_beyond_length(seed):
+    """Garbage in the cache tail must never leak into the output."""
+    rng = np.random.default_rng(seed)
+    b, hkv, g, s, d = 2, 2, 2, 24, 8
+    q = jnp.asarray(rng.normal(size=(b, hkv, g, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    lengths = jnp.asarray([7, 13], jnp.int32)
+    base = _decode_attention_streaming(q, k, v, lengths, None)
+    k2 = k.at[:, :, 15:].set(1e6)  # poison the dead tail
+    v2 = v.at[:, :, 15:].set(-1e6)
+    poisoned = _decode_attention_streaming(q, k2, v2, lengths, None)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(poisoned), atol=1e-6)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 16))
+@settings(**SETTINGS)
+def test_sliding_window_equals_truncated_cache(seed, window):
+    rng = np.random.default_rng(seed)
+    b, hkv, g, s, d = 1, 1, 2, 32, 8
+    length = 24
+    q = jnp.asarray(rng.normal(size=(b, hkv, g, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    lengths = jnp.full((b,), length, jnp.int32)
+    starts = jnp.maximum(0, lengths - window)
+    windowed = _decode_attention_streaming(q, k, v, lengths, starts)
+    # reference: physically truncate the cache to [start, length)
+    lo = int(starts[0])
+    kt = k[:, :, lo:length]
+    vt = v[:, :, lo:length]
+    full = decode_attention_reference(q, kt, vt, jnp.full((b,), length - lo, jnp.int32))
+    np.testing.assert_allclose(np.asarray(windowed), np.asarray(full), atol=2e-5)
+
+
+# ------------------------------------------------------------- DSE (Eq. 2) --
+
+
+@given(st.sampled_from(["bitnet-730m", "qwen2.5-14b", "deepseek-7b", "hymba-1.5b"]))
+@settings(max_examples=8, deadline=None)
+def test_dse_feasible_points_satisfy_eq2(arch):
+    cfg = get_config(arch)
+    from repro.common.hardware import DEFAULT_CHIP
+
+    for pt in run_dse(cfg):
+        if pt.feasible:
+            c = pt.config
+            occ = c.vmem_static() + max(c.vmem_prefill(cfg), c.vmem_decode(cfg))
+            assert occ <= DEFAULT_CHIP.vmem_bytes  # Eq. (2)
+            assert pt.vmem_bytes == occ
+
+
+def test_dse_swap_never_loses_to_static():
+    """Time-sharing one region (max) dominates co-residency (sum): any
+    static-feasible config is swap-feasible, so the swap optimum can only
+    be better or equal (Eq. 6)."""
+    for arch in ("bitnet-730m", "minicpm-2b"):
+        cfg = get_config(arch)
+        swap = min(p.objective for p in run_dse(cfg) if p.feasible)
+        static = min(p.objective for p in run_dse(cfg, static_baseline=True) if p.feasible)
+        assert swap <= static + 1e-9
+
+
+# ------------------------------------------------------------ slot manager --
+
+
+@given(st.lists(st.tuples(st.integers(1, 16), st.integers(1, 8)), min_size=1, max_size=24))
+@settings(**SETTINGS)
+def test_slot_manager_conservation(reqs):
+    """Slots are never double-assigned; every request finishes exactly once."""
+    mgr = KVSlotManager(4)
+    pending = list(enumerate(reqs))
+    finished = []
+    active = {}
+    while pending or mgr.active_slots():
+        while pending and mgr.free_slots():
+            rid, (length, max_new) = pending.pop()
+            slot = mgr.assign(f"r{rid}", length, max_new)
+            assert slot not in active
+            active[slot] = rid
+        assert len(set(mgr.active_slots())) == len(mgr.active_slots())
+        mgr.step(finished_cb=lambda i, s: finished.append(active.pop(i)))
+    assert sorted(finished) == sorted(r for r, _ in enumerate(reqs))
+
+
+# ------------------------------------------------------- data determinism --
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_data_pipeline_restart_exact(seed, step):
+    from repro.data.pipeline import DataConfig, make_source
+
+    cfg = DataConfig(batch=4, seq_len=32, vocab_size=997, seed=seed)
+    a = make_source(cfg).batch(step)
+    b = make_source(cfg).batch(step)  # fresh instance = simulated restart
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["targets"], b["targets"])
+    assert a["tokens"].max() < 997 and a["tokens"].min() >= 0
