@@ -1,0 +1,123 @@
+"""Paged vs contiguous KV cache: decode throughput and KV memory footprint.
+
+The paper's decode engine is bandwidth-optimized and KV-cache-centric: every
+decoded token streams the accumulated KV (Eq. 5), so both the *bytes held*
+and the *bytes streamed* scale with context.  The seed runtime reserved
+``max_len`` positions per slot; the paged layout
+(``repro.serving.paging``) allocates ``block_size``-token pages on demand
+and shares page-aligned prompt prefixes, so a ragged-length workload holds
+only what it uses.
+
+This benchmark runs the REAL ServingEngine (tiny functional config on this
+host) across context-length regimes in the style of
+``fig6_decode_throughput.py`` and reports, per regime and layout:
+
+* decode tok/s measured on this host (functional, not TPU-representative),
+* KV bytes reserved up front vs peak bytes actually backing live tokens,
+* prefix-cache hit pages and preemption counts (paged only),
+* the modeled v5e decode time saved by streaming actual-length rather than
+  max_len KV (the bandwidth term of Eq. 5 — the quantity the Pallas paged
+  kernel's block-table walk realizes on real hardware).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.common.hardware import TPU_V5E
+
+from .common import save_result
+
+
+def _workload(rng, vocab, n_req, lo, hi, shared_frac=0.5):
+    """Ragged prompts; ~half the requests share a common prefix."""
+    base = rng.integers(0, vocab, size=hi).astype(np.int32)
+    prompts = []
+    for i in range(n_req):
+        n = int(rng.integers(lo, hi + 1))
+        if i % 2 == 1:  # shared-prefix cohort
+            keep = max(lo, int(n * shared_frac))
+            p = np.concatenate([base[:keep], rng.integers(0, vocab, size=n - keep).astype(np.int32)])
+        else:
+            p = rng.integers(0, vocab, size=n).astype(np.int32)
+        prompts.append(p)
+    return prompts
+
+
+def run() -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import reduced_config
+    from repro.models import get_model
+    from repro.serving.engine import Request, ServingEngine
+
+    cfg = reduced_config("bitnet-730m", num_layers=3, d_model=128, vocab_size=512,
+                         num_heads=4, num_kv_heads=2)
+    api = get_model(cfg)
+    params = api.init(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+
+    rows = []
+    regimes = [  # (max_len, prompt range, max_new)
+        (128, (8, 40), 8),
+        (256, (16, 96), 8),
+        (512, (16, 200), 8),
+    ]
+    rng = np.random.default_rng(0)
+    for max_len, (lo, hi), max_new in regimes:
+        prompts = _workload(rng, cfg.vocab_size, 6, lo, hi)
+        per_layout = {}
+        for layout in ("contiguous", "paged"):
+            eng = ServingEngine(cfg, params, n_slots=3, max_len=max_len,
+                                prompt_len=32, mode="static",
+                                cache_layout=layout, block_size=16)
+            for i, p in enumerate(prompts):
+                eng.submit(Request(f"r{i}", p.copy(), max_new=max_new))
+            stats = eng.run()
+            assert len(eng.finished) == len(prompts)
+            per_layout[layout] = (eng, stats, {k: v.out_tokens for k, v in eng.finished.items()})
+        (ec, sc, oc), (ep, sp, op) = per_layout["contiguous"], per_layout["paged"]
+        assert oc == op, "paged must match contiguous token-for-token"
+        kb_c, kb_p = ec.kv_bytes(), ep.kv_bytes()
+
+        # Eq. (5) bandwidth term on v5e: bytes of KV streamed per decoded
+        # token at max_len-resident vs actual-length-resident caches.
+        tok_bytes = 2 * cfg.num_layers * cfg.num_kv_heads * cfg.head_dim * 2
+        mean_ctx = np.mean([len(p) + max_new for p in prompts])
+        t_kv_max = tok_bytes * max_len / TPU_V5E.hbm_bw
+        t_kv_actual = tok_bytes * mean_ctx / TPU_V5E.hbm_bw
+        rows.append({
+            "max_len": max_len,
+            "mean_ctx": float(mean_ctx),
+            "contig_kv_bytes": kb_c["allocated"],
+            "paged_kv_peak_bytes": kb_p["peak_in_use"],
+            "kv_footprint_ratio": kb_p["peak_in_use"] / kb_c["allocated"],
+            "contig_tok/s (host)": sc.decode_tput(),
+            "paged_tok/s (host)": sp.decode_tput(),
+            "prefix_hit_pages": sp.prefix_hits,
+            "preemptions": sp.preemptions,
+            "v5e_kv_stream_ms_saved/tok": 1e3 * (t_kv_max - t_kv_actual),
+        })
+
+    shrink = [r["kv_footprint_ratio"] for r in rows]
+    checks = {
+        "paged footprint < contiguous at every regime": all(s < 1.0 for s in shrink),
+        "prefix cache hits on shared-prefix workload": all(r["prefix_hit_pages"] > 0 for r in rows),
+        "paged outputs token-identical to contiguous": True,  # asserted above
+        "paged holds <= half the contiguous KV at ragged lengths": all(s <= 0.5 for s in shrink),
+    }
+    result = {
+        "name": "paged_vs_contiguous",
+        "rows": rows,
+        "notes": (
+            "Paged vs contiguous KV cache on a ragged shared-prefix workload "
+            "(real engine, tiny config, host CPU; v5e column = Eq.(5) KV "
+            "bandwidth term).  Outputs verified token-identical per regime.  "
+            "Claim checks: "
+            + ", ".join(f"{k}={'PASS' if v else 'FAIL'}" for k, v in checks.items())
+        ),
+        "checks": checks,
+    }
+    save_result(result)
+    return result

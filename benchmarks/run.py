@@ -17,6 +17,7 @@ from . import (
     fig5_overlap,
     fig6_decode_throughput,
     fig6_ttft,
+    paged_vs_contiguous,
     roofline_report,
     serving_e2e,
     table1_comparison,
@@ -33,6 +34,7 @@ BENCHES = {
     "table2_resources": table2_resources,
     "fig5_overlap": fig5_overlap,
     "serving_e2e": serving_e2e,
+    "paged_vs_contiguous": paged_vs_contiguous,
     "beyond_paper": beyond_paper,
 }
 

@@ -1,0 +1,24 @@
+"""Version-compat shims for jax API renames (single home — no copies)."""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(*args, **kwargs):
+    """jax.shard_map (check_vma) appeared in newer jax; fall back to
+    jax.experimental.shard_map.shard_map (check_rep) on older releases."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(*args, **kwargs)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    if "check_vma" in kwargs:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _sm(*args, **kwargs)
+
+
+def tpu_compiler_params(**kwargs):
+    """pltpu.CompilerParams in newer jax, TPUCompilerParams in <=0.4.x."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

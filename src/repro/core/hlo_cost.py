@@ -210,7 +210,9 @@ def _comp_cost(
     for op in ops:
         if op.opcode == "convert" and op.operands:
             alias[op.name] = op.operands[0]
-        elif op.opcode == "fusion" and op.operands:
+        elif op.opcode in ("fusion", "call") and op.operands:
+            # newer XLA:CPU emits hoisted converts as call(%parallel_convert)
+            # instead of convert-only fusions — same projection applies
             callees = _CALLS_RE.findall(op.attrs)
             if callees and all(cn in convert_callees for cn in callees):
                 alias[op.name] = op.operands[0]
@@ -239,8 +241,8 @@ def _comp_cost(
                 c.calls.append((cm.group(1), trip))
             continue
         if op.opcode in ("call", "conditional", "async-start"):
-            for callee in _OPERANDS_RE.findall(op.attrs):
-                pass
+            if op.name in alias:
+                continue  # pure dtype-cast call: free on TPU
             for callee in _CALLS_RE.findall(op.attrs):
                 c.calls.append((callee, 1.0))
             for callee in re.findall(r"(?:true_computation|false_computation)=%?([\w.\-]+)", op.attrs):

@@ -46,6 +46,10 @@ class KVSlotManager:
         self.slots[i] = SlotState(request_id, length, max_new, 0)
         return i
 
+    def release(self, slot: int) -> None:
+        """Free one slot (finished or preempted request)."""
+        self.slots[slot] = SlotState()
+
     def step(self, finished_cb=None) -> None:
         """Advance all active slots by one generated token; free finished."""
         for i, s in enumerate(self.slots):
@@ -56,7 +60,7 @@ class KVSlotManager:
             if s.generated >= s.max_new:
                 if finished_cb:
                     finished_cb(i, s)
-                self.slots[i] = SlotState()
+                self.release(i)
 
     def lengths_array(self) -> jnp.ndarray:
         return jnp.asarray([s.length for s in self.slots], jnp.int32)

@@ -82,12 +82,15 @@ class PhaseEngine:
         max_len: int = 0,
         long_context: bool = False,
         kv_quant: Optional[str] = None,  # None | "int8" (beyond-paper)
+        cache_layout: str = "contiguous",  # "contiguous" | "paged"
     ):
+        assert cache_layout in ("contiguous", "paged"), cache_layout
         self.cfg = cfg
         self.mesh = mesh
         self.api = get_model(cfg)
         self.max_len = max_len
         self.kv_quant = kv_quant
+        self.cache_layout = cache_layout
         self.decode_phase = "long_decode" if long_context else "decode"
         self.prefill_ctx = make_pctx(mesh, "prefill")
         self.decode_ctx = make_pctx(mesh, self.decode_phase)
@@ -132,6 +135,59 @@ class PhaseEngine:
         prog = PhaseProgram(key, self._jit(fn, in_shardings=in_sh))
         self._programs[key] = prog
         return prog
+
+    def prefill_program_varlen(self, params_abstract, batch: int, seq: int) -> PhaseProgram:
+        """Prefill compiled at bucket length ``seq`` for right-padded
+        variable-length prompts: ``fn(params, tokens, last_pos)`` returns the
+        logits of the prompt's true last token (causality keeps positions
+        <= last_pos independent of the padding tail)."""
+        key = f"prefill_varlen:{batch}x{seq}"
+        if key in self._programs:
+            return self._programs[key]
+        cfg, pctx = self.cfg, self.prefill_ctx
+        assert cfg.family == "transformer", "varlen prefill implemented for the transformer family"
+        from repro.models import transformer as T
+
+        def fn(params, tokens, last_pos):
+            return T.forward_prefill(params, tokens, cfg, pctx, last_pos=last_pos)
+
+        in_sh = None
+        if self.mesh is not None:
+            in_sh = (self.param_shardings(params_abstract), self._sd(pctx, "batch", "seq"), None)
+        prog = PhaseProgram(key, self._jit(fn, in_shardings=in_sh))
+        self._programs[key] = prog
+        return prog
+
+    def prefill_split_programs_varlen(
+        self, params_abstract, batch: int, seq: int
+    ) -> Tuple[PhaseProgram, PhaseProgram]:
+        """(body, tail) like ``prefill_split_programs`` but the tail takes
+        ``last_pos`` — the overlap split for variable-length prompts."""
+        key = f"prefill_split_varlen:{batch}x{seq}"
+        if key in self._programs:
+            body = self._programs[key]
+            tail = self._programs[key + ":tail"]
+            return body, tail
+        cfg, pctx = self.cfg, self.prefill_ctx
+        assert cfg.family == "transformer", "overlap split implemented for the transformer family"
+        from repro.models import transformer as T
+
+        def body_fn(params, tokens):
+            return T.forward_prefill(params, tokens, cfg, pctx, split_tail=True)
+
+        def tail_fn(params, x_mid, last_pos):
+            return T.prefill_tail(params, x_mid, cfg, pctx, last_pos=last_pos)
+
+        in_body = in_tail = None
+        if self.mesh is not None:
+            psh = self.param_shardings(params_abstract)
+            in_body = (psh, self._sd(pctx, "batch", "seq"))
+            in_tail = (psh, self._sd(pctx, "batch", "seq", "embed"), None)
+        body = PhaseProgram(key, self._jit(body_fn, in_shardings=in_body))
+        tail = PhaseProgram(key + ":tail", self._jit(tail_fn, in_shardings=in_tail))
+        self._programs[key] = body
+        self._programs[key + ":tail"] = tail
+        return body, tail
 
     def prefill_split_programs(self, params_abstract, batch: int, seq: int) -> Tuple[PhaseProgram, PhaseProgram]:
         """(body, tail): the overlap split at the last layer's attention."""
@@ -208,6 +264,54 @@ class PhaseEngine:
             cache_sh = self._cache_shardings(cache_abstract)
             in_sh = (psh, tok_sh, cache_sh, self._sd(pctx, "batch"))
         prog = PhaseProgram(key, self._jit(fn, in_shardings=in_sh, donate=(2,)))
+        self._programs[key] = prog
+        return prog
+
+    def paged_decode_program(self, params_abstract, n_slots: int, max_pages: int) -> PhaseProgram:
+        """Decode over the paged cache: ``fn(params, token, pages,
+        block_tables, lengths) -> (logits, new_pages)``.  The page pool is
+        donated (in-place append, like the contiguous decode buffer)."""
+        key = f"decode_paged:{n_slots}x{max_pages}"
+        if key in self._programs:
+            return self._programs[key]
+        cfg, pctx = self.cfg, self.decode_ctx
+        assert cfg.family == "transformer", "paged decode implemented for the transformer family"
+        from repro.models import transformer as T
+
+        def fn(params, token, pages, block_tables, lengths):
+            return T.decode_step_paged(params, token, pages, block_tables, lengths, cfg, pctx)
+
+        in_sh = None
+        if self.mesh is not None:
+            psh = self.param_shardings(params_abstract)
+            # Pages shard over heads/head_dim; the page axis stays replicated
+            # (any sequence's table may reference any page).
+            page_sh = self._sd(pctx, None, "layers", "kv_heads", None, "head_dim")
+            from repro.layers.attention import KVCache
+            in_sh = (psh, self._sd(pctx, "batch"), KVCache(page_sh, page_sh), None,
+                     self._sd(pctx, "batch"))
+        prog = PhaseProgram(key, self._jit(fn, in_shardings=in_sh, donate=(2,)))
+        self._programs[key] = prog
+        return prog
+
+    def page_write_program(self, seq: int, block_size: int) -> PhaseProgram:
+        """The paged swap: scatter prefill-layout KV into allocated pages —
+        ``fn(pages, kv, page_ids) -> new_pages`` (pages donated).  Plays the
+        role ``relayout_program`` plays for the contiguous cache; its
+        dispatch is what the latency-overlapped swap hides behind the
+        prefill tail."""
+        key = f"page_write:{seq}@{block_size}"
+        if key in self._programs:
+            return self._programs[key]
+        from repro.layers.attention import KVCache, write_prefill_pages
+
+        def fn(pages, kv, page_ids):
+            return KVCache(
+                write_prefill_pages(pages.k, kv.k, page_ids, block_size=block_size),
+                write_prefill_pages(pages.v, kv.v, page_ids, block_size=block_size),
+            )
+
+        prog = PhaseProgram(key, self._jit(fn, donate=(0,)))
         self._programs[key] = prog
         return prog
 

@@ -87,11 +87,7 @@ def decode_attention(
             return out.reshape(b, h, d), l.reshape(b, h, 1), m.reshape(b, h, 1)
         out = _decode_attention_streaming(qg, k, v, lengths, starts, sm_scale=sm_scale)
         return out.reshape(b, h, d)
-    bk = min(bk, s)
-    pad = (-s) % bk
-    if pad:
-        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    # the kernel clamps bk to the cache and pads any partial final block
     out, l, m = decode_attention_pallas(
         qg, k, v, lengths.astype(jnp.int32), None if starts is None else starts.astype(jnp.int32),
         bk=bk, interpret=interpret, sm_scale=sm_scale

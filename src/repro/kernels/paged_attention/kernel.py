@@ -1,25 +1,19 @@
-"""Pallas TPU kernel: bandwidth-optimized decode attention (the decode RM).
+"""Pallas TPU kernel: paged decode attention (decode RM over a block pool).
 
-Paper (C3 + §3.2.3): in decode, L=1 — no Q reuse exists; attention degenerates
-to q_t · K^T -> softmax -> · V streaming the whole KV cache.  The FPGA design
-re-maps the four DDR HP ports to 2xK + 2xV (instead of Q/K/V/O), streams the
-one Q token into an on-chip buffer before the walk, and holds the output
-token locally until the KV transfer finishes.
+Same dataflow as ``repro.kernels.decode_attention.kernel`` — pinned Q tile,
+two independent K/V HBM->VMEM streams, single output writeback after the KV
+walk — but the cache walked is a *page pool* ``(num_blocks, Hkv, bs, D)``
+instead of a dense per-sequence buffer.  The per-sequence block table is a
+scalar-prefetch operand, so the K/V BlockSpec index maps resolve
+``pages[table[b, t]]`` *before* each grid step's DMA is issued: the kernel
+streams exactly the pages a sequence owns, in table order, and never touches
+the rest of the pool.
 
-TPU mapping (DESIGN.md §2):
-  * Q tile (G, D) for one KV head's query group is pinned in VMEM for the
-    whole kernel (BlockSpec index constant in the KV-walk dim) — the "stream
-    Q into the on-chip buffer first" step.
-  * K and V have *separate* block specs walking the cache, so Mosaic
-    double-buffers two independent HBM->VMEM DMA streams — the 2+2 port
-    remap analogue; the HBM roofline term is ~ bytes(KV)/bw.
-  * The output (G, D) is accumulated in VMEM scratch and written exactly
-    once, after the last KV block ("write back after KV transfers complete").
-  * GQA: the grid iterates KV heads; all G = H/Hkv query heads of a group
-    ride the same KV stream (KV bytes read once per group, not per head).
-
-Variable sequence lengths (continuous batching) come in via scalar prefetch:
-``lengths[b]`` masks tail positions and skips fully-inactive KV blocks.
+Pages past a sequence's length are skipped entirely (``pl.when`` guard —
+their table entries are 0/garbage and their DMA result is never read), which
+is what makes ragged continuous batching pay O(actual length), not
+O(max_len), in both bandwidth and pool capacity — the paper's Eq. (5)
+decode bound with ``context = actual`` rather than ``context = max``.
 """
 from __future__ import annotations
 
@@ -36,12 +30,13 @@ from repro.common.compat import tpu_compiler_params
 NEG_INF = -1e30
 
 
-def _decode_kernel(
+def _paged_decode_kernel(
+    tables_ref,  # scalar-prefetch: (B, P) int32 — per-sequence page table
     start_ref,  # scalar-prefetch: (B,) int32 — window start (0 for full attn)
     len_ref,  # scalar-prefetch: (B,) int32
     q_ref,  # (1, 1, G, D)
-    k_ref,  # (1, 1, bk, D)
-    v_ref,  # (1, 1, bk, D)
+    k_ref,  # (1, 1, bs, D) — page tables_ref[b, t] of this (layer-sliced) pool
+    v_ref,  # (1, 1, bs, D)
     out_ref,  # (1, 1, G, D)
     out_l_ref,  # (1, 1, G, 128) — softmax denominator (stats output)
     out_m_ref,  # (1, 1, G, 128) — running max (stats output)
@@ -49,8 +44,8 @@ def _decode_kernel(
     l_ref,
     acc_ref,
     *,
-    bk: int,
-    n_steps: int,
+    bs: int,
+    n_pages: int,
     sm_scale: float,
 ):
     b = pl.program_id(0)
@@ -64,15 +59,16 @@ def _decode_kernel(
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # Skip KV blocks entirely outside [start, length) — sliding windows skip
-    # the dead prefix, full attention (start=0) streams everything live.
-    @pl.when(jnp.logical_and(t * bk < length, (t + 1) * bk > start))
+    # Pages wholly outside [start, length) are unallocated (or dead window
+    # prefix): their table entries are meaningless and their block is never
+    # read — the walk skips them.
+    @pl.when(jnp.logical_and(t * bs < length, (t + 1) * bs > start))
     def _step():
         q = q_ref[...].astype(jnp.float32)[0, 0]  # (G, D)
-        k = k_ref[...].astype(jnp.float32)[0, 0]  # (bk, D)
+        k = k_ref[...].astype(jnp.float32)[0, 0]  # (bs, D)
         v = v_ref[...].astype(jnp.float32)[0, 0]
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * sm_scale  # (G, bk)
-        pos = t * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * sm_scale  # (G, bs)
+        pos = t * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
         s = jnp.where(jnp.logical_and(pos >= start, pos < length), s, NEG_INF)
 
         m_prev = m_ref[...][:, :1]
@@ -86,7 +82,7 @@ def _decode_kernel(
         )
         m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
 
-    @pl.when(t == n_steps - 1)  # single writeback after the KV walk
+    @pl.when(t == n_pages - 1)  # single writeback after the page walk
     def _finalize():
         l = l_ref[...][:, :1]
         out_ref[...] = (acc_ref[...] / jnp.maximum(l, 1e-30))[None, None].astype(out_ref.dtype)
@@ -94,45 +90,37 @@ def _decode_kernel(
         out_m_ref[...] = m_ref[...][None, None]
 
 
-@functools.partial(jax.jit, static_argnames=("bk", "sm_scale", "interpret"))
-def decode_attention_pallas(
+@functools.partial(jax.jit, static_argnames=("sm_scale", "interpret"))
+def paged_decode_attention_pallas(
     q: jax.Array,  # (B, Hkv, G, D) — query heads grouped by KV head
-    k: jax.Array,  # (B, Hkv, S, D)
-    v: jax.Array,  # (B, Hkv, S, D)
+    k_pages: jax.Array,  # (N, Hkv, bs, D) — one layer's page pool
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (B, P) int32 — page ids per sequence
     lengths: jax.Array,  # (B,) int32 — per-sequence valid cache length
     starts: jax.Array | None = None,  # (B,) int32 — window start (default 0)
     *,
-    bk: int = 512,
     sm_scale: float | None = None,
     interpret: bool = False,
-) -> jax.Array:
+):
     b, hkv, g, d = q.shape
-    s = k.shape[2]
-    # Partial final block: clamp the KV block to the cache and right-pad the
-    # cache to a whole number of blocks — padded positions sit at pos >=
-    # length, so the existing length mask already zeroes them.  Small
-    # reduced-config caches need no caller-side padding.
-    bk = min(bk, s)
-    pad = (-s) % bk
-    if pad:
-        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    n, hkv_p, bs, d_p = k_pages.shape
+    assert (hkv_p, d_p) == (hkv, d), (k_pages.shape, q.shape)
+    n_pages = block_tables.shape[1]
     if sm_scale is None:
         sm_scale = 1.0 / math.sqrt(d)
-    n_steps = (s + pad) // bk
 
     if starts is None:
         starts = jnp.zeros_like(lengths)
-    kernel = functools.partial(_decode_kernel, bk=bk, n_steps=n_steps, sm_scale=sm_scale)
+    kernel = functools.partial(_paged_decode_kernel, bs=bs, n_pages=n_pages, sm_scale=sm_scale)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(b, hkv, n_steps),
-        # NB: with scalar prefetch, index maps receive the scalar refs as
-        # trailing arguments (absorbed by *_).
+        num_scalar_prefetch=3,
+        grid=(b, hkv, n_pages),
+        # K/V index maps dereference the prefetched block table: grid step
+        # (bi, hi, ti) DMAs page tables[bi, ti] of head hi's pool slice.
         in_specs=[
-            pl.BlockSpec((1, 1, g, d), lambda bi, hi, ti, *_: (bi, hi, 0, 0)),
-            pl.BlockSpec((1, 1, bk, d), lambda bi, hi, ti, *_: (bi, hi, ti, 0)),
-            pl.BlockSpec((1, 1, bk, d), lambda bi, hi, ti, *_: (bi, hi, ti, 0)),
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, ti, tbl, *_: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d), lambda bi, hi, ti, tbl, *_: (tbl[bi, ti], hi, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d), lambda bi, hi, ti, tbl, *_: (tbl[bi, ti], hi, 0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, 1, g, d), lambda bi, hi, ti, *_: (bi, hi, 0, 0)),
@@ -145,7 +133,7 @@ def decode_attention_pallas(
             pltpu.VMEM((g, d), jnp.float32),
         ],
     )
-    return pl.pallas_call(
+    out, out_l, out_m = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=[
@@ -157,4 +145,12 @@ def decode_attention_pallas(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(starts.astype(jnp.int32), lengths.astype(jnp.int32), q, k, v)
+    )(
+        jnp.clip(block_tables, 0, n - 1).astype(jnp.int32),
+        starts.astype(jnp.int32),
+        lengths.astype(jnp.int32),
+        q,
+        k_pages,
+        v_pages,
+    )
+    return out, out_l, out_m

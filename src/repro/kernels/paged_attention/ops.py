@@ -1,0 +1,92 @@
+"""Jitted wrapper for the paged decode attention kernel.
+
+Accepts flat (B, H, D) queries, regroups to (B, Hkv, G, D), and dispatches
+kernel vs the compiled jnp path.  Mirrors ``decode_attention.ops``:
+
+``_paged_attention_streaming`` is the kernel-shaped jnp path — K/V pages
+stay in their storage dtype and the dots accumulate in f32 via
+``preferred_element_type``.  It gathers each sequence's pages into a dense
+view first, so its HBM traffic is O(B * P * bs) like the contiguous
+engine's; the Pallas kernel is the one that walks the block table directly
+(scalar prefetch) and skips unallocated pages.  Because page ``i`` covers
+positions ``[i*bs, (i+1)*bs)``, the gathered view places every valid token
+at the same index the contiguous cache would — the two layouts are
+numerically *identical* under the same mask, which the serving tests
+exploit (paged vs contiguous token-for-token parity).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.ops import _decode_attention_streaming
+from repro.kernels.paged_attention.kernel import paged_decode_attention_pallas
+from repro.kernels.paged_attention.ref import gather_pages
+
+
+def _paged_attention_streaming(
+    q: jax.Array,  # (B, Hkv, G, D)
+    k_pages: jax.Array,  # (N, Hkv, bs, D) — storage dtype, never upcast
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (B, P) int32
+    lengths: jax.Array,
+    starts: Optional[jax.Array],
+    *,
+    sm_scale: Optional[float] = None,
+    return_stats: bool = False,
+):
+    # Gather the pages dense, then delegate to the contiguous streaming path
+    # — ONE implementation of the masked-softmax/stats math, so the engine's
+    # paged-vs-contiguous token parity cannot drift.
+    k = gather_pages(k_pages, block_tables)  # (B, Hkv, P*bs, D)
+    v = gather_pages(v_pages, block_tables)
+    return _decode_attention_streaming(
+        q, k, v, lengths, starts, sm_scale=sm_scale, return_stats=return_stats
+    )
+
+
+def paged_decode_attention(
+    q: jax.Array,  # (B, H, D)
+    k_pages: jax.Array,  # (N, Hkv, bs, D)
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (B, P) int32
+    lengths: jax.Array,  # (B,) int32
+    starts: Optional[jax.Array] = None,  # (B,) int32 — sliding-window start
+    *,
+    use_kernel: bool = False,
+    interpret: bool = True,
+    sm_scale: Optional[float] = None,
+    return_stats: bool = False,
+):
+    """Attention of one query token per sequence over its paged KV.
+
+    ``return_stats=True`` additionally returns the online-softmax stats
+    (l, m) of shape (B, H, 1) — in f32, with the output UN-astype'd — so the
+    caller can merge further blocks (the freshly-projected token)."""
+    b, h, d = q.shape
+    hkv = k_pages.shape[1]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, d)
+    if not use_kernel:
+        if return_stats:
+            out, l, m = _paged_attention_streaming(
+                qg, k_pages, v_pages, block_tables, lengths, starts,
+                sm_scale=sm_scale, return_stats=True,
+            )
+            return out.reshape(b, h, d), l.reshape(b, h, 1), m.reshape(b, h, 1)
+        out = _paged_attention_streaming(
+            qg, k_pages, v_pages, block_tables, lengths, starts, sm_scale=sm_scale
+        )
+        return out.reshape(b, h, d)
+    out, l, m = paged_decode_attention_pallas(
+        qg, k_pages, v_pages, block_tables.astype(jnp.int32),
+        lengths.astype(jnp.int32),
+        None if starts is None else starts.astype(jnp.int32),
+        interpret=interpret, sm_scale=sm_scale,
+    )
+    if return_stats:
+        return (out.reshape(b, h, d),
+                l[:, :, :, :1].reshape(b, h, 1), m[:, :, :, :1].reshape(b, h, 1))
+    return out.reshape(b, h, d).astype(q.dtype)

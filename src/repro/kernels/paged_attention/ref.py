@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for paged single-token decode attention.
+
+Gathers each sequence's pages into a dense (B, Hkv, P*bs, D) view via its
+block table, then runs exactly the masked-softmax math of
+``repro.kernels.decode_attention.ref`` — token position ``p`` of sequence
+``b`` lives at gathered index ``p`` because page ``i`` of the table covers
+positions ``[i*bs, (i+1)*bs)``.  The gather materializes a full per-slot
+cache (O(B * P * bs) bytes); the Pallas kernel exists to avoid that.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_pages(pages: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """(N, Hkv, bs, D) pages + (B, P) tables -> dense (B, Hkv, P*bs, D)."""
+    b, p = block_tables.shape
+    n, hkv, bs, d = pages.shape
+    g = pages[block_tables]  # (B, P, Hkv, bs, D)
+    return jnp.moveaxis(g, 2, 1).reshape(b, hkv, p * bs, d)
+
+
+def paged_decode_attention_reference(
+    q: jax.Array,  # (B, Hkv, G, D)
+    k_pages: jax.Array,  # (N, Hkv, bs, D) — one layer's page pool
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (B, P) int32
+    lengths: jax.Array,  # (B,) int32 valid cache length per sequence
+    starts: Optional[jax.Array] = None,  # (B,) int32 window start
+    *,
+    sm_scale: Optional[float] = None,
+) -> jax.Array:
+    b, hkv, g, d = q.shape
+    k = gather_pages(k_pages, block_tables)
+    v = gather_pages(v_pages, block_tables)
+    s = k.shape[2]
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    if starts is None:
+        starts = jnp.zeros_like(lengths)
+    scores = jnp.einsum("bhgd,bhsd->bhgs", q.astype(jnp.float32), k.astype(jnp.float32)) * sm_scale
+    pos = jnp.arange(s)[None, :]
+    mask = (pos < lengths[:, None]) & (pos >= starts[:, None])  # (B, S)
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.common.compat import tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -122,7 +124,7 @@ def prefill_attention_pallas(
             pltpu.VMEM((blk, 128), jnp.float32),
             pltpu.VMEM((blk, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,

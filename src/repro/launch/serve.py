@@ -25,6 +25,13 @@ def main(argv=None) -> int:
     p.add_argument("--arch", choices=ALL_ARCHS, default="smollm-135m")
     p.add_argument("--reduced", action="store_true")
     p.add_argument("--mode", default="pdswap", choices=["pdswap", "static"])
+    p.add_argument("--cache-layout", default="contiguous", choices=["contiguous", "paged"])
+    p.add_argument("--block-size", type=int, default=16,
+                   help="tokens per KV page (paged layout)")
+    p.add_argument("--num-blocks", type=int, default=None,
+                   help="KV pool pages (paged layout; default = full provisioning)")
+    p.add_argument("--ragged", action="store_true",
+                   help="draw prompt lengths uniformly in [4, prompt_len]")
     p.add_argument("--requests", type=int, default=6)
     p.add_argument("--slots", type=int, default=4)
     p.add_argument("--prompt-len", type=int, default=32)
@@ -42,10 +49,13 @@ def main(argv=None) -> int:
 
     eng = ServingEngine(cfg, params, n_slots=args.slots, max_len=args.max_len,
                         prompt_len=args.prompt_len, mode=args.mode,
-                        overlap=not args.no_overlap)
+                        cache_layout=args.cache_layout, block_size=args.block_size,
+                        num_blocks=args.num_blocks, overlap=not args.no_overlap)
     rng = np.random.default_rng(args.seed)
+    ragged_lo = max(1, min(4, args.prompt_len))  # keep low < high for tiny prompt-len
     for i in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab_size, size=args.prompt_len).astype(np.int32)
+        n = int(rng.integers(ragged_lo, args.prompt_len + 1)) if args.ragged else args.prompt_len
+        prompt = rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
         eng.submit(Request(f"req-{i}", prompt, max_new=args.max_new))
 
     stats = eng.run()
@@ -55,6 +65,14 @@ def main(argv=None) -> int:
     print(f"  decode tokens     : {stats.decode_tokens}  ({stats.t_decode:.2f}s, "
           f"{stats.decode_tput():.1f} tok/s on this host)")
     print(f"  logic swaps       : {stats.swaps}")
+    if args.cache_layout == "paged":
+        kb = eng.kv_bytes()
+        print(f"  KV pool           : {kb['allocated']/2**20:.2f} MiB allocated, "
+              f"{kb['peak_in_use']/2**20:.2f} MiB peak in use")
+        print(f"  prefix cache      : {stats.prefix_hits} page hits / "
+              f"{stats.prefix_misses} misses ({stats.prefix_hit_tokens} tokens reused)")
+        print(f"  preemptions       : {stats.preemptions}  "
+              f"admission blocks: {stats.admission_blocks}")
     hid = [t.hidden_fraction for t in stats.swap_timings if t.t_relayout or t.t_total_overlapped]
     if hid:
         print(f"  swap latency hidden by overlap: {100*float(np.mean(hid)):.0f}% (paper: ~75%)")

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.paged_attention.ops import paged_decode_attention
 from repro.kernels.prefill_attention.ops import prefill_attention
 from repro.layers.linear import linear_apply, linear_init
 from repro.layers.rotary import apply_rope
@@ -219,6 +220,54 @@ def scatter_new_tokens(buf: jax.Array, new: jax.Array, lengths: jax.Array) -> ja
     return jax.vmap(upd_one)(buf, newb, idx)
 
 
+def scatter_new_tokens_paged(
+    pages: jax.Array, new: jax.Array, block_tables: jax.Array, lengths: jax.Array
+) -> jax.Array:
+    """Paged analogue of ``scatter_new_tokens``: write every layer's new
+    token into its sequence's *current page* in one scatter.
+
+    pages: (N, L, Hkv, bs, D) — the layer-complete page pool; new:
+    (L, B, Hkv, 1, D) per-layer tokens collected as scan ys; block_tables:
+    (B, P) int32; lengths: (B,).
+
+    Sequence ``b``'s token lands at page ``tables[b, len//bs]``, in-page
+    offset ``len % bs``.  Inactive slots (length 0) are routed to an
+    out-of-bounds page id and dropped by the scatter, so they never corrupt
+    live pages (NB: -1 would WRAP to the last pool page — jnp scatter
+    normalizes negative indices; only ids >= N are dropped).  Distinct
+    active slots always own distinct pages, so the scatter indices never
+    collide.  Write traffic is O(L*B*Hkv*D), matching the contiguous path.
+    """
+    n, l, hkv, bs, d = pages.shape
+    bsz = lengths.shape[0]
+    page_idx = jnp.minimum(lengths // bs, block_tables.shape[1] - 1)
+    page = jnp.take_along_axis(block_tables, page_idx[:, None], axis=1)[:, 0]
+    page = jnp.where(lengths > 0, page, n)  # inactive slots: OOB -> dropped
+    off = lengths % bs
+    newb = jnp.moveaxis(new[:, :, :, 0, :], 1, 0).astype(pages.dtype)  # (B, L, Hkv, D)
+    return pages.at[page, :, :, off, :].set(newb, mode="drop")
+
+
+def write_prefill_pages(
+    pages: jax.Array, kv: jax.Array, page_ids: jax.Array, *, block_size: int
+) -> jax.Array:
+    """Scatter a prefilled request's KV into its allocated pages.
+
+    pages: (N, L, Hkv, bs, D); kv: prefill layout (L, 1, Hkv, S, D) with S a
+    multiple of ``block_size`` (the compile bucket; the tail past the real
+    prompt length is garbage masked by the per-slot length); page_ids:
+    (S/bs,) int32 destinations, out-of-bounds entries dropped — prefix-cache
+    hits keep their (identical, possibly shared) cached contents instead of
+    being rewritten.  (Skip ids must be >= N, never -1: jnp scatter wraps
+    negative indices to the end of the pool.)
+    """
+    l, b, hkv, s, d = kv.shape
+    bs = block_size
+    kb = kv[:, 0].reshape(l, hkv, s // bs, bs, d)
+    kb = jnp.moveaxis(kb, 2, 0)  # (P, L, Hkv, bs, D)
+    return pages.at[page_ids].set(kb.astype(pages.dtype), mode="drop")
+
+
 def _merge_new_token(
     out_cache: jax.Array,  # (B, H, D) — attention over cache, f32-normalized
     l_cache: jax.Array,  # (B, H, 1) — softmax denominator over cache
@@ -270,12 +319,11 @@ def attention_decode(
     unchanged.
     """
     b = x.shape[0]
-    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    rope = cross_kv is None and cfg.rope_theta > 0
-    q, k, v = _project_qkv(params, x, cfg, lengths[:, None], training=False, rope=rope)
-    qd = q.reshape(b, h, hd)
+    h, hd = cfg.num_heads, cfg.head_dim
 
     if cross_kv is not None:
+        q, k, v = _project_qkv(params, x, cfg, lengths[:, None], training=False, rope=False)
+        qd = q.reshape(b, h, hd)
         kt, vt = cross_kv
         if cfg.attn_impl == "stub":
             out = qd
@@ -286,22 +334,66 @@ def attention_decode(
         y = linear_apply(params["wo"], y, quant=cfg.quant, training=False, use_pallas=cfg.use_pallas)
         return y, cache
 
+    def attend(qd, starts):
+        return decode_attention(
+            qd, cache.k, cache.v, lengths.astype(jnp.int32), starts,
+            use_kernel=cfg.use_pallas, interpret=True, return_stats=True,
+        )
+
+    return _decode_new_token(params, x, lengths, cfg, window, attend)
+
+
+def _decode_new_token(params, x, lengths, cfg, window, attend_cache):
+    """Shared decode-RM body for both cache layouts: project the one new
+    token's Q/K/V, attend over the EXISTING cache ([start, len) valid) via
+    ``attend_cache(qd, starts) -> (out, l, m)``, merge the fresh token
+    analytically, and output-project.  Window start accounts for the
+    appended token: valid range becomes [max(0, len+1-window), len+1).
+    Returns (y, new-token K/V (B, Hkv, 1, D))."""
+    b = x.shape[0]
+    h, hd = cfg.num_heads, cfg.head_dim
+    q, k, v = _project_qkv(params, x, cfg, lengths[:, None], training=False,
+                           rope=cfg.rope_theta > 0)
+    qd = q.reshape(b, h, hd)
     k_new = k.transpose(0, 2, 1, 3)  # (B, Hkv, 1, D)
     v_new = v.transpose(0, 2, 1, 3)
     if cfg.attn_impl == "stub":
         out = qd  # kernel-substituted lowering; see kernels/costs.py
     else:
-        # Attend over the EXISTING cache ([start, len) valid), then merge the
-        # new token analytically.  Window start accounts for the appended
-        # token: valid range becomes [max(0, len+1-window), len+1).
         starts = None if window is None else jnp.maximum(0, lengths + 1 - window).astype(jnp.int32)
         sm_scale = 1.0 / math.sqrt(hd)
-        out_c, l_c, m_c = decode_attention(
-            qd, cache.k, cache.v, lengths.astype(jnp.int32), starts,
-            use_kernel=cfg.use_pallas, interpret=True, return_stats=True,
-        )
+        out_c, l_c, m_c = attend_cache(qd, starts)
         out = _merge_new_token(out_c, l_c, m_c, qd, k_new, v_new, sm_scale).astype(x.dtype)
 
     y = out.reshape(b, 1, h * hd)
     y = linear_apply(params["wo"], y, quant=cfg.quant, training=False, use_pallas=cfg.use_pallas)
     return y, KVCache(k_new, v_new)
+
+
+def attention_decode_paged(
+    params: dict,
+    x: jax.Array,  # (B, 1, d)
+    k_pages: jax.Array,  # (N, Hkv, bs, D) — this layer's slice of the pool
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (B, P) int32
+    lengths: jax.Array,  # (B,) tokens already in cache
+    cfg: ModelConfig,
+    pctx: PartitionCtx,
+    *,
+    window: Optional[int] = None,
+) -> Tuple[jax.Array, KVCache]:
+    """The decode RM over the paged cache: one token against the block-table
+    -walked KV.  Same contract as ``attention_decode``'s cache branch (both
+    share ``_decode_new_token``, so the two layouts cannot drift) — the
+    caller scatters the returned new-token K/V into the pool
+    (``scatter_new_tokens_paged``); the attention output already folds it in
+    via the online-softmax merge.
+    """
+
+    def attend(qd, starts):
+        return paged_decode_attention(
+            qd, k_pages, v_pages, block_tables, lengths.astype(jnp.int32), starts,
+            use_kernel=cfg.use_pallas, interpret=True, return_stats=True,
+        )
+
+    return _decode_new_token(params, x, lengths, cfg, window, attend)

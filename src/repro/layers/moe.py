@@ -22,6 +22,8 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.common.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
@@ -223,7 +225,7 @@ def moe_apply(
         )
         return y.reshape(bl, sl, d)
 
-    y = jax.shard_map(
+    y = shard_map(
         shard_fn,
         mesh=pctx.mesh,
         in_specs=(w_specs, x_spec, x_spec),

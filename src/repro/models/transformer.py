@@ -148,6 +148,7 @@ def forward_prefill(
     pctx: PartitionCtx = NULL_CTX,
     *,
     split_tail: bool = False,
+    last_pos: Optional[jax.Array] = None,
 ):
     """The prefill RM.  Returns (logits_last (B, Vp), kv_caches (L-pytree)).
 
@@ -156,6 +157,11 @@ def forward_prefill(
     Fig. 5) uses: KV is complete at that point, so the controller can launch
     the decode-engine relayout while the tail (last FFN + norm + logits)
     still runs.  See repro.core.swap.
+
+    ``last_pos`` (traced scalar, default S-1) selects which position's
+    logits are returned — variable-length prompts right-pad to a compile
+    bucket and read the logits of their true last token; causality keeps
+    positions <= last_pos independent of the padding tail.
     """
     b, s = tokens.shape
     x = _embed(params, tokens, cfg, pctx)
@@ -171,8 +177,10 @@ def forward_prefill(
     x, kvs = jax.lax.scan(body, x, scan_layers)
 
     if not split_tail:
-        # logits only for the last position — never the (B, S, V) tensor
-        logits = _logits(params, x[:, -1:, :], cfg, pctx)
+        # logits only for the last (or requested) position — never (B, S, V)
+        x_last = x[:, -1:, :] if last_pos is None else jax.lax.dynamic_slice_in_dim(
+            x, last_pos, 1, axis=1)
+        logits = _logits(params, x_last, cfg, pctx)
         return logits[:, -1, :], KVCache(kvs[0], kvs[1])
 
     # --- split point: run the last layer only through its attention ---
@@ -189,7 +197,8 @@ def forward_prefill(
     return x_mid, KVCache(k_all, v_all)
 
 
-def prefill_tail(params, x_mid, cfg: ModelConfig, pctx: PartitionCtx = NULL_CTX):
+def prefill_tail(params, x_mid, cfg: ModelConfig, pctx: PartitionCtx = NULL_CTX,
+                 last_pos: Optional[jax.Array] = None):
     """Standalone jittable tail (last FFN + logits) for the overlapped swap."""
     last = jax.tree.map(lambda a: a[-1], params["layers"])
     h2 = apply_norm(last["ln2"], x_mid, cfg.norm, cfg.norm_eps)
@@ -197,7 +206,10 @@ def prefill_tail(params, x_mid, cfg: ModelConfig, pctx: PartitionCtx = NULL_CTX)
         ffn_out, _ = moe_apply(last["moe"], h2, cfg, pctx, training=False)
     else:
         ffn_out = mlp_apply(last["mlp"], h2, cfg, pctx, training=False)
-    logits = _logits(params, (x_mid + ffn_out)[:, -1:, :], cfg, pctx)
+    x_out = x_mid + ffn_out
+    x_last = x_out[:, -1:, :] if last_pos is None else jax.lax.dynamic_slice_in_dim(
+        x_out, last_pos, 1, axis=1)
+    logits = _logits(params, x_last, cfg, pctx)
     return logits[:, -1, :]
 
 
@@ -206,6 +218,15 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -
     # tokens for one sequence land in one contiguous DUS window, and the
     # leading dim is the vmap/sharding axis (see attention.scatter_new_tokens).
     shape = (batch, cfg.num_layers, cfg.num_kv_heads, max_len, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def init_paged_pool(cfg: ModelConfig, num_blocks: int, block_size: int,
+                    dtype=jnp.bfloat16) -> KVCache:
+    # Paged decode cache: the slot axis of init_cache becomes the PAGE axis
+    # — (N, L, Hkv, bs, D), each page layer-complete for block_size token
+    # positions.  Ownership/refcounts live in serving.paging.PagedKVCache.
+    shape = (num_blocks, cfg.num_layers, cfg.num_kv_heads, block_size, cfg.head_dim)
     return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
 
 
@@ -251,5 +272,51 @@ def decode_step(
     x, (tok_k, tok_v) = jax.lax.scan(body, x, (params["layers"], jnp.arange(cfg.num_layers)))
     new_k = scatter_new_tokens(cache.k, tok_k, lengths)
     new_v = scatter_new_tokens(cache.v, tok_v, lengths)
+    logits = _logits(params, x, cfg, pctx)
+    return logits[:, 0, :], KVCache(new_k, new_v)
+
+
+def decode_step_paged(
+    params: dict,
+    token: jax.Array,  # (B,) int32 — current input token
+    pages: KVCache,  # (N, L, Hkv, bs, D) page pool
+    block_tables: jax.Array,  # (B, P) int32
+    lengths: jax.Array,  # (B,)
+    cfg: ModelConfig,
+    pctx: PartitionCtx = NULL_CTX,
+):
+    """The decode RM over the paged KV cache: one step.
+
+    Structure mirrors ``decode_step``: the pool is closed over and READ-ONLY
+    during the layer scan (each layer slices its (N, Hkv, bs, D) plane; the
+    online-softmax merge folds the fresh token in), and one post-scan
+    ``scatter_new_tokens_paged`` writes all layers' tokens into each
+    sequence's current page — per-step write traffic O(L*B*Hkv*D).  Returns
+    (logits (B, Vp), new_pages).
+    """
+    from repro.layers.attention import attention_decode_paged, scatter_new_tokens_paged
+
+    x = _embed(params, token[:, None], cfg, pctx)
+
+    def body(x, scanned):
+        lp, li = scanned
+        pk = jax.lax.dynamic_index_in_dim(pages.k, li, axis=1, keepdims=False)
+        pv = jax.lax.dynamic_index_in_dim(pages.v, li, axis=1, keepdims=False)
+        h = apply_norm(lp["ln1"], x, cfg.norm, cfg.norm_eps)
+        attn_out, new_kv = attention_decode_paged(
+            lp["attn"], h, pk, pv, block_tables, lengths, cfg, pctx,
+            window=cfg.sliding_window,
+        )
+        x = x + attn_out
+        h = apply_norm(lp["ln2"], x, cfg.norm, cfg.norm_eps)
+        if cfg.moe:
+            ffn_out, _ = moe_apply(lp["moe"], h, cfg, pctx, training=False)
+        else:
+            ffn_out = mlp_apply(lp["mlp"], h, cfg, pctx, training=False)
+        return x + ffn_out, (new_kv.k, new_kv.v)
+
+    x, (tok_k, tok_v) = jax.lax.scan(body, x, (params["layers"], jnp.arange(cfg.num_layers)))
+    new_k = scatter_new_tokens_paged(pages.k, tok_k, block_tables, lengths)
+    new_v = scatter_new_tokens_paged(pages.v, tok_v, block_tables, lengths)
     logits = _logits(params, x, cfg, pctx)
     return logits[:, 0, :], KVCache(new_k, new_v)

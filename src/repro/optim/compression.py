@@ -19,6 +19,8 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.common.compat import shard_map
+
 
 def _quant_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     absmax = jnp.max(jnp.abs(x))
@@ -33,7 +35,8 @@ def compressed_mean_over_axis(grads: Any, err: Any, axis: str) -> Tuple[Any, Any
     Returns (mean_grads f32, new_error_feedback).  Must run inside shard_map
     with ``axis`` manual.
     """
-    n = jax.lax.axis_size(axis)
+    # jax.lax.axis_size is newer-jax; psum of 1 is the portable axis size
+    n = jax.lax.psum(1, axis)
 
     def one(g, e):
         g32 = g.astype(jnp.float32) + e
@@ -80,7 +83,7 @@ def compressed_dp_grads(loss_fn, mesh, *, pod_axis: str = "pod", batch_spec=None
         return loss, mean, err
 
     rep = None  # replicated pytrees: spec inferred as fully-replicated
-    return jax.shard_map(
+    return shard_map(
         local,
         mesh=mesh,
         in_specs=(P(), P(), batch_spec),

@@ -1,1 +1,2 @@
 from repro.serving.engine import Request, ServingEngine, EngineStats
+from repro.serving.paging import BlockPool, PagedKVCache, PoolExhausted

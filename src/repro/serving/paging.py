@@ -1,0 +1,378 @@
+"""Paged KV-cache subsystem: block-pool allocator + prefix caching.
+
+The paper's decode engine is KV-cache-centric: decode throughput is bounded
+by KV bytes streamed per token (Eq. 5), so KV *capacity* is the resource that
+caps concurrency.  The seed runtime allocated one contiguous
+``(B_slots, L, Hkv, max_len, D)`` buffer — every slot pays for ``max_len``
+positions regardless of its actual length, and no KV is ever shared between
+requests.  This module replaces that with vLLM-style paging:
+
+* ``BlockPool`` — a fixed pool of ``num_blocks`` pages, each covering
+  ``block_size`` token positions *across all layers*.  Pure host-side
+  metadata: free list, per-page reference counts, copy-on-write forking,
+  and an LRU of evictable (refcount-0 but content-cached) pages.
+* prefix caching — full pages are registered under a chain hash of their
+  token content (``h_i = hash((h_{i-1}, tokens_i))``); a request whose
+  prompt shares a page-aligned prefix with an earlier request re-uses the
+  cached pages (refcount bump, no write) instead of allocating new ones.
+  Pages freed by finished requests stay cached (evictable) until capacity
+  pressure reclaims them, so hit rates survive request churn.
+* ``PagedKVCache`` — marries the pool metadata to the device page arrays
+  (``(num_blocks, L, Hkv, block_size, D)`` K/V, see
+  ``repro.models.transformer.init_paged_pool``) and the per-slot page
+  tables that the scalar-prefetched paged decode kernel walks
+  (``repro.kernels.paged_attention``).
+
+A page is deliberately layer-complete (all ``L`` layers' K/V for its token
+span): one allocation covers one token span end-to-end, the page table is
+per-request rather than per-(request, layer), and the decode kernel slices
+the layer axis exactly like the contiguous cache did.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict, deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+class PoolExhausted(RuntimeError):
+    """No free or evictable page available — caller must free or preempt."""
+
+
+@dataclasses.dataclass
+class PageMeta:
+    refcount: int = 0
+    hash: Optional[int] = None  # prefix-cache registration, if any
+    tokens: Optional[Tuple[int, ...]] = None  # registered page's exact tokens
+
+
+@dataclasses.dataclass
+class PoolStats:
+    allocs: int = 0
+    frees: int = 0
+    prefix_hits: int = 0
+    prefix_misses: int = 0
+    cache_evictions: int = 0
+    cow_copies: int = 0
+
+
+class BlockPool:
+    """Fixed pool of KV pages with refcounts, COW and prefix caching.
+
+    Invariants (asserted by tests/test_paging.py):
+      * every page is in exactly one of {free list, evictable LRU, live
+        (refcount > 0)};
+      * ``num_free + num_evictable + num_live == num_blocks``;
+      * a page in the evictable LRU always has refcount 0 and a registered
+        hash (it is kept alive only for future prefix hits);
+      * ``decref`` of a live unregistered page returns it to the free list.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        assert num_blocks > 0 and block_size > 0
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.meta: List[PageMeta] = [PageMeta() for _ in range(num_blocks)]
+        self.free_list: deque[int] = deque(range(num_blocks))
+        self.hash_to_page: Dict[int, int] = {}
+        self.evictable: "OrderedDict[int, None]" = OrderedDict()  # LRU order
+        self.stats = PoolStats()
+
+    # ------------------------------------------------------------ queries --
+
+    @property
+    def num_free(self) -> int:
+        """Pages immediately allocatable (fresh + cache-evictable)."""
+        return len(self.free_list) + len(self.evictable)
+
+    @property
+    def num_live(self) -> int:
+        return sum(1 for m in self.meta if m.refcount > 0)
+
+    def refcount(self, pid: int) -> int:
+        return self.meta[pid].refcount
+
+    # ------------------------------------------------------- alloc / free --
+
+    def alloc(self) -> int:
+        """Allocate one page (refcount 1), evicting a cached page if needed."""
+        if self.free_list:
+            pid = self.free_list.popleft()
+        elif self.evictable:
+            pid, _ = self.evictable.popitem(last=False)  # LRU victim
+            self._unregister(pid)
+            self.stats.cache_evictions += 1
+        else:
+            raise PoolExhausted(
+                f"block pool exhausted: {self.num_blocks} pages all live"
+            )
+        m = self.meta[pid]
+        assert m.refcount == 0
+        m.refcount = 1
+        self.stats.allocs += 1
+        return pid
+
+    def incref(self, pid: int) -> None:
+        assert self.meta[pid].refcount > 0, "incref on a dead page"
+        self.meta[pid].refcount += 1
+
+    def decref(self, pid: int) -> int:
+        """Drop one reference; a refcount-0 page becomes evictable (if it is
+        prefix-registered — its contents may serve future hits) or free."""
+        m = self.meta[pid]
+        assert m.refcount > 0, "decref on a dead page"
+        m.refcount -= 1
+        if m.refcount == 0:
+            self.stats.frees += 1
+            if m.hash is not None:
+                self.evictable[pid] = None  # most-recently-freed = MRU
+            else:
+                self.free_list.append(pid)
+        return m.refcount
+
+    def copy_on_write(self, pid: int) -> Tuple[int, bool]:
+        """Prepare ``pid`` for writing.  A uniquely-held page is returned
+        as-is; a shared one is forked: the caller gets a fresh page (and must
+        copy the device contents across) while other holders keep ``pid``."""
+        if self.meta[pid].refcount == 1:
+            return pid, False
+        new = self.alloc()
+        self.decref(pid)
+        self.stats.cow_copies += 1
+        return new, True
+
+    # ------------------------------------------------------ prefix caching --
+
+    @staticmethod
+    def chain_hash(prev_hash: Optional[int], tokens: Sequence[int]) -> int:
+        """Hash of one full page's tokens chained on its prefix's hash.
+
+        Python's tuple-of-ints hash is deterministic across processes
+        (PYTHONHASHSEED only salts str/bytes), so tests can hand-compute it.
+        """
+        return hash((prev_hash, tuple(int(t) for t in tokens)))
+
+    def lookup(self, h: int, tokens: Optional[Sequence[int]] = None) -> Optional[int]:
+        """Prefix-cache probe.  On a hit the page is revived/increffed and
+        the caller owns one reference; on a miss returns None.
+
+        ``tokens`` (the probing page's exact token chunk) guards against
+        chain-hash collisions: a false hit now needs BOTH a 64-bit hash
+        collision AND an identical final chunk (the prefix itself is only
+        covered by the hash), instead of the hash alone."""
+        pid = self.hash_to_page.get(h)
+        if pid is None:
+            self.stats.prefix_misses += 1
+            return None
+        m = self.meta[pid]
+        if tokens is not None and m.tokens != tuple(int(t) for t in tokens):
+            self.stats.prefix_misses += 1  # hash collision: content mismatch
+            return None
+        if m.refcount == 0:
+            del self.evictable[pid]
+            m.refcount = 1
+        else:
+            m.refcount += 1
+        self.stats.prefix_hits += 1
+        return pid
+
+    def register(self, h: int, pid: int, tokens: Optional[Sequence[int]] = None) -> None:
+        """Publish a fully-written page under its chain hash."""
+        if h in self.hash_to_page:
+            return  # identical content already cached; keep the older page
+        self.meta[pid].hash = h
+        self.meta[pid].tokens = None if tokens is None else tuple(int(t) for t in tokens)
+        self.hash_to_page[h] = pid
+
+    def _unregister(self, pid: int) -> None:
+        h = self.meta[pid].hash
+        if h is not None and self.hash_to_page.get(h) == pid:
+            del self.hash_to_page[h]
+        self.meta[pid].hash = None
+        self.meta[pid].tokens = None
+
+
+@dataclasses.dataclass
+class PrefixMatch:
+    """Result of allocating a prompt's pages against the prefix cache."""
+
+    pages: List[int]
+    cached_pages: int  # leading pages served from the prefix cache
+    # (hash, pid, tokens) of newly-written full pages, registered post-write
+    new_full_hashes: List[Tuple[int, int, Tuple[int, ...]]]
+
+
+class PagedKVCache:
+    """Device page arrays + per-slot page tables over a ``BlockPool``.
+
+    The K/V page arrays mirror the contiguous decode-cache layout with the
+    slot axis replaced by the page axis:
+
+        contiguous:  (B_slots,    L, Hkv, max_len,    D)
+        paged:       (num_blocks, L, Hkv, block_size, D)
+
+    so position ``p`` of slot ``b`` lives at
+    ``pages[table[b][p // block_size], :, :, p % block_size, :]`` and the
+    paged decode kernel walks ``table`` via scalar prefetch.
+    """
+
+    def __init__(
+        self,
+        pool_kv,  # KVCache of (num_blocks, L, Hkv, block_size, D) arrays
+        *,
+        n_slots: int,
+        max_len: int,
+        block_size: int,
+    ):
+        self.kv = pool_kv
+        self.block_size = block_size
+        self.max_len = max_len
+        self.max_pages = cdiv(max_len, block_size)
+        self.pool = BlockPool(pool_kv.k.shape[0], block_size)
+        self.tables: List[List[int]] = [[] for _ in range(n_slots)]
+        self.peak_live_pages = 0
+        self._tables_dirty = True
+        self._tables_dev: Optional[jnp.ndarray] = None
+
+    # ------------------------------------------------------------ metrics --
+
+    @property
+    def num_blocks(self) -> int:
+        return self.pool.num_blocks
+
+    def page_bytes(self) -> int:
+        n, l, hkv, bs, d = self.kv.k.shape
+        return 2 * l * hkv * bs * d * self.kv.k.dtype.itemsize  # K + V
+
+    def pool_bytes(self) -> int:
+        return self.num_blocks * self.page_bytes()
+
+    def live_bytes(self) -> int:
+        return self.pool.num_live * self.page_bytes()
+
+    def _note_usage(self) -> None:
+        self.peak_live_pages = max(self.peak_live_pages, self.pool.num_live)
+
+    # ----------------------------------------------------------- prompts --
+
+    def allocate_prompt(self, slot: int, tokens: np.ndarray) -> PrefixMatch:
+        """Allocate pages for a prompt, serving page-aligned prefixes from
+        the cache.  On ``PoolExhausted`` every page acquired so far is rolled
+        back, so a rejected admission leaves the pool untouched."""
+        assert not self.tables[slot], f"slot {slot} already holds pages"
+        bs = self.block_size
+        n = len(tokens)
+        n_pages = cdiv(n, bs)
+        n_full = n // bs
+
+        pages: List[int] = []
+        new_full: List[Tuple[int, int, Tuple[int, ...]]] = []
+        cached = 0
+        h: Optional[int] = None
+        try:
+            matching = True
+            for i in range(n_pages):
+                if i < n_full:
+                    chunk = tuple(int(t) for t in tokens[i * bs : (i + 1) * bs])
+                    h = BlockPool.chain_hash(h, chunk)
+                    if matching:
+                        pid = self.pool.lookup(h, chunk)
+                        if pid is not None:
+                            pages.append(pid)
+                            cached += 1
+                            continue
+                        matching = False  # past the shared prefix: all miss
+                    else:
+                        self.pool.stats.prefix_misses += 1
+                    pid = self.pool.alloc()
+                    new_full.append((h, pid, chunk))
+                else:
+                    pid = self.pool.alloc()  # trailing partial page: never cached
+                pages.append(pid)
+        except PoolExhausted:
+            for pid in pages:
+                self.pool.decref(pid)
+            raise
+        self.tables[slot] = pages
+        self._tables_dirty = True
+        self._note_usage()
+        # snapshot: the live table may diverge later (growth, copy-on-write)
+        return PrefixMatch(list(pages), cached, new_full)
+
+    def register_prompt_pages(self, match: PrefixMatch) -> None:
+        """Publish the freshly *written* full pages to the prefix cache —
+        call after the prefill page-write has been dispatched."""
+        for h, pid, chunk in match.new_full_hashes:
+            self.pool.register(h, pid, chunk)
+
+    # ------------------------------------------------------------ decode --
+
+    def ensure_append_page(self, slot: int, length: int):
+        """Make position ``length`` writable for ``slot`` before a decode
+        append.  Grows the table by one page at a page boundary; forks a
+        shared partial page (copy-on-write).  Returns an optional
+        ``(dst_page, src_page)`` device-copy the caller must perform.
+
+        Raises ``PoolExhausted`` when growth is impossible — the engine
+        preempts the lowest-priority request and retries.
+        """
+        bs = self.block_size
+        table = self.tables[slot]
+        idx = length // bs
+        if idx == len(table):
+            table.append(self.pool.alloc())
+            self._tables_dirty = True
+            self._note_usage()
+            return None
+        assert idx < len(table), (slot, length, table)
+        pid = table[idx]
+        if self.pool.refcount(pid) > 1:
+            new, copied = self.pool.copy_on_write(pid)
+            if copied:
+                table[idx] = new
+                self._tables_dirty = True
+                self._note_usage()
+                return (new, pid)
+        return None
+
+    def release_slot(self, slot: int) -> None:
+        for pid in self.tables[slot]:
+            self.pool.decref(pid)
+        self.tables[slot] = []
+        self._tables_dirty = True
+
+    # ------------------------------------------------------------- device --
+
+    def block_tables_array(self) -> jnp.ndarray:
+        """(n_slots, max_pages) int32 for scalar prefetch; unused entries 0
+        (the kernel skips them via the per-slot length)."""
+        if self._tables_dirty or self._tables_dev is None:
+            arr = np.zeros((len(self.tables), self.max_pages), np.int32)
+            for i, t in enumerate(self.tables):
+                arr[i, : len(t)] = t
+            self._tables_dev = jnp.asarray(arr)
+            self._tables_dirty = False
+        return self._tables_dev
+
+    def page_ids_for_write(self, match: PrefixMatch, padded_pages: int) -> jnp.ndarray:
+        """(padded_pages,) int32 destination pages for the prefill page-write.
+
+        Cache-hit pages already hold identical content and may be shared with
+        live requests — they are marked out-of-bounds so the scatter drops
+        them (the "reuse" in copy-on-write free/reuse).  Trailing entries
+        beyond the prompt's pages are dropped too (prompt padded up to the
+        compile bucket).  The skip sentinel is ``num_blocks`` (not -1, which
+        jnp scatter would wrap to the last pool page).
+        """
+        skip = self.num_blocks
+        ids = np.full((padded_pages,), skip, np.int32)
+        for i, pid in enumerate(match.pages):
+            ids[i] = skip if i < match.cached_pages else pid
+        return jnp.asarray(ids)

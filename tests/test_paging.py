@@ -1,0 +1,331 @@
+"""Paged KV-cache subsystem: allocator invariants, prefix caching, paged
+kernel parity, and end-to-end paged-vs-contiguous serving equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.models import get_model
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.paging import BlockPool, PagedKVCache, PoolExhausted
+
+
+# ------------------------------------------------------------- BlockPool --
+
+
+def _pool_invariant(pool: BlockPool):
+    assert len(pool.free_list) + len(pool.evictable) + pool.num_live == pool.num_blocks
+    for pid in pool.evictable:
+        assert pool.meta[pid].refcount == 0
+        assert pool.meta[pid].hash is not None
+
+
+def test_blockpool_alloc_free_refcount():
+    pool = BlockPool(4, 8)
+    a, b = pool.alloc(), pool.alloc()
+    assert a != b and pool.refcount(a) == pool.refcount(b) == 1
+    assert pool.num_free == 2
+    pool.incref(a)
+    assert pool.refcount(a) == 2
+    assert pool.decref(a) == 1  # still live
+    _pool_invariant(pool)
+    assert pool.decref(a) == 0  # unregistered -> straight back to free list
+    assert pool.num_free == 3 and pool.num_live == 1
+    _pool_invariant(pool)
+    pool.decref(b)
+    assert pool.num_free == 4 and pool.num_live == 0
+
+
+def test_blockpool_exhaustion_and_rollback():
+    pool = BlockPool(2, 8)
+    pool.alloc(), pool.alloc()
+    with pytest.raises(PoolExhausted):
+        pool.alloc()
+    _pool_invariant(pool)
+
+
+def test_blockpool_copy_on_write():
+    pool = BlockPool(3, 8)
+    p = pool.alloc()
+    # uniquely held: write in place, no copy
+    same, copied = pool.copy_on_write(p)
+    assert same == p and not copied
+    # shared: fork — writer gets a fresh page, the other holder keeps p
+    pool.incref(p)
+    new, copied = pool.copy_on_write(p)
+    assert copied and new != p
+    assert pool.refcount(p) == 1 and pool.refcount(new) == 1
+    assert pool.stats.cow_copies == 1
+    _pool_invariant(pool)
+
+
+def test_blockpool_prefix_cache_hand_computed_hashes():
+    pool = BlockPool(8, 4)
+    toks = np.arange(12, dtype=np.int32)  # three full 4-token pages
+    h0 = hash((None, (0, 1, 2, 3)))
+    h1 = hash((h0, (4, 5, 6, 7)))
+    assert BlockPool.chain_hash(None, toks[:4]) == h0
+    assert BlockPool.chain_hash(h0, toks[4:8]) == h1
+
+    p0, p1 = pool.alloc(), pool.alloc()
+    pool.register(h0, p0, toks[:4])
+    pool.register(h1, p1, toks[4:8])
+    assert pool.lookup(h0, toks[:4]) == p0 and pool.refcount(p0) == 2
+    assert pool.lookup(hash((None, (9, 9, 9, 9)))) is None
+    # a hash collision with DIFFERENT tokens must miss, not serve wrong KV
+    assert pool.lookup(h0, (9, 9, 9, 9)) is None
+    assert pool.refcount(p0) == 2  # collision probe took no reference
+    assert pool.stats.prefix_hits == 1 and pool.stats.prefix_misses == 2
+
+
+def test_blockpool_evictable_revive_and_lru_eviction():
+    pool = BlockPool(2, 4)
+    p0, p1 = pool.alloc(), pool.alloc()
+    pool.register(100, p0)
+    pool.register(200, p1)
+    pool.decref(p0)  # registered -> evictable, contents retained
+    pool.decref(p1)
+    assert pool.num_free == 2 and len(pool.evictable) == 2
+    # a hit on an evictable page revives it (no data movement)
+    assert pool.lookup(100) == p0 and pool.refcount(p0) == 1
+    # allocation under pressure evicts the LRU cached page (p1)
+    fresh = pool.alloc()
+    assert fresh == p1 and pool.meta[p1].hash is None
+    assert pool.lookup(200) is None  # its hash is gone
+    _pool_invariant(pool)
+
+
+# ----------------------------------------------------------- PagedKVCache --
+
+
+def _paged_cache(n_blocks=8, bs=4, n_slots=2, max_len=32):
+    kv_shape = (n_blocks, 2, 2, bs, 8)
+    from repro.layers.attention import KVCache
+
+    kv = KVCache(jnp.zeros(kv_shape, jnp.bfloat16), jnp.zeros(kv_shape, jnp.bfloat16))
+    return PagedKVCache(kv, n_slots=n_slots, max_len=max_len, block_size=bs)
+
+
+def test_allocate_prompt_prefix_sharing_and_rollback():
+    cache = _paged_cache(n_blocks=6, bs=4, n_slots=3)
+    toks = np.arange(10, dtype=np.int32)  # 2 full pages + 1 partial
+    m0 = cache.allocate_prompt(0, toks)
+    assert len(m0.pages) == 3 and m0.cached_pages == 0
+    cache.register_prompt_pages(m0)
+    # same prompt on the next slot: both full pages shared, partial fresh
+    m1 = cache.allocate_prompt(1, toks)
+    assert m1.cached_pages == 2
+    assert m1.pages[:2] == m0.pages[:2] and m1.pages[2] != m0.pages[2]
+    assert cache.pool.refcount(m0.pages[0]) == 2
+    # pool now holds 4 live pages of 6; a distinct 3-page prompt cannot fit
+    # -> the failed admission must roll back completely
+    live_before = cache.pool.num_live
+    with pytest.raises(PoolExhausted):
+        cache.allocate_prompt(2, np.full(12, 77, np.int32))
+    assert cache.pool.num_live == live_before
+    assert not cache.tables[2]
+
+
+def test_ensure_append_page_growth_and_cow():
+    cache = _paged_cache(n_blocks=8, bs=4)
+    toks = np.arange(8, dtype=np.int32)  # exactly 2 full pages
+    m0 = cache.allocate_prompt(0, toks)
+    cache.register_prompt_pages(m0)
+    # position 8 starts page 2 -> grows the table
+    assert cache.ensure_append_page(0, 8) is None
+    assert len(cache.tables[0]) == 3
+    # share page 1 with slot 1, then force a write into it on slot 0:
+    cache.pool.incref(m0.pages[1])
+    copy = cache.ensure_append_page(0, 6)  # position 6 lives in page 1
+    assert copy is not None
+    dst, src = copy
+    assert src == m0.pages[1] and cache.tables[0][1] == dst != src
+    cache.pool.decref(m0.pages[1])
+
+
+def test_block_tables_array_layout():
+    cache = _paged_cache(n_blocks=8, bs=4, n_slots=3)
+    m = cache.allocate_prompt(1, np.arange(9, dtype=np.int32))
+    arr = np.asarray(cache.block_tables_array())
+    assert arr.shape == (3, cache.max_pages)
+    np.testing.assert_array_equal(arr[1, :3], m.pages)
+    assert (arr[0] == 0).all() and (arr[2] == 0).all()
+
+
+# ------------------------------------------------------------ paged kernel --
+
+
+@pytest.mark.parametrize(
+    "b,hkv,g,d,bs,n_pages_seq",
+    [
+        (2, 2, 2, 32, 8, 3),
+        (1, 1, 4, 64, 16, 2),  # MHA-as-GQA grouping
+        (3, 2, 1, 32, 4, 4),  # g=1
+    ],
+)
+def test_paged_kernel_matches_reference_at_ragged_lengths(b, hkv, g, d, bs, n_pages_seq):
+    from repro.kernels.paged_attention.kernel import paged_decode_attention_pallas
+    from repro.kernels.paged_attention.ref import paged_decode_attention_reference
+
+    rng = np.random.default_rng(0)
+    n_blocks = b * n_pages_seq + 2
+    q = jnp.asarray(rng.normal(size=(b, hkv, g, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(n_blocks, hkv, bs, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(n_blocks, hkv, bs, d)), jnp.float32)
+    # distinct shuffled tables per sequence; ragged lengths incl. partial pages
+    perm = rng.permutation(n_blocks)[: b * n_pages_seq].reshape(b, n_pages_seq)
+    tables = jnp.asarray(perm, jnp.int32)
+    lengths = jnp.asarray(rng.integers(1, n_pages_seq * bs + 1, size=b), jnp.int32)
+    ref = paged_decode_attention_reference(q, kp, vp, tables, lengths)
+    out, _, _ = paged_decode_attention_pallas(q, kp, vp, tables, lengths, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_paged_kernel_sliding_window_starts():
+    from repro.kernels.paged_attention.kernel import paged_decode_attention_pallas
+    from repro.kernels.paged_attention.ref import paged_decode_attention_reference
+
+    rng = np.random.default_rng(1)
+    b, hkv, g, d, bs, P = 2, 2, 2, 32, 8, 3
+    q = jnp.asarray(rng.normal(size=(b, hkv, g, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(8, hkv, bs, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(8, hkv, bs, d)), jnp.float32)
+    tables = jnp.asarray([[1, 2, 3], [4, 5, 6]], jnp.int32)
+    lengths = jnp.asarray([20, 23], jnp.int32)
+    starts = jnp.asarray([9, 0], jnp.int32)
+    ref = paged_decode_attention_reference(q, kp, vp, tables, lengths, starts)
+    out, _, _ = paged_decode_attention_pallas(q, kp, vp, tables, lengths, starts, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_decode_kernel_partial_final_block():
+    """Satellite: s % bk != 0 needs no caller-side padding any more."""
+    from repro.kernels.decode_attention.kernel import decode_attention_pallas
+    from repro.kernels.decode_attention.ref import decode_attention_reference
+
+    rng = np.random.default_rng(2)
+    b, hkv, g, d, s = 2, 2, 2, 32, 37  # prime-ish, far from any block multiple
+    q = jnp.asarray(rng.normal(size=(b, hkv, g, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    lengths = jnp.asarray([s, 11], jnp.int32)
+    ref = decode_attention_reference(q, k, v, lengths)
+    out, _, _ = decode_attention_pallas(q, k, v, lengths, bk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------- end to end --
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = reduced_config("bitnet-730m", num_layers=3, d_model=128, vocab_size=512,
+                         num_heads=4, num_kv_heads=2)
+    api = get_model(cfg)
+    params = api.init(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    return cfg, api, params
+
+
+def _serve(cfg, params, prompts, *, layout, mode="pdswap", max_new=6, **kw):
+    eng = ServingEngine(cfg, params, n_slots=3, max_len=64, prompt_len=12,
+                        mode=mode, cache_layout=layout, block_size=8, **kw)
+    for i, (p, prio) in enumerate(prompts):
+        eng.submit(Request(f"r{i}", p, max_new=max_new, priority=prio))
+    stats = eng.run()
+    return eng, stats, {k: v.out_tokens for k, v in eng.finished.items()}
+
+
+@pytest.mark.parametrize("mode", ["pdswap", "static"])
+def test_paged_matches_contiguous_token_for_token(tiny, mode):
+    cfg, api, params = tiny
+    rng = np.random.default_rng(3)
+    base = rng.integers(0, cfg.vocab_size, 24).astype(np.int32)
+    prompts = [  # ragged lengths, two sharing a 16-token (2-page) prefix
+        (rng.integers(0, cfg.vocab_size, 12).astype(np.int32), 0),
+        (base.copy(), 0),
+        (rng.integers(0, cfg.vocab_size, 7).astype(np.int32), 0),
+        (np.concatenate([base[:16], rng.integers(0, cfg.vocab_size, 5).astype(np.int32)]), 0),
+    ]
+    _, _, ref = _serve(cfg, params, prompts, layout="contiguous", mode=mode)
+    eng, stats, got = _serve(cfg, params, prompts, layout="paged", mode=mode)
+    assert got == ref  # token-for-token across the layout swap
+    assert stats.prefix_hits > 0  # shared-prefix workload reuses pages
+    kb = eng.kv_bytes()
+    assert kb["peak_in_use"] < kb["allocated"]  # ragged lengths don't pay max_len
+
+
+def test_paged_preemption_is_deterministic(tiny):
+    """A pool too small for the offered load forces eviction; the replayed
+    restart continues bit-identically to an unpreempted run."""
+    cfg, api, params = tiny
+    rng = np.random.default_rng(4)
+    prompts = [(rng.integers(0, cfg.vocab_size, 14).astype(np.int32), i) for i in range(4)]
+    _, _, ref = _serve(cfg, params, prompts, layout="contiguous", mode="static", max_new=10)
+    _, stats, got = _serve(cfg, params, prompts, layout="paged", mode="static",
+                           max_new=10, num_blocks=7)
+    assert stats.preemptions > 0 and stats.replayed_tokens > 0
+    assert got == ref
+
+
+def test_paged_heavy_pressure_no_livelock(tiny):
+    """Regression: pool sized well below the offered load (3 slots x 4 pages
+    wanted, 6 pages held) forces repeated preempt-restart cycles; the resume
+    headroom check must keep the engine making progress (an earlier version
+    livelocked with two restarts evicting each other during replay)."""
+    cfg, api, params = tiny
+    rng = np.random.default_rng(6)
+    prompts = [(rng.integers(0, cfg.vocab_size, 16).astype(np.int32), 0) for _ in range(4)]
+    _, _, ref = _serve(cfg, params, prompts, layout="contiguous", mode="static", max_new=12)
+    eng, stats, got = _serve(cfg, params, prompts, layout="paged", mode="static",
+                             max_new=12, num_blocks=6)
+    assert len(eng.finished) == 4
+    assert stats.preemptions > 1
+    assert got == ref
+
+
+def test_varlen_prompts_not_truncated(tiny):
+    """Satellite: prompts longer than prompt_len keep every token (the seed
+    engine silently dropped them)."""
+    cfg, api, params = tiny
+    rng = np.random.default_rng(5)
+    long_prompt = rng.integers(0, cfg.vocab_size, 30).astype(np.int32)  # > prompt_len=12
+    outs = {}
+    for layout in ("contiguous", "paged"):
+        eng = ServingEngine(cfg, params, n_slots=2, max_len=64, prompt_len=12,
+                            mode="static", cache_layout=layout, block_size=8)
+        eng.submit(Request("long", long_prompt.copy(), max_new=4))
+        eng.run()
+        assert eng.stats.prefill_tokens == 30  # all 30 tokens prefilled
+        outs[layout] = eng.finished["long"].out_tokens
+    assert outs["contiguous"] == outs["paged"]
+    # truncation would have produced the 12-token prompt's continuation:
+    eng = ServingEngine(cfg, params, n_slots=2, max_len=64, prompt_len=12,
+                        mode="static", cache_layout="contiguous")
+    eng.submit(Request("short", long_prompt[:12].copy(), max_new=4))
+    eng.run()
+    assert eng.finished["short"].out_tokens != outs["contiguous"]
+
+
+def test_oversized_prompt_rejected_with_clear_error(tiny):
+    cfg, api, params = tiny
+    eng = ServingEngine(cfg, params, n_slots=2, max_len=32, prompt_len=12)
+    with pytest.raises(ValueError, match="never truncated"):
+        eng.submit(Request("big", np.zeros(40, np.int32), max_new=4))
+    with pytest.raises(ValueError, match="never truncated"):
+        eng.submit(Request("edge", np.zeros(30, np.int32), max_new=4))
+
+
+def test_pool_too_small_rejected_at_submit(tiny):
+    """A request whose full trajectory (prompt + max_new) exceeds the pool
+    can never complete — it must be rejected up front, not self-preempt
+    forever."""
+    cfg, api, params = tiny
+    eng = ServingEngine(cfg, params, n_slots=2, max_len=64, prompt_len=12,
+                        mode="static", cache_layout="paged", block_size=8, num_blocks=2)
+    with pytest.raises(ValueError, match="pool holds 2"):
+        eng.submit(Request("big", np.arange(30, dtype=np.int32) % cfg.vocab_size, max_new=4))
+    # trajectory that exactly fits is accepted and completes
+    eng.submit(Request("fits", np.arange(9, dtype=np.int32), max_new=8))  # 16 tokens, 2 pages
+    eng.run()
+    assert len(eng.finished["fits"].out_tokens) == 8
