@@ -25,9 +25,11 @@ import time
 
 import numpy as np
 
+import argparse
+
 from repro.common.hardware import TPU_V5E
 
-from .common import save_result
+from .common import render, save_result
 
 
 def _workload(rng, vocab, n_req, lo, hi, shared_frac=0.5):
@@ -45,13 +47,15 @@ def _workload(rng, vocab, n_req, lo, hi, shared_frac=0.5):
     return prompts
 
 
-def run() -> dict:
+def run(tiny: bool = False) -> dict:
+    """``tiny=True`` is the CI smoke mode: one regime only, so benchmark
+    drift is caught in tier-1 without paying for the full sweep."""
     import jax
     import jax.numpy as jnp
 
     from repro.configs import reduced_config
     from repro.models import get_model
-    from repro.serving.engine import Request, ServingEngine
+    from repro.serving import EngineCore, Request
 
     cfg = reduced_config("bitnet-730m", num_layers=3, d_model=128, vocab_size=512,
                          num_heads=4, num_kv_heads=2)
@@ -64,14 +68,16 @@ def run() -> dict:
         (256, (16, 96), 8),
         (512, (16, 200), 8),
     ]
+    if tiny:
+        regimes = regimes[:1]
     rng = np.random.default_rng(0)
     for max_len, (lo, hi), max_new in regimes:
         prompts = _workload(rng, cfg.vocab_size, 6, lo, hi)
         per_layout = {}
         for layout in ("contiguous", "paged"):
-            eng = ServingEngine(cfg, params, n_slots=3, max_len=max_len,
-                                prompt_len=32, mode="static",
-                                cache_layout=layout, block_size=16)
+            eng = EngineCore(cfg, params, n_slots=3, max_len=max_len,
+                             prompt_len=32, mode="static",
+                             cache_layout=layout, block_size=16)
             for i, p in enumerate(prompts):
                 eng.submit(Request(f"r{i}", p.copy(), max_new=max_new))
             stats = eng.run()
@@ -108,7 +114,7 @@ def run() -> dict:
         "paged holds <= half the contiguous KV at ragged lengths": all(s <= 0.5 for s in shrink),
     }
     result = {
-        "name": "paged_vs_contiguous",
+        "name": "paged_vs_contiguous" + ("_tiny" if tiny else ""),
         "rows": rows,
         "notes": (
             "Paged vs contiguous KV cache on a ragged shared-prefix workload "
@@ -121,3 +127,17 @@ def run() -> dict:
     }
     save_result(result)
     return result
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--tiny", action="store_true",
+                   help="single-regime smoke mode (CI tier-1)")
+    args = p.parse_args(argv)
+    result = run(tiny=args.tiny)
+    print(render(result))
+    return 0 if all(result["checks"].values()) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

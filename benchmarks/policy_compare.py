@@ -1,0 +1,105 @@
+"""SwapPolicy + sampling comparison on the step-driven serving core.
+
+Drives ``EngineCore.step()`` with staggered single-request arrivals — the
+regime where the prefill<->decode transition decision matters — and compares
+the paper's ``DrainPolicy`` (flip the fabric the moment work is queued)
+against ``SwapCostAwarePolicy`` (defer the flip while the queue is shallow
+relative to the measured swap cost).  Each admitted request costs one logic
+swap either way; what the policy changes is how many *prefill bursts*
+(fabric flips, each stalling every active decode slot by the exposed swap
+latency) serve the same load.  Greedy trajectories are slot-independent, so
+both policies must produce identical tokens — checked.
+
+A second table exercises per-request ``SamplingParams``: seeded sampling
+must be bit-repeatable across runs (and across policies), and distinct
+seeds must actually diverge.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import save_result
+
+
+def _drive(policy, cfg, params, prompts, sp, *, n_slots=4, max_new=10):
+    from repro.serving import EngineCore, Request
+
+    eng = EngineCore(cfg, params, n_slots=n_slots, max_len=64, prompt_len=12,
+                     swap_policy=policy)
+    pending = [Request(f"r{i}", p.copy(), max_new=max_new, params=sp)
+               for i, p in enumerate(prompts)]
+    eng.submit(pending.pop(0))
+    step = 0
+    while eng.has_unfinished() or pending:
+        step += 1
+        if pending and step % 2 == 0:  # one arrival every other step
+            eng.submit(pending.pop(0))
+        eng.step()
+    outs = {rid: r.out_tokens for rid, r in eng.finished.items()}
+    ttfts = [r.first_token_t - r.enqueue_t for r in eng.finished.values()]
+    return eng.stats, outs, float(np.mean(ttfts))
+
+
+def run() -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import reduced_config
+    from repro.models import get_model
+    from repro.serving import SamplingParams
+    from repro.serving.policy import DrainPolicy, SwapCostAwarePolicy
+
+    cfg = reduced_config("bitnet-730m", num_layers=3, d_model=128, vocab_size=512,
+                         num_heads=4, num_kv_heads=2)
+    api = get_model(cfg)
+    params = api.init(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 12).astype(np.int32) for _ in range(8)]
+
+    greedy = SamplingParams()
+    policies = {
+        "drain": DrainPolicy(),
+        "swap-aware": SwapCostAwarePolicy(min_queue=2, max_defer_rounds=6),
+    }
+    rows, outs, ttft = [], {}, {}
+    for name, pol in policies.items():
+        stats, outs[name], ttft[name] = _drive(pol, cfg, params, prompts, greedy)
+        rows.append({
+            "policy": name,
+            "swaps": stats.swaps,
+            "prefill_bursts": stats.prefill_bursts,
+            "mean_exposed_swap_ms": 1e3 * stats.swap_agg.mean_cost,
+            "decode_tok/s (host)": stats.decode_tput(),
+            "mean_ttft_ms": 1e3 * ttft[name],
+        })
+
+    sp_a = SamplingParams(temperature=0.8, top_k=64, top_p=0.9, seed=7)
+    sp_b = SamplingParams(temperature=0.8, top_k=64, top_p=0.9, seed=8)
+    _, sampled_1, _ = _drive(DrainPolicy(), cfg, params, prompts[:4], sp_a)
+    _, sampled_2, _ = _drive(SwapCostAwarePolicy(min_queue=2), cfg, params,
+                             prompts[:4], sp_a)
+    _, sampled_3, _ = _drive(DrainPolicy(), cfg, params, prompts[:4], sp_b)
+
+    checks = {
+        "identical greedy tokens across policies": outs["drain"] == outs["swap-aware"],
+        "swap-aware enters fewer prefill bursts": (
+            rows[1]["prefill_bursts"] < rows[0]["prefill_bursts"]),
+        "one swap per request under both policies": all(
+            r["swaps"] == len(prompts) for r in rows[:2]),
+        "seeded sampling repeatable across policies": sampled_1 == sampled_2,
+        "distinct seeds diverge": sampled_1 != sampled_3,
+    }
+    result = {
+        "name": "policy_compare",
+        "rows": rows,
+        "notes": (
+            "Drain vs swap-cost-aware scheduling under staggered arrivals on "
+            "the step-driven core (tiny config, host CPU).  Bursts = fabric "
+            "flips; the cost-aware policy batches admissions to amortize the "
+            "modeled reconfiguration cost.  Claim checks: "
+            + ", ".join(f"{k}={'PASS' if v else 'FAIL'}" for k, v in checks.items())
+        ),
+        "checks": checks,
+    }
+    save_result(result)
+    return result

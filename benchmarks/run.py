@@ -18,6 +18,7 @@ from . import (
     fig6_decode_throughput,
     fig6_ttft,
     paged_vs_contiguous,
+    policy_compare,
     roofline_report,
     serving_e2e,
     table1_comparison,
@@ -35,6 +36,7 @@ BENCHES = {
     "fig5_overlap": fig5_overlap,
     "serving_e2e": serving_e2e,
     "paged_vs_contiguous": paged_vs_contiguous,
+    "policy_compare": policy_compare,
     "beyond_paper": beyond_paper,
 }
 

@@ -1,8 +1,8 @@
 """End-to-end measured serving: PD-Swap vs static engine on this host.
 
-Functional companion to fig6: drives the real ServingEngine (continuous
-batching + SwapController) with batched requests on a reduced-config model,
-CPU backend.  Absolute tok/s is a CPU number; the *comparison* exercises the
+Functional companion to fig6: drives the real step-driven serving core
+(``EngineCore.step()`` + SwapController) with batched requests on a
+reduced-config model, CPU backend.  Absolute tok/s is a CPU number; the *comparison* exercises the
 identical code paths the TPU deployment uses (program swap, KV relayout,
 decode masking, slot management).  Correctness cross-check: both modes must
 emit identical tokens for identical prompts (greedy).
@@ -15,19 +15,23 @@ import numpy as np
 
 from repro.configs import reduced_config
 from repro.models import get_model
-from repro.serving.engine import Request, ServingEngine
+from repro.serving import EngineCore, Request
 
 from .common import save_result
 
 
 def _drive(mode: str, cfg, params, prompts, *, n_slots=4, max_len=96, prompt_len=24, max_new=16):
-    eng = ServingEngine(cfg, params, n_slots=n_slots, max_len=max_len,
-                        prompt_len=prompt_len, mode=mode)
+    eng = EngineCore(cfg, params, n_slots=n_slots, max_len=max_len,
+                     prompt_len=prompt_len, mode=mode)
     for i, p in enumerate(prompts):
         eng.submit(Request(f"r{i}", p, max_new=max_new))
-    stats = eng.run()
+    streamed = {f"r{i}": [] for i in range(len(prompts))}
+    while eng.has_unfinished():
+        for out in eng.step():  # incremental RequestOutput deltas
+            streamed[out.request_id].extend(out.new_token_ids)
     outs = {rid: r.out_tokens for rid, r in eng.finished.items()}
-    return stats, outs
+    assert streamed == outs, "streaming deltas must reassemble the outputs"
+    return eng.stats, outs
 
 
 def run() -> dict:

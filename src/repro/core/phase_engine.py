@@ -294,6 +294,30 @@ class PhaseEngine:
         self._programs[key] = prog
         return prog
 
+    def sampler_program(self, batch: int) -> PhaseProgram:
+        """Vectorized per-slot token sampler — the decode epilogue program:
+        ``fn(logits, seeds, steps, temps, top_ks, top_ps) -> tokens``.
+
+        One compiled configuration per slot-batch size, like the other phase
+        programs; it runs after the decode step's logits on device, so a
+        sampled batch costs one extra dispatch, not a host round-trip per
+        slot.  The PRNG key for slot ``i`` is
+        ``fold_in(PRNGKey(seeds[i]), steps[i])`` — stateless, which is what
+        keeps preemption replay deterministic under sampling."""
+        key = f"sampler:{batch}"
+        if key in self._programs:
+            return self._programs[key]
+        from repro.core.sampling import sample_tokens
+
+        # No pinned in_shardings: the logits arrive however the decode
+        # program's epilogue left them (vocab over the model axis under tp;
+        # replicated otherwise), and a size-1 batch (the prefill first-token
+        # path) cannot be partitioned anyway — GSPMD propagates from the
+        # operands for this tiny program.
+        prog = PhaseProgram(key, jax.jit(sample_tokens))
+        self._programs[key] = prog
+        return prog
+
     def page_write_program(self, seq: int, block_size: int) -> PhaseProgram:
         """The paged swap: scatter prefill-layout KV into allocated pages —
         ``fn(pages, kv, page_ids) -> new_pages`` (pages donated).  Plays the

@@ -1,0 +1,71 @@
+"""Vectorized on-device token sampling — the decode epilogue's math.
+
+Lives in the core layer (no serving dependencies) so ``PhaseEngine`` can
+build sampler programs without importing serving; ``repro.serving.sampling``
+re-exports these next to ``SamplingParams``.
+
+PRNG discipline (preemption-safe by construction): token ``i`` of a request
+is always drawn with ``fold_in(PRNGKey(seed), i)``.  The key stream is a
+pure function of ``(seed, token index)`` — no mutable sampler state exists —
+so a preempted request that re-prefills and teacher-forces its recorded
+tokens resumes the stream at exactly the index it would have used had it
+never been evicted.  Seeded sampling is therefore bit-identical across
+eviction/restart cycles (the property tests/test_serving_api.py pins).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _filter_row(scaled: jnp.ndarray, top_k: jnp.ndarray, top_p: jnp.ndarray) -> jnp.ndarray:
+    """Mask one temperature-scaled logit row to its top-k ∩ nucleus support.
+
+    Everything outside the support becomes -inf, so the categorical draw
+    places exactly zero mass there (the invariant the sampler tests assert).
+    The top token always survives both truncations.
+    """
+    vocab = scaled.shape[-1]
+    desc = jnp.sort(scaled)[::-1]
+    # top-k threshold: the k-th largest scaled logit (k<=0 disables)
+    k_eff = jnp.where(top_k > 0, jnp.minimum(top_k, vocab), vocab)
+    kth = jnp.take(desc, k_eff - 1)
+    # nucleus threshold: smallest prefix of the sorted distribution whose
+    # mass reaches top_p — position i is kept iff the mass BEFORE it < p
+    probs = jax.nn.softmax(desc)
+    mass_before = jnp.cumsum(probs) - probs
+    n_keep = jnp.maximum(jnp.sum(mass_before < top_p), 1)
+    pth = jnp.take(desc, n_keep - 1)
+    cut = jnp.maximum(kth, pth)
+    return jnp.where(scaled >= cut, scaled, -jnp.inf)
+
+
+def filter_logits(logits, temps, top_ks, top_ps):
+    """Vectorized scale+truncate: (B, V) logits -> (B, V) masked scaled
+    logits with -inf outside each slot's sampling support."""
+    scaled = logits.astype(jnp.float32) / jnp.maximum(temps, 1e-6)[:, None]
+    return jax.vmap(_filter_row)(scaled, top_ks, top_ps)
+
+
+def sample_tokens(logits, seeds, steps, temps, top_ks, top_ps):
+    """Draw one token per slot on device.
+
+    Args:
+      logits: (B, V) float — the decode round's last-token logits.
+      seeds:  (B,) int32 — per-request ``SamplingParams.seed32``.
+      steps:  (B,) int32 — index of the token being drawn (= tokens already
+        generated); the fold_in counter that makes replay deterministic.
+      temps/top_ks/top_ps: (B,) per-slot sampling knobs; ``temp <= 0``
+        selects greedy argmax for that slot.
+
+    Returns (B,) int32 token ids.
+    """
+    greedy_toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    masked = filter_logits(logits, temps, top_ks, top_ps)
+
+    def draw(row, seed, step):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+        return jax.random.categorical(key, row).astype(jnp.int32)
+
+    sampled = jax.vmap(draw)(masked, seeds, steps)
+    return jnp.where(temps <= 0.0, greedy_toks, sampled)

@@ -43,6 +43,45 @@ class SwapTiming:
         return max(0.0, 1.0 - exposed / self.t_relayout)
 
 
+@dataclasses.dataclass
+class SwapAggregates:
+    """Running aggregates over every ``SwapTiming`` ever recorded.
+
+    ``EngineStats`` keeps only a rolling window of raw timings (unbounded
+    growth over a long serving run was a leak); these sums survive the
+    window and are what the swap-cost-aware scheduling policy consults —
+    the measured-history analogue of the paper's 45 ms PCAP bitstream-load
+    budget (a modeled roofline figure can override them, see
+    ``SwapCostAwarePolicy``).
+    """
+
+    count: int = 0
+    sum_cost: float = 0.0  # exposed (decode-visible) swap latency
+    sum_hidden_fraction: float = 0.0
+
+    @staticmethod
+    def exposed_cost(t: SwapTiming) -> float:
+        """Decode-visible latency of one swap: the part of the relayout the
+        prefill tail failed to hide (overlapped runs), or the full measured
+        relayout (serialized runs)."""
+        if t.t_total_overlapped:
+            return max(t.t_total_overlapped - t.t_body - t.t_tail, 0.0)
+        return t.t_relayout
+
+    def update(self, t: SwapTiming) -> None:
+        self.count += 1
+        self.sum_cost += self.exposed_cost(t)
+        self.sum_hidden_fraction += t.hidden_fraction
+
+    @property
+    def mean_cost(self) -> float:
+        return self.sum_cost / self.count if self.count else 0.0
+
+    @property
+    def mean_hidden_fraction(self) -> float:
+        return self.sum_hidden_fraction / self.count if self.count else 0.0
+
+
 class SwapController:
     """Temporal PD swap for one engine (the paper's single-RP mode)."""
 

@@ -1,11 +1,15 @@
-"""Cluster serving entrypoint: PD-Swap engine under a synthetic request load.
+"""Cluster serving entrypoint: the step-driven engine under a synthetic load.
 
     python -m repro.launch.serve --arch smollm-135m --reduced \
-        --requests 8 --mode pdswap
+        --requests 8 --mode pdswap --swap-policy swap-aware \
+        --temperature 0.8 --top-k 40 --top-p 0.95
 
-Drives the continuous-batching ServingEngine (the paper's single-RP temporal
-logic swap, or the static TeLLMe-style baseline with --mode static) and
-prints per-phase stats including the measured overlap of the swap.
+Drives ``EngineCore.step()`` (the paper's single-RP temporal logic swap, or
+the static TeLLMe-style baseline with --mode static) with per-request
+``SamplingParams`` and a pluggable ``SwapPolicy``, and prints per-phase
+stats including the measured overlap of the swap and per-request TTFT.
+Requests arrive staggered (``--arrival-every N`` submits one request every N
+steps) so the swap policy actually has transitions to schedule.
 """
 from __future__ import annotations
 
@@ -17,7 +21,8 @@ import numpy as np
 
 from repro.configs import ALL_ARCHS, get_config, reduced_config
 from repro.models import get_model
-from repro.serving.engine import Request, ServingEngine
+from repro.serving import EngineCore, Request, SamplingParams
+from repro.serving.policy import POLICIES
 
 
 def main(argv=None) -> int:
@@ -39,7 +44,19 @@ def main(argv=None) -> int:
     p.add_argument("--max-len", type=int, default=128)
     p.add_argument("--no-overlap", action="store_true",
                    help="serialize the swap after the prefill tail (ablation)")
-    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--seed", type=int, default=0,
+                   help="seeds the params, the workload, and sampling")
+    # --- step-driven serving API ---
+    p.add_argument("--swap-policy", default="drain", choices=sorted(POLICIES),
+                   help="prefill<->decode transition policy (paper: drain)")
+    p.add_argument("--arrival-every", type=int, default=0,
+                   help="submit one request every N steps (0 = all up front)")
+    p.add_argument("--temperature", type=float, default=0.0,
+                   help="sampling temperature (0 = greedy, the paper setting)")
+    p.add_argument("--top-k", type=int, default=0, help="top-k truncation (0 = off)")
+    p.add_argument("--top-p", type=float, default=1.0, help="nucleus mass (1.0 = off)")
+    p.add_argument("--stop-token", type=int, action="append", default=None,
+                   help="token id that ends generation (repeatable)")
     args = p.parse_args(argv)
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
@@ -47,24 +64,52 @@ def main(argv=None) -> int:
     api = get_model(cfg)
     params = api.init(cfg, jax.random.PRNGKey(args.seed), dtype=jnp.float32)
 
-    eng = ServingEngine(cfg, params, n_slots=args.slots, max_len=args.max_len,
-                        prompt_len=args.prompt_len, mode=args.mode,
-                        cache_layout=args.cache_layout, block_size=args.block_size,
-                        num_blocks=args.num_blocks, overlap=not args.no_overlap)
+    eng = EngineCore(cfg, params, n_slots=args.slots, max_len=args.max_len,
+                     prompt_len=args.prompt_len, mode=args.mode,
+                     cache_layout=args.cache_layout, block_size=args.block_size,
+                     num_blocks=args.num_blocks, overlap=not args.no_overlap,
+                     swap_policy=args.swap_policy)
+    sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                        top_p=args.top_p, seed=args.seed,
+                        stop_tokens=tuple(args.stop_token or ()))
     rng = np.random.default_rng(args.seed)
     ragged_lo = max(1, min(4, args.prompt_len))  # keep low < high for tiny prompt-len
+    pending = []
     for i in range(args.requests):
         n = int(rng.integers(ragged_lo, args.prompt_len + 1)) if args.ragged else args.prompt_len
         prompt = rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
-        eng.submit(Request(f"req-{i}", prompt, max_new=args.max_new))
+        pending.append(Request(f"req-{i}", prompt, max_new=args.max_new, params=sp))
 
-    stats = eng.run()
-    print(f"\nmode={args.mode} overlap={not args.no_overlap}")
+    if args.arrival_every <= 0:
+        for r in pending:
+            eng.submit(r)
+        pending = []
+    step = 0
+    while eng.has_unfinished() or pending:
+        step += 1
+        if pending and (step - 1) % args.arrival_every == 0:
+            eng.submit(pending.pop(0))
+        eng.step()
+    stats = eng.stats
+
+    sampled = "greedy" if sp.greedy else (
+        f"T={sp.temperature} top_k={sp.top_k} top_p={sp.top_p} seed={sp.seed}")
+    print(f"\nmode={args.mode} overlap={not args.no_overlap} "
+          f"policy={args.swap_policy} sampling={sampled}")
     print(f"  requests finished : {len(eng.finished)}/{args.requests}")
     print(f"  prefill tokens    : {stats.prefill_tokens}  ({stats.t_prefill:.2f}s)")
     print(f"  decode tokens     : {stats.decode_tokens}  ({stats.t_decode:.2f}s, "
           f"{stats.decode_tput():.1f} tok/s on this host)")
-    print(f"  logic swaps       : {stats.swaps}")
+    print(f"  logic swaps       : {stats.swaps}  in {stats.prefill_bursts} "
+          f"prefill bursts (fabric flips)")
+    ttfts = [r.first_token_t - r.enqueue_t for r in eng.finished.values()]
+    if ttfts:
+        print(f"  TTFT              : mean {1e3*float(np.mean(ttfts)):.1f} ms, "
+              f"p max {1e3*float(np.max(ttfts)):.1f} ms")
+    reasons = {}
+    for r in eng.finished.values():
+        reasons[r.finish_reason] = reasons.get(r.finish_reason, 0) + 1
+    print(f"  finish reasons    : {reasons}")
     if args.cache_layout == "paged":
         kb = eng.kv_bytes()
         print(f"  KV pool           : {kb['allocated']/2**20:.2f} MiB allocated, "
@@ -73,9 +118,10 @@ def main(argv=None) -> int:
               f"{stats.prefix_misses} misses ({stats.prefix_hit_tokens} tokens reused)")
         print(f"  preemptions       : {stats.preemptions}  "
               f"admission blocks: {stats.admission_blocks}")
-    hid = [t.hidden_fraction for t in stats.swap_timings if t.t_relayout or t.t_total_overlapped]
-    if hid:
-        print(f"  swap latency hidden by overlap: {100*float(np.mean(hid)):.0f}% (paper: ~75%)")
+    if stats.swap_agg.count:
+        print(f"  swap latency hidden by overlap: "
+              f"{100*stats.swap_agg.mean_hidden_fraction:.0f}% (paper: ~75%); "
+              f"mean exposed cost {1e3*stats.swap_agg.mean_cost:.2f} ms")
     for rid in sorted(eng.finished)[:3]:
         print(f"  {rid}: {eng.finished[rid].out_tokens[:8]}...")
     return 0

@@ -1,2 +1,13 @@
-from repro.serving.engine import Request, ServingEngine, EngineStats
+from repro.serving.core import EngineCore, EngineStats, Request
+from repro.serving.engine import ServingEngine
+from repro.serving.outputs import OutputProcessor, RequestOutput
 from repro.serving.paging import BlockPool, PagedKVCache, PoolExhausted
+from repro.serving.policy import (
+    POLICIES,
+    DrainPolicy,
+    SchedulerView,
+    SwapCostAwarePolicy,
+    SwapPolicy,
+    make_policy,
+)
+from repro.serving.sampling import SamplingParams

@@ -1,0 +1,782 @@
+"""Step-driven serving core: ``EngineCore.step() -> list[RequestOutput]``.
+
+The PR-1 ``ServingEngine`` was a monolith: one ``run()`` method owned
+admission, the prefill<->decode transition, phase-program dispatch, greedy
+argmax, and finish bookkeeping.  This module splits it into three layers
+around an incremental core:
+
+* ``Scheduler`` — the wait queue, admission validation, preemption victim
+  selection, and the *swap decision*: a pluggable ``SwapPolicy``
+  (``repro.serving.policy``) is consulted once per step to decide whether to
+  pay the reconfiguration cost and flip into the prefill phase (paper §3.4).
+  ``DrainPolicy`` reproduces the paper's drain-queue-then-decode loop;
+  ``SwapCostAwarePolicy`` defers the flip while the queue is shallow
+  relative to the measured/modeled swap cost.
+
+* ``ModelRunner`` — owns everything compiled and everything device-resident:
+  phase programs and compile buckets (built on ``core.phase_engine``), the
+  contiguous or paged KV cache, the slot manager, per-slot sampling state,
+  and the vectorized on-device sampler program.  It executes prefill (with
+  the latency-overlapped swap), decode rounds, and preemption replay.
+
+* ``OutputProcessor`` — turns raw sampled tokens into streaming
+  ``RequestOutput`` deltas and owns finish semantics (stop tokens vs the
+  token budget), TTFT stamping included.
+
+``EngineCore.step()`` advances the engine by one scheduling quantum — at
+most one prefill burst (policy-gated) followed by at most one decode round —
+and returns the outputs produced.  ``run()`` survives as a thin
+compatibility loop over ``step()`` and, with greedy sampling and the default
+``DrainPolicy``, reproduces the PR-1 engine token-for-token.
+``generate()`` streams one request's outputs as an iterator.
+
+Faithful mode (``mode="pdswap"``) and the static baseline, and the
+contiguous vs paged cache layouts, keep their PR-1 semantics — see
+``repro.serving.engine`` for the original mode/layout notes.  Sampling is
+per-request (``SamplingParams``): temperature / top-k / top-p with per-slot
+PRNG keys derived as ``fold_in(PRNGKey(seed), token_index)``, so preemption
+replay (teacher-forced recorded tokens) resumes the key stream exactly and
+stays bit-identical under non-greedy sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, Iterator, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.kv_cache import KVSlotManager, insert_prefill_kv
+from repro.core.swap import SwapAggregates, SwapController, SwapTiming
+from repro.models import get_model
+from repro.serving.outputs import OutputProcessor, RequestOutput
+from repro.serving.paging import PagedKVCache, PoolExhausted, cdiv
+from repro.serving.policy import DrainPolicy, SchedulerView, SwapPolicy, make_policy
+from repro.serving.sampling import SamplingParams
+
+# Raw SwapTiming records kept for inspection; older records collapse into
+# EngineStats.swap_agg (running aggregates the SwapCostAwarePolicy reads).
+SWAP_TIMING_WINDOW = 64
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: str
+    prompt: np.ndarray  # (S,) int32 — any length with S + max_new <= max_len
+    max_new: int
+    priority: int = 0  # larger = more important; lowest goes first on preemption
+    params: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    enqueue_t: float = 0.0
+    first_token_t: float = 0.0
+    done_t: float = 0.0
+    finish_reason: Optional[str] = None  # "stop" | "length" once finished
+    # Set on preemption.  The restart re-prefills the prompt, then REPLAYS
+    # the recorded out_tokens through the decode program (teacher-forcing),
+    # reproducing the exact pre-eviction cache state — the same kernels run
+    # on the same inputs, and the sampler's key stream is a pure function of
+    # (seed, token index), so the continuation is bit-identical to a run
+    # that was never preempted, greedy or sampled alike.
+    preempted: bool = False
+
+
+@dataclasses.dataclass
+class EngineStats:
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    decode_rounds: int = 0
+    swaps: int = 0
+    prefill_bursts: int = 0  # prefill phases entered (fabric flips, not swaps)
+    swap_timings: Deque[SwapTiming] = dataclasses.field(
+        default_factory=lambda: deque(maxlen=SWAP_TIMING_WINDOW)
+    )
+    swap_agg: SwapAggregates = dataclasses.field(default_factory=SwapAggregates)
+    t_prefill: float = 0.0
+    t_decode: float = 0.0
+    # paged-layout counters
+    prefix_hits: int = 0  # prompt pages served from the prefix cache
+    prefix_misses: int = 0  # full prompt pages that had to be written
+    prefix_hit_tokens: int = 0  # tokens covered by cache-hit pages
+    preemptions: int = 0  # requests evicted to free pool capacity
+    admission_blocks: int = 0  # prefill attempts deferred on pool pressure
+    replayed_tokens: int = 0  # recompute overhead paid by preemption restarts
+    t_replay: float = 0.0  # wall time of restart replays (kept out of t_decode)
+
+    def decode_tput(self) -> float:
+        return self.decode_tokens / self.t_decode if self.t_decode else 0.0
+
+    def decode_round_cost(self) -> float:
+        return self.t_decode / self.decode_rounds if self.decode_rounds else 0.0
+
+    def record_swap(self, timing: SwapTiming) -> None:
+        self.swaps += 1
+        self.swap_timings.append(timing)
+        self.swap_agg.update(timing)
+
+
+class ModelRunner:
+    """Owns phase programs, compile buckets, caches, and the sampler."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        n_slots: int = 4,
+        max_len: int = 256,
+        prompt_len: int = 32,
+        mode: str = "pdswap",  # "pdswap" | "static"
+        cache_layout: str = "contiguous",  # "contiguous" | "paged"
+        block_size: int = 16,
+        num_blocks: Optional[int] = None,
+        mesh=None,
+        overlap: bool = True,
+    ):
+        assert cfg.family == "transformer", "serving engine drives the transformer family"
+        assert mode in ("pdswap", "static"), mode
+        assert cache_layout in ("contiguous", "paged"), cache_layout
+        self.cfg = cfg
+        self.params = params
+        self.api = get_model(cfg)
+        self.mode = mode
+        self.cache_layout = cache_layout
+        self.overlap = overlap and mode == "pdswap"
+        self.max_len = max_len
+        self.prompt_len = prompt_len
+        self.block_size = block_size
+        self.slots = KVSlotManager(n_slots)
+
+        from repro.core.phase_engine import PhaseEngine
+        from repro.models import transformer as T
+
+        self.engine = PhaseEngine(cfg, mesh, max_len=max_len, cache_layout=cache_layout)
+        self._pa = jax.eval_shape(lambda: params)
+        self._bucket_progs: Dict[int, dict] = {}  # bucket len -> phase programs
+
+        if cache_layout == "paged":
+            if num_blocks is None:
+                # full provisioning: every slot can grow to max_len
+                num_blocks = n_slots * cdiv(max_len, block_size)
+            pool_kv = T.init_paged_pool(cfg, num_blocks, block_size)
+            self.paged = PagedKVCache(
+                pool_kv, n_slots=n_slots, max_len=max_len, block_size=block_size
+            )
+            self.decode_prog = self.engine.paged_decode_program(
+                self._pa, n_slots, self.paged.max_pages
+            )
+            self.cache = None
+        else:
+            self.paged = None
+
+            def relay_static(kv):  # static engine: pad + layout only, no
+                # phase-specialized resharding / program swap
+                def pad(x):
+                    p = [(0, 0)] * x.ndim
+                    p[-2] = (0, max_len - x.shape[-2])
+                    return jnp.moveaxis(jnp.pad(x, p), 0, 1)  # -> (B, L, ...)
+
+                return jax.tree.map(pad, kv)
+
+            self.relay_static = jax.jit(relay_static)
+            self.decode_prog = self.engine.decode_program(self._pa, n_slots, max_len)
+            self.cache = self.api.init_cache(cfg, n_slots, max_len)
+        self.last_tokens = jnp.zeros((n_slots,), jnp.int32)
+
+        # Per-slot sampling state, refreshed on slot assignment.  The fold_in
+        # step index is recomputed from each request's out_tokens at sample
+        # time, so there is no mutable PRNG state to checkpoint or restore.
+        self._seeds = np.zeros(n_slots, np.int32)
+        self._temps = np.zeros(n_slots, np.float32)
+        self._top_ks = np.zeros(n_slots, np.int32)
+        self._top_ps = np.ones(n_slots, np.float32)
+
+    # ------------------------------------------------------------- buckets --
+
+    def bucket(self, n: int) -> int:
+        """Compile-bucket length for an n-token prompt (right-padded).
+
+        Fine-grained (one quantum) up to 4 quanta, then geometric (quantum x
+        power of two) — bounds distinct XLA prefill compilations at
+        O(log(max_len / quantum)) instead of max_len / quantum for ragged
+        workloads, at the cost of some padding compute."""
+        q = self.block_size if self.cache_layout == "paged" else self.prompt_len
+        b = cdiv(n, q) * q
+        if b > 4 * q:
+            g = 4 * q
+            while g < b:
+                g *= 2
+            b = g
+        # clamp to max_len: the paged bound stays a multiple of the quantum
+        # (page-write reshape needs it, and never pads to max_len); the
+        # contiguous bound is exact (relayout pads bucket -> max_len)
+        if self.cache_layout == "paged":
+            b = min(b, cdiv(self.max_len, q) * q)
+        else:
+            b = min(b, self.max_len)
+        return max(b, q)
+
+    def progs(self, bucket: int) -> dict:
+        """Phase programs for one prompt bucket, built once and cached."""
+        if bucket in self._bucket_progs:
+            return self._bucket_progs[bucket]
+        p: dict = {}
+        if self.mode == "pdswap":
+            p["body"], p["tail"] = self.engine.prefill_split_programs_varlen(self._pa, 1, bucket)
+        else:
+            p["full"] = self.engine.prefill_program_varlen(self._pa, 1, bucket)
+        if self.cache_layout == "paged":
+            p["write"] = self.engine.page_write_program(bucket, self.block_size)
+        elif self.mode == "pdswap":
+            p["relayout"] = self.engine.relayout_program(1, bucket, self.max_len)
+        self._bucket_progs[bucket] = p
+        return p
+
+    # ------------------------------------------------------------- prefill --
+
+    def restart_headroom_ok(self, req: Request) -> bool:
+        """Admit a restart only when the pool can hold its FULL replayed
+        state (prompt + already-generated tokens).  Without this, two
+        restarts admitted back to back each preempt the other during replay
+        and the admission loop livelocks with zero decode progress.
+        (Conservative: prefix hits on live pages would reduce the true
+        need.)"""
+        need = cdiv(len(req.prompt) + len(req.out_tokens) - 1, self.block_size)
+        return self.paged.pool.num_free >= need
+
+    def prefill(self, req: Request, slot: int, resuming: bool, stats: EngineStats):
+        """Run the prefill phase for one admitted request and install its KV
+        into the decode cache (the swap, latency-overlapped in pdswap mode).
+        Returns the prompt's last-token logits, shape (1, V).  Raises
+        ``PoolExhausted`` (after full rollback) when the paged pool cannot
+        hold the prompt."""
+        tokens_np = np.asarray(req.prompt, np.int32)
+        n = len(tokens_np)
+        bucket = self.bucket(n)
+        progs = self.progs(bucket)
+
+        match = None
+        if self.cache_layout == "paged":
+            match = self.paged.allocate_prompt(slot, tokens_np)  # may raise
+            if not resuming:
+                # engine-level counters reflect the OFFERED load; a restart's
+                # self-hits on its own just-evicted pages would inflate them
+                # (pool.stats keeps the raw counts)
+                n_full = n // self.block_size
+                stats.prefix_hits += match.cached_pages
+                stats.prefix_misses += n_full - match.cached_pages
+                stats.prefix_hit_tokens += match.cached_pages * self.block_size
+
+        padded = np.zeros((bucket,), np.int32)
+        padded[:n] = tokens_np
+        tokens = jnp.asarray(padded[None])
+        last_pos = jnp.int32(n - 1)
+
+        def swap_write(kv):
+            """Install prefilled KV into the decode cache — the swap payload
+            whose dispatch the overlap hides behind the prefill tail."""
+            if self.cache_layout == "paged":
+                ids = self.paged.page_ids_for_write(match, bucket // self.block_size)
+                self.paged.kv = progs["write"].fn(self.paged.kv, kv, ids)
+                return self.paged.kv
+            if self.mode == "pdswap":
+                relayed = progs["relayout"].fn(kv)
+            else:
+                relayed = self.relay_static(kv)
+            self.cache = insert_prefill_kv(self.cache, relayed, slot, n)
+            return self.cache
+
+        t0 = time.perf_counter()
+        if self.mode == "pdswap":
+            # SwapController owns the overlap protocol (dispatch the swap
+            # first, decode waits for both — paper §3.4); swap_write is this
+            # request's relayout payload.
+            ctl = SwapController(
+                progs["body"].fn,
+                lambda p, x: progs["tail"].fn(p, x, last_pos),
+                swap_write,
+            )
+            logits, _, timing = ctl.prefill_and_swap(
+                self.params, tokens, overlap=self.overlap
+            )
+            if not resuming:
+                stats.record_swap(timing)
+        else:
+            logits, kv = progs["full"].fn(self.params, tokens, last_pos)
+            swap_write(kv)
+        # restarts are recompute overhead, not offered load: their prefill
+        # time joins t_replay and they never re-count prefill_tokens/swaps
+        if resuming:
+            stats.t_replay += time.perf_counter() - t0
+        else:
+            stats.t_prefill += time.perf_counter() - t0
+            stats.prefill_tokens += n
+
+        if self.cache_layout == "paged":
+            self.paged.register_prompt_pages(match)
+        return logits
+
+    # -------------------------------------------------------------- decode --
+
+    def decode_logits(self, lengths) -> jnp.ndarray:
+        """One decode round through the phase program; updates the cache in
+        place (donated) and returns the (B, V) logits."""
+        if self.cache_layout == "paged":
+            tables = self.paged.block_tables_array()
+            logits, self.paged.kv = self.decode_prog.fn(
+                self.params, self.last_tokens, self.paged.kv, tables, lengths
+            )
+        else:
+            logits, self.cache = self.decode_prog.fn(
+                self.params, self.last_tokens, self.cache, lengths
+            )
+        return logits
+
+    # ------------------------------------------------------------- sampler --
+
+    def set_slot_sampling(self, slot: int, req: Request) -> None:
+        p = req.params
+        self._seeds[slot] = p.seed32
+        self._temps[slot] = p.temperature
+        self._top_ks[slot] = p.top_k
+        self._top_ps[slot] = p.top_p
+
+    def sample_batch(self, logits, inflight: Dict[int, Request]) -> jnp.ndarray:
+        """Next token for every slot, (B,) int32.  All-greedy batches take
+        the direct argmax path (the PR-1 hot path); any sampling request
+        routes the whole batch through the vectorized sampler program
+        (greedy slots still resolve to argmax inside it)."""
+        if all(r.params.greedy for r in inflight.values()):
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        steps = np.zeros(self.slots.n_slots, np.int32)
+        for s, r in inflight.items():
+            steps[s] = len(r.out_tokens)
+        prog = self.engine.sampler_program(self.slots.n_slots)
+        return prog.fn(
+            logits, jnp.asarray(self._seeds), jnp.asarray(steps),
+            jnp.asarray(self._temps), jnp.asarray(self._top_ks),
+            jnp.asarray(self._top_ps),
+        )
+
+    def sample_first(self, logits, req: Request) -> int:
+        """The prompt's first generated token, from the prefill logits."""
+        if req.params.greedy:
+            return int(jnp.argmax(logits[0]))
+        p = req.params
+        prog = self.engine.sampler_program(1)
+        tok = prog.fn(
+            logits[:1],
+            jnp.asarray([p.seed32], jnp.int32),
+            jnp.asarray([len(req.out_tokens)], jnp.int32),
+            jnp.asarray([p.temperature], jnp.float32),
+            jnp.asarray([p.top_k], jnp.int32),
+            jnp.asarray([p.top_p], jnp.float32),
+        )
+        return int(tok[0])
+
+    # -------------------------------------------------- paged bookkeeping --
+
+    def append_page(self, slot: int, length: int) -> None:
+        """Make position ``length`` writable, forking shared (copy-on-write)
+        pages.  Raises ``PoolExhausted`` when the pool cannot grow — the
+        EngineCore preemption loop handles that."""
+        copy = self.paged.ensure_append_page(slot, length)
+        if copy is not None:
+            dst, src = copy
+            kv = self.paged.kv
+            self.paged.kv = type(kv)(
+                kv.k.at[dst].set(kv.k[src]), kv.v.at[dst].set(kv.v[src])
+            )
+
+    def replay(self, slot: int, req: Request, stats: EngineStats) -> bool:
+        """Teacher-force the recorded tokens of a preemption restart through
+        the decode program.  All other slots are masked (length 0): the paged
+        scatter drops them, their pages and outputs are untouched.
+
+        Replay never preempts — the admission headroom check reserved its
+        pages; only decode-time growth (which generates NEW tokens every
+        round, so it always makes progress) may evict.  Returns False if the
+        pool is unexpectedly short anyway; the caller backs off.
+
+        Replay wall time lands in ``stats.t_replay`` — blocking here keeps
+        the async-dispatched replay compute from leaking into the next
+        decode round's ``t_decode`` (it would skew decode_tput)."""
+        p = len(req.prompt)
+        n_slots = self.slots.n_slots
+        t0 = time.perf_counter()
+        for j, tok in enumerate(req.out_tokens[:-1]):
+            pos = p + j
+            try:
+                copy = self.paged.ensure_append_page(slot, pos)
+            except PoolExhausted:
+                return False
+            assert copy is None  # replay appends past the prompt: no CoW
+            tokens = np.zeros((n_slots,), np.int32)
+            tokens[slot] = tok
+            lengths = np.zeros((n_slots,), np.int32)
+            lengths[slot] = pos
+            tables = self.paged.block_tables_array()
+            _, self.paged.kv = self.decode_prog.fn(
+                self.params, jnp.asarray(tokens), self.paged.kv, tables,
+                jnp.asarray(lengths),
+            )
+            stats.replayed_tokens += 1
+        jax.block_until_ready(self.paged.kv.k)
+        stats.t_replay += time.perf_counter() - t0
+        return True
+
+    def release(self, slot: int) -> None:
+        self.slots.release(slot)
+        if self.cache_layout == "paged":
+            self.paged.release_slot(slot)
+
+    # ------------------------------------------------------------- metrics --
+
+    def kv_bytes(self) -> dict:
+        """KV memory accounting for the benchmark: bytes reserved up front vs
+        the peak actually backing live tokens."""
+        if self.cache_layout == "paged":
+            return {
+                "allocated": self.paged.pool_bytes(),
+                "peak_in_use": self.paged.peak_live_pages * self.paged.page_bytes(),
+                "page_bytes": self.paged.page_bytes(),
+            }
+        nbytes = int(self.cache.k.nbytes + self.cache.v.nbytes)
+        return {"allocated": nbytes, "peak_in_use": nbytes, "page_bytes": 0}
+
+
+class Scheduler:
+    """Admission, preemption, and the swap decision for one engine."""
+
+    def __init__(self, runner: ModelRunner, policy: SwapPolicy):
+        self.runner = runner
+        self.policy = policy
+        self.queue: Deque[Request] = deque()
+        self.inflight: Dict[int, Request] = {}
+
+    def submit(self, request: Request) -> None:
+        if request.params.max_tokens is not None:
+            request.max_new = request.params.max_tokens
+        n = int(len(request.prompt))
+        if n < 1:
+            raise ValueError(f"{request.request_id}: empty prompt")
+        if n + request.max_new > self.runner.max_len:
+            raise ValueError(
+                f"{request.request_id}: prompt ({n} tokens) + max_new "
+                f"({request.max_new}) exceeds max_len={self.runner.max_len}; "
+                "prompts are never truncated — raise max_len or split the request"
+            )
+        if self.runner.cache_layout == "paged":
+            traj = cdiv(n + request.max_new - 1, self.runner.block_size)
+            if traj > self.runner.paged.num_blocks:
+                raise ValueError(
+                    f"{request.request_id}: needs {traj} KV pages over its "
+                    f"lifetime but the pool holds {self.runner.paged.num_blocks}; "
+                    "raise num_blocks or lower max_new (a request that can "
+                    "never fit would self-preempt forever)"
+                )
+        request.enqueue_t = time.perf_counter()
+        self.queue.append(request)
+
+    def requeue_head(self, request: Request) -> None:
+        self.queue.appendleft(request)
+
+    def enter_prefill_phase(self, stats: EngineStats) -> bool:
+        """The swap decision: flip into the prefill phase this step?  Called
+        only when work is queued and a slot is free.  An empty active set
+        bypasses the policy — with nothing decoding the flip has no
+        opportunity cost, and this guarantees progress under any policy."""
+        active = len(self.runner.slots.active_slots())
+        if active == 0:
+            return True
+        view = SchedulerView(
+            queue_depth=len(self.queue),
+            free_slots=len(self.runner.slots.free_slots()),
+            active_slots=active,
+            swap_cost=stats.swap_agg.mean_cost,
+            decode_round_cost=stats.decode_round_cost(),
+        )
+        return self.policy.should_prefill(view)
+
+    def pick_victim(self) -> Optional[int]:
+        """Lowest-priority inflight slot; ties broken youngest-first."""
+        if not self.inflight:
+            return None
+        return min(
+            self.inflight,
+            key=lambda s: (self.inflight[s].priority, -self.inflight[s].enqueue_t),
+        )
+
+    def preempt(self, slot: int, stats: EngineStats) -> None:
+        """Evict one request: free its pages, requeue it for a deterministic
+        restart (re-prefill the prompt, replay the generated tokens)."""
+        req = self.inflight.pop(slot)
+        req.preempted = True
+        self.runner.release(slot)
+        stats.preemptions += 1
+        self.queue.appendleft(req)
+
+
+class EngineCore:
+    """The incremental serving core; one ``step()`` = one scheduling quantum."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        n_slots: int = 4,
+        max_len: int = 256,
+        prompt_len: int = 32,
+        mode: str = "pdswap",  # "pdswap" | "static"
+        cache_layout: str = "contiguous",  # "contiguous" | "paged"
+        block_size: int = 16,
+        num_blocks: Optional[int] = None,
+        mesh=None,
+        overlap: bool = True,
+        swap_policy: Union[SwapPolicy, str, None] = None,
+    ):
+        self.cfg = cfg
+        self.runner = ModelRunner(
+            cfg, params, n_slots=n_slots, max_len=max_len, prompt_len=prompt_len,
+            mode=mode, cache_layout=cache_layout, block_size=block_size,
+            num_blocks=num_blocks, mesh=mesh, overlap=overlap,
+        )
+        if swap_policy is None:
+            swap_policy = DrainPolicy()
+        elif isinstance(swap_policy, str):
+            swap_policy = make_policy(swap_policy)
+        self.scheduler = Scheduler(self.runner, swap_policy)
+        self.stats = EngineStats()
+        self.out_proc = OutputProcessor()
+        self.finished: Dict[str, Request] = {}
+        self._gen_seq = 0
+
+    # ------------------------------------------------------------- client --
+
+    @property
+    def mode(self) -> str:
+        return self.runner.mode
+
+    @property
+    def cache_layout(self) -> str:
+        return self.runner.cache_layout
+
+    def submit(self, request: Request) -> None:
+        self.scheduler.submit(request)
+
+    def has_unfinished(self) -> bool:
+        return bool(self.scheduler.queue or self.runner.slots.active_slots())
+
+    # --------------------------------------------------------------- step --
+
+    def step(self) -> List[RequestOutput]:
+        """Advance one scheduling quantum: a policy-gated prefill burst
+        (admitting queued requests into free slots, one swap each), then one
+        decode round over the active slots.  Returns every streaming output
+        the quantum produced."""
+        outs: List[RequestOutput] = []
+        sched, runner = self.scheduler, self.runner
+        if sched.queue and runner.slots.free_slots() and sched.enter_prefill_phase(self.stats):
+            admitted = 0
+            while sched.queue and runner.slots.free_slots():
+                ok, out = self._admit_one(sched.queue.popleft())
+                if out is not None:
+                    outs.append(out)
+                if not ok:
+                    if not runner.slots.active_slots():
+                        head = sched.queue[0]
+                        raise RuntimeError(
+                            f"{head.request_id} can never be admitted: needs more "
+                            f"pages than the pool holds ({runner.paged.num_blocks} "
+                            f"blocks x {runner.block_size} tokens)"
+                        )
+                    break  # decode to drain capacity, then retry admission
+                admitted += 1
+            if admitted:
+                self.stats.prefill_bursts += 1
+        if runner.slots.active_slots():
+            outs.extend(self._decode_round())
+        if not self.has_unfinished():
+            sched.policy.reset()
+        return outs
+
+    def run(self, max_rounds: int = 10_000) -> EngineStats:
+        """Compatibility loop: the PR-1 ``ServingEngine.run()`` drain-then-
+        decode scheduling is ``step()`` under greedy + DrainPolicy."""
+        rounds = 0
+        while self.has_unfinished() and rounds < max_rounds:
+            rounds += 1
+            self.step()
+        return self.stats
+
+    def generate(
+        self,
+        prompt,
+        params: Optional[SamplingParams] = None,
+        *,
+        request_id: Optional[str] = None,
+        max_new: Optional[int] = None,
+        priority: int = 0,
+        max_steps: int = 10_000,
+    ) -> Iterator[RequestOutput]:
+        """Submit one request and stream its outputs as they are produced.
+
+        Other queued/inflight requests keep being served by the same
+        ``step()`` calls; their outputs are retained on their Request
+        objects (and in ``finished``) as usual.
+        """
+        if params is None:
+            params = SamplingParams()
+        if max_new is None:
+            max_new = 16  # submit() applies the params.max_tokens override
+        self._gen_seq += 1
+        rid = request_id or f"gen-{self._gen_seq}"
+        req = Request(rid, np.asarray(prompt, np.int32), max_new=max_new,
+                      priority=priority, params=params)
+        self.submit(req)
+        for _ in range(max_steps):
+            for out in self.step():
+                if out.request_id == rid:
+                    yield out
+                    if out.finished:
+                        return
+        raise RuntimeError(f"{rid} did not finish within {max_steps} steps")
+
+    # ---------------------------------------------------------- admission --
+
+    def _admit_one(self, req: Request):
+        """Admit one request into a slot (the old ``_prefill_one``).
+        Returns ``(ok, output)``: ``ok=False`` means admission is blocked
+        (paged pool exhausted) — the request went back to the queue head and
+        the engine should decode to drain capacity first."""
+        runner, stats, sched = self.runner, self.stats, self.scheduler
+        resuming = req.preempted and bool(req.out_tokens)
+
+        if runner.cache_layout == "paged" and resuming and not runner.restart_headroom_ok(req):
+            stats.admission_blocks += 1
+            sched.requeue_head(req)
+            return False, None
+
+        slot = runner.slots.assign(req.request_id, len(req.prompt), req.max_new)
+        runner.set_slot_sampling(slot, req)
+        try:
+            logits = runner.prefill(req, slot, resuming, stats)
+        except PoolExhausted:
+            runner.slots.release(slot)
+            stats.admission_blocks += 1
+            sched.requeue_head(req)
+            return False, None
+
+        out = None
+        if resuming:
+            # Re-feed the already-generated tokens through the decode program
+            # (other slots masked out): the cache comes back bit-identical to
+            # its pre-eviction state, so the continuation is too.
+            if not runner.replay(slot, req, stats):
+                # pool raced away mid-replay: back off, stay preempted
+                runner.release(slot)
+                stats.admission_blocks += 1
+                sched.requeue_head(req)
+                return False, None
+            req.preempted = False
+            if req.first_token_t == 0.0:
+                # Safety net: a request can only reach here with recorded
+                # tokens, which normally carry a TTFT stamp from
+                # OutputProcessor at original admission — but a request
+                # submitted with pre-seeded out_tokens (external replay,
+                # checkpoint restore) would otherwise report TTFT 0.0.
+                req.first_token_t = time.perf_counter()
+            tok = req.out_tokens[-1]
+            runner.slots.slots[slot].length = len(req.prompt) + len(req.out_tokens) - 1
+            runner.slots.slots[slot].generated = len(req.out_tokens)
+        else:
+            tok = runner.sample_first(logits, req)
+            out = self.out_proc.process_token(req, tok)
+            # the prefill already produced the first new token
+            runner.slots.slots[slot].generated = 1
+
+        finished = out.finished if out is not None else (
+            runner.slots.slots[slot].generated >= req.max_new
+        )
+        if finished:
+            if req.done_t == 0.0:
+                req.done_t = time.perf_counter()
+            self.finished[req.request_id] = req
+            runner.release(slot)
+            return True, out
+        runner.last_tokens = runner.last_tokens.at[slot].set(tok)
+        sched.inflight[slot] = req
+        return True, out
+
+    # -------------------------------------------------- paged bookkeeping --
+
+    def _grow_slot_page(self, slot: int, length: int) -> None:
+        """Make position ``length`` writable, preempting under pool pressure."""
+        while True:
+            try:
+                self.runner.append_page(slot, length)
+                return
+            except PoolExhausted:
+                victim = self.scheduler.pick_victim()
+                if victim is None:
+                    raise RuntimeError(
+                        "paged KV pool exhausted with nothing left to preempt; "
+                        f"raise num_blocks (have {self.runner.paged.num_blocks})"
+                    )
+                self.scheduler.preempt(victim, self.stats)
+                if victim == slot:
+                    return  # this very slot was evicted; caller skips it
+
+    def _ensure_append_pages(self) -> None:
+        """Before a decode round, make every active slot's next position
+        writable — growing tables at page boundaries and forking shared
+        (copy-on-write) pages — preempting the lowest-priority request when
+        the pool cannot serve the growth."""
+        for slot in self.runner.slots.active_slots():
+            s = self.runner.slots.slots[slot]
+            if s.request_id is None:  # preempted earlier in this loop
+                continue
+            self._grow_slot_page(slot, s.length)
+
+    # --------------------------------------------------------------- decode --
+
+    def _decode_round(self) -> List[RequestOutput]:
+        runner, stats, sched = self.runner, self.stats, self.scheduler
+        if runner.cache_layout == "paged":
+            self._ensure_append_pages()
+        active = runner.slots.active_slots()
+        if not active:
+            return []
+        lengths = runner.slots.lengths_array()
+        t0 = time.perf_counter()
+        logits = runner.decode_logits(lengths)
+        next_tokens = runner.sample_batch(logits, sched.inflight)
+        jax.block_until_ready(next_tokens)
+        stats.t_decode += time.perf_counter() - t0
+        stats.decode_rounds += 1
+        stats.decode_tokens += len(active)
+
+        next_np = np.asarray(next_tokens)
+        outs: List[RequestOutput] = []
+        for i in active:
+            req = sched.inflight[i]
+            out = self.out_proc.process_token(req, int(next_np[i]))
+            s = runner.slots.slots[i]
+            s.length += 1
+            s.generated += 1
+            if out.finished:
+                sched.inflight.pop(i)
+                self.finished[req.request_id] = req
+                runner.release(i)
+            outs.append(out)
+        runner.last_tokens = next_tokens
+        return outs
+
+    # -------------------------------------------------------------- metrics --
+
+    def kv_bytes(self) -> dict:
+        return self.runner.kv_bytes()

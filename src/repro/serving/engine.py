@@ -1,4 +1,14 @@
-"""End-to-end serving engine: PD-Swap over a continuous-batching runtime.
+"""PR-1 compatibility surface over the step-driven serving core.
+
+The monolithic ``ServingEngine`` was split into Scheduler / ModelRunner /
+OutputProcessor around ``EngineCore.step()`` (``repro.serving.core``).  This
+module keeps the original import surface — ``ServingEngine``, ``Request``,
+``EngineStats`` — with identical constructor signature and ``run()``
+semantics: with greedy sampling (the ``SamplingParams`` default) and the
+default ``DrainPolicy``, ``run()`` reproduces the PR-1 engine's outputs
+token-for-token (pinned by tests/test_serving_api.py).
+
+Mode and layout semantics, unchanged from PR-1:
 
 Faithful mode (``mode="pdswap"``, the paper's single-RP temporal multiplex):
 the engine alternates between a prefill phase (batching queued prompts) and a
@@ -12,505 +22,29 @@ compromise the paper's Fig. 6 quantifies.
 
 Cache layouts (orthogonal to the mode):
 
-* ``cache_layout="contiguous"`` — the seed design: one
-  ``(B_slots, L, Hkv, max_len, D)`` decode buffer; every slot pays for
-  ``max_len`` positions.
-* ``cache_layout="paged"`` — the KV-cache-centric design the paper's decode
-  engine calls for at serving scale: a fixed pool of ``block_size``-token
-  pages (``repro.serving.paging``), per-request page tables walked by the
-  scalar-prefetched paged decode kernel, hash-based prefix caching
-  (requests sharing a page-aligned prompt prefix share pages), admission
-  control when the pool is exhausted, and preemption-by-eviction of the
-  lowest-priority request when decode growth cannot be served.
+* ``cache_layout="contiguous"`` — one ``(B_slots, L, Hkv, max_len, D)``
+  decode buffer; every slot pays for ``max_len`` positions.
+* ``cache_layout="paged"`` — a fixed pool of ``block_size``-token pages
+  (``repro.serving.paging``), per-request page tables walked by the
+  scalar-prefetched paged decode kernel, hash-based prefix caching,
+  admission control when the pool is exhausted, and preemption-by-eviction
+  of the lowest-priority request when decode growth cannot be served.
 
-Prompts are variable-length in both layouts: they are right-padded to a
-compile bucket (``block_size`` granularity when paged, ``prompt_len`` when
-contiguous) and the true last token's logits are read via ``last_pos`` —
-nothing is ever silently truncated.  Prompts that cannot fit
-(``len + max_new > max_len``) are rejected at submit with a ValueError.
+Prompts are variable-length in both layouts: right-padded to a compile
+bucket and the true last token's logits read via ``last_pos`` — nothing is
+ever silently truncated; prompts that cannot fit are rejected at submit.
 
 The engine runs real tokens through the real model on this host (functional
-validation) and accumulates modeled-v5e phase latencies from roofline reports
-when provided (performance reporting; this container has no TPU).
+validation) and accumulates modeled-v5e phase latencies from roofline
+reports when provided (performance reporting; this container has no TPU).
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from collections import deque
-from typing import Dict, List, Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs.base import ModelConfig
-from repro.core.kv_cache import KVSlotManager, insert_prefill_kv
-from repro.core.swap import SwapController, SwapTiming
-from repro.models import get_model
-from repro.serving.paging import PagedKVCache, PoolExhausted, cdiv
+from repro.serving.core import EngineCore, EngineStats, Request
 
 
-@dataclasses.dataclass
-class Request:
-    request_id: str
-    prompt: np.ndarray  # (S,) int32 — any length with S + max_new <= max_len
-    max_new: int
-    priority: int = 0  # larger = more important; lowest goes first on preemption
-    out_tokens: List[int] = dataclasses.field(default_factory=list)
-    enqueue_t: float = 0.0
-    first_token_t: float = 0.0
-    done_t: float = 0.0
-    # Set on preemption.  The restart re-prefills the prompt, then REPLAYS
-    # the recorded out_tokens through the decode program (teacher-forcing),
-    # reproducing the exact pre-eviction cache state — the same kernels run
-    # on the same inputs, so the continuation is bit-identical to a run that
-    # was never preempted.
-    preempted: bool = False
+class ServingEngine(EngineCore):
+    """The PR-1 engine name; now a thin alias of the step-driven core."""
 
 
-@dataclasses.dataclass
-class EngineStats:
-    prefill_tokens: int = 0
-    decode_tokens: int = 0
-    swaps: int = 0
-    swap_timings: List[SwapTiming] = dataclasses.field(default_factory=list)
-    t_prefill: float = 0.0
-    t_decode: float = 0.0
-    # paged-layout counters
-    prefix_hits: int = 0  # prompt pages served from the prefix cache
-    prefix_misses: int = 0  # full prompt pages that had to be written
-    prefix_hit_tokens: int = 0  # tokens covered by cache-hit pages
-    preemptions: int = 0  # requests evicted to free pool capacity
-    admission_blocks: int = 0  # prefill attempts deferred on pool pressure
-    replayed_tokens: int = 0  # recompute overhead paid by preemption restarts
-    t_replay: float = 0.0  # wall time of restart replays (kept out of t_decode)
-
-    def decode_tput(self) -> float:
-        return self.decode_tokens / self.t_decode if self.t_decode else 0.0
-
-
-class ServingEngine:
-    def __init__(
-        self,
-        cfg: ModelConfig,
-        params,
-        *,
-        n_slots: int = 4,
-        max_len: int = 256,
-        prompt_len: int = 32,
-        mode: str = "pdswap",  # "pdswap" | "static"
-        cache_layout: str = "contiguous",  # "contiguous" | "paged"
-        block_size: int = 16,
-        num_blocks: Optional[int] = None,
-        mesh=None,
-        overlap: bool = True,
-    ):
-        assert cfg.family == "transformer", "serving engine drives the transformer family"
-        assert mode in ("pdswap", "static"), mode
-        assert cache_layout in ("contiguous", "paged"), cache_layout
-        self.cfg = cfg
-        self.params = params
-        self.api = get_model(cfg)
-        self.mode = mode
-        self.cache_layout = cache_layout
-        self.overlap = overlap and mode == "pdswap"
-        self.max_len = max_len
-        self.prompt_len = prompt_len
-        self.block_size = block_size
-        self.slots = KVSlotManager(n_slots)
-        self.queue: deque[Request] = deque()
-        self.finished: Dict[str, Request] = {}
-        self.stats = EngineStats()
-        self._inflight: Dict[int, Request] = {}
-
-        from repro.core.phase_engine import PhaseEngine
-        from repro.models import transformer as T
-
-        self.engine = PhaseEngine(cfg, mesh, max_len=max_len, cache_layout=cache_layout)
-        self._pa = jax.eval_shape(lambda: params)
-        self._bucket_progs: Dict[int, dict] = {}  # bucket len -> phase programs
-
-        if cache_layout == "paged":
-            if num_blocks is None:
-                # full provisioning: every slot can grow to max_len
-                num_blocks = n_slots * cdiv(max_len, block_size)
-            pool_kv = T.init_paged_pool(cfg, num_blocks, block_size)
-            self.paged = PagedKVCache(
-                pool_kv, n_slots=n_slots, max_len=max_len, block_size=block_size
-            )
-            self.decode_prog = self.engine.paged_decode_program(
-                self._pa, n_slots, self.paged.max_pages
-            )
-            self.cache = None
-        else:
-            self.paged = None
-
-            def relay_static(kv):  # static engine: pad + layout only, no
-                # phase-specialized resharding / program swap
-                def pad(x):
-                    p = [(0, 0)] * x.ndim
-                    p[-2] = (0, max_len - x.shape[-2])
-                    return jnp.moveaxis(jnp.pad(x, p), 0, 1)  # -> (B, L, ...)
-
-                return jax.tree.map(pad, kv)
-
-            self.relay_static = jax.jit(relay_static)
-            self.decode_prog = self.engine.decode_program(self._pa, n_slots, max_len)
-            self.cache = self.api.init_cache(cfg, n_slots, max_len)
-        self.last_tokens = jnp.zeros((n_slots,), jnp.int32)
-
-    # ------------------------------------------------------------- client --
-
-    def submit(self, request: Request):
-        n = int(len(request.prompt))
-        if n < 1:
-            raise ValueError(f"{request.request_id}: empty prompt")
-        if n + request.max_new > self.max_len:
-            raise ValueError(
-                f"{request.request_id}: prompt ({n} tokens) + max_new "
-                f"({request.max_new}) exceeds max_len={self.max_len}; "
-                "prompts are never truncated — raise max_len or split the request"
-            )
-        if self.cache_layout == "paged":
-            traj = cdiv(n + request.max_new - 1, self.block_size)
-            if traj > self.paged.num_blocks:
-                raise ValueError(
-                    f"{request.request_id}: needs {traj} KV pages over its "
-                    f"lifetime but the pool holds {self.paged.num_blocks}; "
-                    "raise num_blocks or lower max_new (a request that can "
-                    "never fit would self-preempt forever)"
-                )
-        request.enqueue_t = time.perf_counter()
-        self.queue.append(request)
-
-    # -------------------------------------------------------------- phases --
-
-    def _bucket(self, n: int) -> int:
-        """Compile-bucket length for an n-token prompt (right-padded).
-
-        Fine-grained (one quantum) up to 4 quanta, then geometric (quantum x
-        power of two) — bounds distinct XLA prefill compilations at
-        O(log(max_len / quantum)) instead of max_len / quantum for ragged
-        workloads, at the cost of some padding compute."""
-        q = self.block_size if self.cache_layout == "paged" else self.prompt_len
-        b = cdiv(n, q) * q
-        if b > 4 * q:
-            g = 4 * q
-            while g < b:
-                g *= 2
-            b = g
-        # clamp to max_len: the paged bound stays a multiple of the quantum
-        # (page-write reshape needs it, and never pads to max_len); the
-        # contiguous bound is exact (relayout pads bucket -> max_len)
-        if self.cache_layout == "paged":
-            b = min(b, cdiv(self.max_len, q) * q)
-        else:
-            b = min(b, self.max_len)
-        return max(b, q)
-
-    def _progs(self, bucket: int) -> dict:
-        """Phase programs for one prompt bucket, built once and cached."""
-        if bucket in self._bucket_progs:
-            return self._bucket_progs[bucket]
-        p: dict = {}
-        if self.mode == "pdswap":
-            p["body"], p["tail"] = self.engine.prefill_split_programs_varlen(self._pa, 1, bucket)
-        else:
-            p["full"] = self.engine.prefill_program_varlen(self._pa, 1, bucket)
-        if self.cache_layout == "paged":
-            p["write"] = self.engine.page_write_program(bucket, self.block_size)
-        elif self.mode == "pdswap":
-            p["relayout"] = self.engine.relayout_program(1, bucket, self.max_len)
-        self._bucket_progs[bucket] = p
-        return p
-
-    def _prefill_one(self, req: Request) -> bool:
-        """Prefill one request into a slot.  Returns False when admission is
-        blocked (paged pool exhausted) — the request goes back to the queue
-        head and the engine decodes to drain capacity first."""
-        resuming = req.preempted and bool(req.out_tokens)
-        tokens_np = np.asarray(req.prompt, np.int32)
-        n = len(tokens_np)
-        bucket = self._bucket(n)
-        progs = self._progs(bucket)
-
-        if self.cache_layout == "paged" and resuming:
-            # Admit a restart only when the pool can hold its FULL replayed
-            # state (prompt + already-generated tokens).  Without this, two
-            # restarts admitted back to back each preempt the other during
-            # replay and the admission loop livelocks with zero decode
-            # progress.  (Conservative: prefix hits on live pages would
-            # reduce the true need.)
-            need = cdiv(n + len(req.out_tokens) - 1, self.block_size)
-            if self.paged.pool.num_free < need:
-                self.stats.admission_blocks += 1
-                self.queue.appendleft(req)
-                return False
-
-        slot = self.slots.assign(req.request_id, n, req.max_new)
-        match = None
-        if self.cache_layout == "paged":
-            try:
-                match = self.paged.allocate_prompt(slot, tokens_np)
-            except PoolExhausted:
-                self.slots.release(slot)
-                self.stats.admission_blocks += 1
-                self.queue.appendleft(req)
-                return False
-            if not resuming:
-                # engine-level counters reflect the OFFERED load; a restart's
-                # self-hits on its own just-evicted pages would inflate them
-                # (pool.stats keeps the raw counts)
-                n_full = n // self.block_size
-                self.stats.prefix_hits += match.cached_pages
-                self.stats.prefix_misses += n_full - match.cached_pages
-                self.stats.prefix_hit_tokens += match.cached_pages * self.block_size
-
-        padded = np.zeros((bucket,), np.int32)
-        padded[:n] = tokens_np
-        tokens = jnp.asarray(padded[None])
-        last_pos = jnp.int32(n - 1)
-
-        def swap_write(kv):
-            """Install prefilled KV into the decode cache — the swap payload
-            whose dispatch the overlap hides behind the prefill tail."""
-            if self.cache_layout == "paged":
-                ids = self.paged.page_ids_for_write(match, bucket // self.block_size)
-                self.paged.kv = progs["write"].fn(self.paged.kv, kv, ids)
-                return self.paged.kv
-            if self.mode == "pdswap":
-                relayed = progs["relayout"].fn(kv)
-            else:
-                relayed = self.relay_static(kv)
-            self.cache = insert_prefill_kv(self.cache, relayed, slot, n)
-            return self.cache
-
-        t0 = time.perf_counter()
-        if self.mode == "pdswap":
-            # SwapController owns the overlap protocol (dispatch the swap
-            # first, decode waits for both — paper §3.4); swap_write is this
-            # request's relayout payload.
-            ctl = SwapController(
-                progs["body"].fn,
-                lambda p, x: progs["tail"].fn(p, x, last_pos),
-                swap_write,
-            )
-            logits, _, timing = ctl.prefill_and_swap(
-                self.params, tokens, overlap=self.overlap
-            )
-            if not resuming:
-                self.stats.swap_timings.append(timing)
-                self.stats.swaps += 1
-        else:
-            logits, kv = progs["full"].fn(self.params, tokens, last_pos)
-            swap_write(kv)
-        # restarts are recompute overhead, not offered load: their prefill
-        # time joins t_replay and they never re-count prefill_tokens/swaps
-        if resuming:
-            self.stats.t_replay += time.perf_counter() - t0
-        else:
-            self.stats.t_prefill += time.perf_counter() - t0
-            self.stats.prefill_tokens += n
-
-        if self.cache_layout == "paged":
-            self.paged.register_prompt_pages(match)
-
-        tok = int(jnp.argmax(logits[0]))
-        if resuming:
-            # Re-feed the already-generated tokens through the decode program
-            # (other slots masked out): the cache comes back bit-identical to
-            # its pre-eviction state, so the greedy continuation is too.
-            if not self._replay(slot, req):
-                # pool raced away mid-replay: back off, stay preempted
-                self._release(slot)
-                self.stats.admission_blocks += 1
-                self.queue.appendleft(req)
-                return False
-            req.preempted = False
-            tok = req.out_tokens[-1]
-            self.slots.slots[slot].length = n + len(req.out_tokens) - 1
-            self.slots.slots[slot].generated = len(req.out_tokens)
-        else:
-            req.out_tokens.append(tok)
-            req.first_token_t = time.perf_counter()
-            # the prefill already produced the first new token
-            self.slots.slots[slot].generated = 1
-        if self.slots.slots[slot].generated >= req.max_new:
-            req.done_t = time.perf_counter()
-            self.finished[req.request_id] = req
-            self._release(slot)
-            return True
-        self.last_tokens = self.last_tokens.at[slot].set(tok)
-        self._inflight[slot] = req
-        return True
-
-    def _release(self, slot: int) -> None:
-        self.slots.release(slot)
-        if self.cache_layout == "paged":
-            self.paged.release_slot(slot)
-
-    # --------------------------------------------------- paged bookkeeping --
-
-    def _pick_victim(self) -> Optional[int]:
-        """Lowest-priority inflight slot; ties broken youngest-first."""
-        if not self._inflight:
-            return None
-        return min(
-            self._inflight,
-            key=lambda s: (self._inflight[s].priority, -self._inflight[s].enqueue_t),
-        )
-
-    def _preempt(self, slot: int) -> None:
-        """Evict one request: free its pages, requeue it for a deterministic
-        restart (re-prefill the prompt, replay the generated tokens)."""
-        req = self._inflight.pop(slot)
-        req.preempted = True
-        self._release(slot)
-        self.stats.preemptions += 1
-        self.queue.appendleft(req)
-
-    def _grow_slot_page(self, slot: int, length: int) -> None:
-        """Make position ``length`` writable, preempting under pool pressure."""
-        while True:
-            try:
-                copy = self.paged.ensure_append_page(slot, length)
-                if copy is not None:
-                    dst, src = copy
-                    kv = self.paged.kv
-                    self.paged.kv = type(kv)(
-                        kv.k.at[dst].set(kv.k[src]), kv.v.at[dst].set(kv.v[src])
-                    )
-                return
-            except PoolExhausted:
-                victim = self._pick_victim()
-                if victim is None:
-                    raise RuntimeError(
-                        "paged KV pool exhausted with nothing left to preempt; "
-                        f"raise num_blocks (have {self.paged.num_blocks})"
-                    )
-                self._preempt(victim)
-                if victim == slot:
-                    return  # this very slot was evicted; caller skips it
-
-    def _replay(self, slot: int, req: Request) -> bool:
-        """Teacher-force the recorded tokens of a preemption restart through
-        the decode program.  All other slots are masked (length 0): the paged
-        scatter drops them, their pages and outputs are untouched.
-
-        Replay never preempts — the admission headroom check reserved its
-        pages; only decode-time growth (which generates NEW tokens every
-        round, so it always makes progress) may evict.  Returns False if the
-        pool is unexpectedly short anyway; the caller backs off.
-
-        Replay wall time lands in ``stats.t_replay`` — blocking here keeps
-        the async-dispatched replay compute from leaking into the next
-        decode round's ``t_decode`` (it would skew decode_tput)."""
-        p = len(req.prompt)
-        n_slots = self.slots.n_slots
-        t0 = time.perf_counter()
-        for j, tok in enumerate(req.out_tokens[:-1]):
-            pos = p + j
-            try:
-                copy = self.paged.ensure_append_page(slot, pos)
-            except PoolExhausted:
-                return False
-            assert copy is None  # replay appends past the prompt: no CoW
-            tokens = np.zeros((n_slots,), np.int32)
-            tokens[slot] = tok
-            lengths = np.zeros((n_slots,), np.int32)
-            lengths[slot] = pos
-            tables = self.paged.block_tables_array()
-            _, self.paged.kv = self.decode_prog.fn(
-                self.params, jnp.asarray(tokens), self.paged.kv, tables,
-                jnp.asarray(lengths),
-            )
-            self.stats.replayed_tokens += 1
-        jax.block_until_ready(self.paged.kv.k)
-        self.stats.t_replay += time.perf_counter() - t0
-        return True
-
-    def _ensure_append_pages(self) -> None:
-        """Before a decode round, make every active slot's next position
-        writable — growing tables at page boundaries and forking shared
-        (copy-on-write) pages — preempting the lowest-priority request when
-        the pool cannot serve the growth."""
-        for slot in self.slots.active_slots():
-            s = self.slots.slots[slot]
-            if s.request_id is None:  # preempted earlier in this loop
-                continue
-            self._grow_slot_page(slot, s.length)
-
-    # --------------------------------------------------------------- decode --
-
-    def _decode_round(self) -> None:
-        if self.cache_layout == "paged":
-            self._ensure_append_pages()
-        active = self.slots.active_slots()
-        if not active:
-            return
-        lengths = self.slots.lengths_array()
-        t0 = time.perf_counter()
-        if self.cache_layout == "paged":
-            tables = self.paged.block_tables_array()
-            logits, self.paged.kv = self.decode_prog.fn(
-                self.params, self.last_tokens, self.paged.kv, tables, lengths
-            )
-        else:
-            logits, self.cache = self.decode_prog.fn(
-                self.params, self.last_tokens, self.cache, lengths
-            )
-        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        jax.block_until_ready(next_tokens)
-        self.stats.t_decode += time.perf_counter() - t0
-
-        self.stats.decode_tokens += len(active)
-        next_np = np.asarray(next_tokens)
-        for i in active:
-            self._inflight[i].out_tokens.append(int(next_np[i]))
-        self.last_tokens = next_tokens
-
-        def finish(i, s):
-            req = self._inflight.pop(i)
-            req.done_t = time.perf_counter()
-            self.finished[req.request_id] = req
-            if self.cache_layout == "paged":
-                self.paged.release_slot(i)
-
-        self.slots.step(finished_cb=finish)
-
-    # ----------------------------------------------------------------- run --
-
-    def run(self, max_rounds: int = 10_000) -> EngineStats:
-        """Paper scheduling: drain queue with prefill (one swap per batch of
-        prompts), then decode until slots empty or new work arrives."""
-        rounds = 0
-        while (self.queue or self.slots.active_slots()) and rounds < max_rounds:
-            rounds += 1
-            while self.queue and self.slots.free_slots():
-                if not self._prefill_one(self.queue.popleft()):
-                    if not self.slots.active_slots():
-                        head = self.queue[0]
-                        raise RuntimeError(
-                            f"{head.request_id} can never be admitted: needs more "
-                            f"pages than the pool holds ({self.paged.num_blocks} "
-                            f"blocks x {self.block_size} tokens)"
-                        )
-                    break  # decode to drain capacity, then retry admission
-            if self.slots.active_slots():
-                self._decode_round()
-        return self.stats
-
-    # -------------------------------------------------------------- metrics --
-
-    def kv_bytes(self) -> dict:
-        """KV memory accounting for the benchmark: bytes reserved up front vs
-        the peak actually backing live tokens."""
-        if self.cache_layout == "paged":
-            return {
-                "allocated": self.paged.pool_bytes(),
-                "peak_in_use": self.paged.peak_live_pages * self.paged.page_bytes(),
-                "page_bytes": self.paged.page_bytes(),
-            }
-        nbytes = int(self.cache.k.nbytes + self.cache.v.nbytes)
-        return {"allocated": nbytes, "peak_in_use": nbytes, "page_bytes": 0}
+__all__ = ["EngineCore", "EngineStats", "Request", "ServingEngine"]

@@ -1,0 +1,82 @@
+"""Output side of the serving core: incremental ``RequestOutput`` deltas and
+finish-reason detection.
+
+``OutputProcessor`` is the third layer of the EngineCore split (Scheduler /
+ModelRunner / OutputProcessor): every token the runner produces flows through
+``process_token``, which appends it to the request, stamps TTFT exactly once
+(including on the preemption-restart path, where the pre-PR-2 engine left it
+at 0.0), decides whether the request is finished — a stop token
+(``finish_reason="stop"``) or the ``max_new``/``max_tokens`` budget
+(``finish_reason="length"``) — and emits the streaming delta that
+``EngineCore.step()`` returns and ``engine.generate()`` yields.
+
+Preempted requests re-enter through replay (teacher-forced recorded tokens),
+which bypasses this module on purpose: those tokens were already emitted to
+the client before eviction, and replay reproduces cache state bit-identically,
+so the stream simply continues where it left off.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    """One streaming increment for one request.
+
+    ``new_token_ids`` is the delta this step produced (one token per decode
+    round; the prefill's first token arrives as its own delta).
+    ``token_ids`` is the full generated sequence so far — a LIVE view
+    aliasing the request's token list (copying it per delta would make
+    streaming O(n^2) on the decode hot path); ``list(out.token_ids)`` if a
+    snapshot is needed.  Because ``step()`` returns its outputs after the
+    whole quantum, a delta produced early in a step (e.g. the prefill's
+    first token) can show a ``token_ids`` view that already includes that
+    same step's decode token — the view never lags the deltas, but it may
+    run ahead.  When ``finished``, ``finish_reason`` is ``"stop"``
+    (a stop token was generated — it is kept as the last token) or
+    ``"length"`` (the token budget ran out).
+    """
+
+    request_id: str
+    new_token_ids: List[int]
+    token_ids: List[int]
+    finished: bool = False
+    finish_reason: Optional[str] = None
+
+
+class OutputProcessor:
+    """Turns raw sampled tokens into RequestOutputs; owns finish semantics."""
+
+    def process_token(self, req, tok: int) -> RequestOutput:
+        req.out_tokens.append(tok)
+        now = time.perf_counter()
+        if req.first_token_t == 0.0:
+            # First token for this request — or a restart whose original
+            # admission predates TTFT stamping (the PR-1 bug: resumed
+            # requests reported TTFT 0.0).  Never overwrite a real stamp.
+            req.first_token_t = now
+        reason = None
+        if tok in req.params.stop_tokens:
+            reason = "stop"
+        elif len(req.out_tokens) >= req.max_new:
+            reason = "length"
+        if reason is not None:
+            req.finish_reason = reason
+            req.done_t = now
+        return RequestOutput(
+            request_id=req.request_id,
+            new_token_ids=[tok],
+            token_ids=req.out_tokens,
+            finished=reason is not None,
+            finish_reason=reason,
+        )
+
+    @staticmethod
+    def resume_output(req) -> Optional[RequestOutput]:
+        """Nothing to emit on a restart — the recorded tokens were streamed
+        before eviction and replay reproduces state exactly.  Kept as an
+        explicit hook so alternative processors can surface resume events."""
+        return None

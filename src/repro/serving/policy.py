@@ -1,0 +1,129 @@
+"""Pluggable prefill<->decode transition policies (paper §3.4 scheduling).
+
+On the FPGA, flipping the fabric between the prefill and decode engines costs
+a ~45 ms partial-bitstream load; on this stack the analogue is the exposed
+(decode-visible) latency of the KV-relayout swap program.  *When* to pay that
+cost was hardcoded in the PR-1 engine as drain-queue-then-decode.  The
+``EngineCore`` scheduler now delegates the decision to a ``SwapPolicy``:
+
+* ``DrainPolicy`` — the paper's behavior, and the default: enter the prefill
+  phase whenever a request is queued and a slot is free.  With greedy
+  sampling this reproduces the PR-1 engine token-for-token.
+
+* ``SwapCostAwarePolicy`` — consults the measured ``SwapTiming`` history
+  (``EngineStats.swap_agg``, the running aggregates over the bounded
+  timing window) and defers the swap while the queue is shallow relative to
+  the modeled reconfiguration cost: if one swap costs as much decode-visible
+  time as ``r`` decode rounds, admitting for a single queued request stalls
+  every active slot for ``r`` rounds — better to keep decoding until enough
+  requests accumulate to amortize the flip.  A ``swap_cost_override`` lets a
+  roofline-modeled figure (e.g. the paper's 45 ms PCAP load on target
+  hardware) stand in for measured host timings, and ``min_queue`` pins the
+  threshold outright (deterministic tests).  A defer cap bounds queueing
+  delay, and an empty active set always admits, so progress is guaranteed.
+
+Policies see only an immutable ``SchedulerView`` snapshot — they decide the
+phase, never mutate engine state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerView:
+    """Snapshot the scheduler hands a policy once per step (only when at
+    least one request is queued AND a slot is free)."""
+
+    queue_depth: int
+    free_slots: int
+    active_slots: int
+    swap_cost: float  # mean exposed swap latency, seconds (0 until measured)
+    decode_round_cost: float  # mean decode-round latency, seconds
+
+
+class SwapPolicy:
+    """Decides, once per step, whether to flip into the prefill phase."""
+
+    name = "base"
+
+    def should_prefill(self, view: SchedulerView) -> bool:
+        raise NotImplementedError
+
+    def reset(self) -> None:
+        """Called when the engine goes idle (no queue, no active slots)."""
+
+
+class DrainPolicy(SwapPolicy):
+    """Paper scheduling: always prefill when work is queued and a slot is
+    free (the engine drains the queue, then decodes)."""
+
+    name = "drain"
+
+    def should_prefill(self, view: SchedulerView) -> bool:
+        return True
+
+
+class SwapCostAwarePolicy(SwapPolicy):
+    """Defer the swap while the queue is shallow relative to its cost.
+
+    Threshold: admit when ``queue_depth >= swap_cost / decode_round_cost``
+    (scaled by ``cost_ratio``) — i.e. when the queued work is at least as
+    deep as the number of decode rounds one flip would stall.  Admits
+    unconditionally when nothing is decoding (the flip has no opportunity
+    cost) and after ``max_defer_rounds`` consecutive deferrals (bounds the
+    queueing delay added to any single request).
+    """
+
+    name = "swap-aware"
+
+    def __init__(
+        self,
+        *,
+        cost_ratio: float = 1.0,
+        max_defer_rounds: int = 8,
+        min_queue: Optional[int] = None,
+        swap_cost_override: Optional[float] = None,
+    ):
+        if max_defer_rounds < 1:
+            raise ValueError("max_defer_rounds must be >= 1")
+        self.cost_ratio = cost_ratio
+        self.max_defer_rounds = max_defer_rounds
+        self.min_queue = min_queue
+        self.swap_cost_override = swap_cost_override
+        self._deferred = 0
+
+    def threshold(self, view: SchedulerView) -> int:
+        if self.min_queue is not None:
+            return self.min_queue
+        cost = self.swap_cost_override if self.swap_cost_override is not None else view.swap_cost
+        if view.decode_round_cost <= 0.0:
+            return 1  # no history yet: behave like DrainPolicy while warming up
+        return max(1, math.ceil(self.cost_ratio * cost / view.decode_round_cost))
+
+    def should_prefill(self, view: SchedulerView) -> bool:
+        if view.active_slots == 0 or self._deferred >= self.max_defer_rounds:
+            self._deferred = 0
+            return True
+        if view.queue_depth >= self.threshold(view):
+            self._deferred = 0
+            return True
+        self._deferred += 1
+        return False
+
+    def reset(self) -> None:
+        self._deferred = 0
+
+
+POLICIES = {
+    DrainPolicy.name: DrainPolicy,
+    SwapCostAwarePolicy.name: SwapCostAwarePolicy,
+}
+
+
+def make_policy(name: str, **kwargs) -> SwapPolicy:
+    if name not in POLICIES:
+        raise ValueError(f"unknown swap policy {name!r}; choose from {sorted(POLICIES)}")
+    return POLICIES[name](**kwargs)

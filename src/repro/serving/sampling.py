@@ -1,0 +1,64 @@
+"""Per-request sampling parameters for the serving API.
+
+The paper's runtime (and the PR-1 engine) hardwired greedy argmax into both
+the prefill epilogue and the decode round.  Serving-scale traffic needs
+per-request generation control, so sampling is a first-class phase program:
+one jitted ``sample_tokens`` call per decode round draws every slot's next
+token on device — temperature scaling, top-k truncation and top-p (nucleus)
+truncation composed per slot, with greedy slots taking the argmax path
+inside the same program.  The sampler math itself lives in
+``repro.core.sampling`` (the core layer, next to the other phase-program
+builders) and is re-exported here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core.sampling import filter_logits, sample_tokens  # noqa: F401 (re-export)
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request generation parameters (immutable; validated on build).
+
+    ``temperature == 0`` selects greedy argmax — the PR-1 behavior and the
+    default, so existing callers are unchanged.  ``top_k == 0`` and
+    ``top_p == 1.0`` disable the respective truncations.  ``stop_tokens``
+    end generation early (the stop token is kept in the output, finish
+    reason ``"stop"``); ``max_tokens``, when set, overrides the request's
+    ``max_new`` budget (finish reason ``"length"``).
+
+    ``seed`` makes generation deterministic: token ``i`` is always drawn
+    with ``fold_in(PRNGKey(seed), i)``, so seeded sampling is bit-identical
+    across runs and across preemption/restart cycles (see
+    ``repro.core.sampling``).
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+    stop_tokens: Tuple[int, ...] = ()
+    max_tokens: Optional[int] = None
+
+    def __post_init__(self):
+        if self.temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (0 disables), got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.max_tokens is not None and self.max_tokens < 1:
+            raise ValueError(f"max_tokens must be >= 1, got {self.max_tokens}")
+        object.__setattr__(self, "stop_tokens", tuple(int(t) for t in self.stop_tokens))
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+    @property
+    def seed32(self) -> int:
+        """Seed folded into the non-negative int32 range PRNGKey accepts
+        under jit (x64 disabled)."""
+        return int(self.seed) & 0x7FFFFFFF
