@@ -15,6 +15,24 @@ REPO = Path(__file__).resolve().parent.parent
 DRYRUN_DIR = REPO / "results" / "dryrun"
 BENCH_DIR = REPO / "results" / "bench"
 
+# Shared KV-cache footprint columns (kv_dtype subsystem): every benchmark
+# that touches a serving engine can merge these into its rows so cache
+# footprint and roofline position are reported uniformly.
+KV_COLUMNS = ("kv_dtype", "kv_bytes/ctx_tok", "kv_arith_intensity")
+
+
+def kv_cache_columns(cfg, kv_dtype: str = "fp") -> dict:
+    """The ``KV_COLUMNS`` cells for one (config, kv_dtype): Eq.(5) bytes per
+    cached token streamed per decode step (payload + scale planes) and the
+    decode-attention arithmetic intensity (flops per KV byte)."""
+    from repro.core.roofline import decode_arithmetic_intensity, kv_bytes_per_ctx_token
+
+    return {
+        "kv_dtype": kv_dtype,
+        "kv_bytes/ctx_tok": kv_bytes_per_ctx_token(cfg, kv_dtype),
+        "kv_arith_intensity": decode_arithmetic_intensity(cfg, kv_dtype),
+    }
+
 
 def load_dryrun_records() -> list[dict]:
     if not DRYRUN_DIR.exists():

@@ -1,0 +1,161 @@
+"""KV-cache quantization sweep: footprint, roofline position, and accuracy.
+
+The paper's decode bound (Eq. 5) is KV bytes streamed per token, so the
+``kv_dtype`` subsystem (packed int8/int4 payload + fp32 scale planes, fused
+dequant in the decode kernels) moves the decode roofline directly.  This
+benchmark runs the REAL serving engine (tiny functional config on this host)
+per kv_dtype across context-length regimes and reports:
+
+* per-context-token KV bytes (payload + scales, the Eq. (5) coefficient)
+  and the decode-attention arithmetic intensity (flops per KV byte) — the
+  shared ``KV_COLUMNS`` schema from ``benchmarks.common``,
+* the engine's measured pool payload bytes (must shrink exactly 2x / 4x),
+* greedy-output divergence vs the fp engine: fraction of tokens that match
+  token-for-token and the earliest step at which any request diverges,
+* the modeled v5e Eq. (5) KV-stream time per decoded token at the regime's
+  mean context, per precision.
+
+``--tiny`` is the CI smoke mode (single regime), run alongside
+``paged_vs_contiguous --tiny``.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.common.hardware import TPU_V5E
+
+from .common import kv_cache_columns, render, save_result
+
+KV_DTYPES = ("fp", "int8", "int4")
+
+
+def _divergence(ref: dict, got: dict):
+    """(positionwise token match fraction, earliest diverging step or -1,
+    #requests matching exactly).  Positionwise: tokens after a mismatch
+    still count when they re-agree, so the fraction measures agreement,
+    not just the shared prefix."""
+    matched = total = 0
+    first_div = -1
+    exact = 0
+    for rid, ref_toks in ref.items():
+        toks = got[rid]
+        assert len(toks) == len(ref_toks), rid
+        total += len(ref_toks)
+        mismatches = [i for i, (a, b) in enumerate(zip(ref_toks, toks)) if a != b]
+        matched += len(ref_toks) - len(mismatches)
+        if not mismatches:
+            exact += 1
+        elif first_div < 0 or mismatches[0] < first_div:
+            first_div = mismatches[0]
+    return (matched / total if total else 1.0), first_div, exact
+
+
+def run(tiny: bool = False) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import reduced_config
+    from repro.models import get_model
+    from repro.serving import EngineCore, Request
+
+    cfg = reduced_config("bitnet-730m", num_layers=3, d_model=128, vocab_size=512,
+                         num_heads=4, num_kv_heads=2)
+    api = get_model(cfg)
+    params = api.init(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+
+    regimes = [  # (max_len, prompt range, max_new)
+        (64, (8, 24), 6),
+        (128, (16, 56), 8),
+        (256, (32, 120), 8),
+    ]
+    if tiny:
+        regimes = regimes[:1]
+
+    rows = []
+    payloads: dict = {}
+    rng = np.random.default_rng(0)
+    for max_len, (lo, hi), max_new in regimes:
+        prompts = [rng.integers(0, cfg.vocab_size, int(rng.integers(lo, hi + 1))).astype(np.int32)
+                   for _ in range(4)]
+        mean_ctx = float(np.mean([len(p) + max_new for p in prompts]))
+        per_dtype = {}
+        for kv_dtype in KV_DTYPES:
+            eng = EngineCore(cfg, params, n_slots=3, max_len=max_len, prompt_len=16,
+                             mode="static", cache_layout="paged", block_size=16,
+                             kv_dtype=kv_dtype)
+            for i, p in enumerate(prompts):
+                eng.submit(Request(f"r{i}", p.copy(), max_new=max_new))
+            stats = eng.run()
+            assert len(eng.finished) == len(prompts)
+            per_dtype[kv_dtype] = (eng.kv_bytes(),
+                                   {k: v.out_tokens for k, v in eng.finished.items()},
+                                   stats)
+        ref_out = per_dtype["fp"][1]
+        for kv_dtype in KV_DTYPES:
+            kb, out, stats = per_dtype[kv_dtype]
+            match_frac, first_div, exact = _divergence(ref_out, out)
+            cols = kv_cache_columns(cfg, kv_dtype)
+            payloads.setdefault(kv_dtype, kb["payload"])
+            rows.append({
+                "max_len": max_len,
+                "mean_ctx": mean_ctx,
+                **cols,
+                "pool_payload_bytes": kb["payload"],
+                "pool_bytes": kb["allocated"],
+                "tok/s (host)": stats.decode_tput(),
+                "token_match_vs_fp": match_frac,
+                "first_divergence": first_div,
+                "exact_requests": f"{exact}/{len(prompts)}",
+                "v5e_kv_stream_ms/tok": 1e3 * cols["kv_bytes/ctx_tok"] * mean_ctx / TPU_V5E.hbm_bw,
+            })
+
+    fp_rows = [r for r in rows if r["kv_dtype"] == "fp"]
+    i8_rows = [r for r in rows if r["kv_dtype"] == "int8"]
+    i4_rows = [r for r in rows if r["kv_dtype"] == "int4"]
+    checks = {
+        "int8 pool payload is exactly half of fp": payloads["fp"] == 2 * payloads["int8"],
+        "int4 pool payload is exactly a quarter of fp": payloads["fp"] == 4 * payloads["int4"],
+        "fp-vs-fp divergence is zero": all(r["token_match_vs_fp"] == 1.0 for r in fp_rows),
+        "arithmetic intensity rises with compression": all(
+            a["kv_arith_intensity"] < b["kv_arith_intensity"] < c["kv_arith_intensity"]
+            for a, b, c in zip(fp_rows, i8_rows, i4_rows)
+        ),
+        "int8 tracks fp greedy closely (>=95% tokens)": all(
+            r["token_match_vs_fp"] >= 0.95 for r in i8_rows
+        ),
+        "int4 tracks fp greedy at half the tokens or better": all(
+            r["token_match_vs_fp"] >= 0.5 for r in i4_rows
+        ),
+    }
+    result = {
+        "name": "kv_quant_sweep" + ("_tiny" if tiny else ""),
+        "rows": rows,
+        "notes": (
+            "Quantized KV cache (paged layout, real engine, tiny config, host "
+            "CPU) per kv_dtype and context regime.  kv_bytes/ctx_tok and "
+            "kv_arith_intensity are the analytic Eq.(5) terms from "
+            "repro.core.roofline; v5e column = modeled KV-stream time per "
+            "decoded token at the regime's mean context.  Divergence is "
+            "greedy token agreement vs the fp engine.  Claim checks: "
+            + ", ".join(f"{k}={'PASS' if v else 'FAIL'}" for k, v in checks.items())
+        ),
+        "checks": checks,
+    }
+    save_result(result)
+    return result
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--tiny", action="store_true",
+                   help="single-regime smoke mode (CI tier-1)")
+    args = p.parse_args(argv)
+    result = run(tiny=args.tiny)
+    print(render(result))
+    return 0 if all(result["checks"].values()) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

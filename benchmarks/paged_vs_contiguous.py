@@ -29,7 +29,7 @@ import argparse
 
 from repro.common.hardware import TPU_V5E
 
-from .common import render, save_result
+from .common import kv_cache_columns, render, save_result
 
 
 def _workload(rng, vocab, n_req, lo, hi, shared_frac=0.5):
@@ -47,9 +47,11 @@ def _workload(rng, vocab, n_req, lo, hi, shared_frac=0.5):
     return prompts
 
 
-def run(tiny: bool = False) -> dict:
+def run(tiny: bool = False, kv_dtype: str = "fp") -> dict:
     """``tiny=True`` is the CI smoke mode: one regime only, so benchmark
-    drift is caught in tier-1 without paying for the full sweep."""
+    drift is caught in tier-1 without paying for the full sweep.
+    ``kv_dtype`` runs both layouts over the quantized KV cache (the paged-
+    vs-contiguous token parity must hold at any storage precision)."""
     import jax
     import jax.numpy as jnp
 
@@ -77,7 +79,7 @@ def run(tiny: bool = False) -> dict:
         for layout in ("contiguous", "paged"):
             eng = EngineCore(cfg, params, n_slots=3, max_len=max_len,
                              prompt_len=32, mode="static",
-                             cache_layout=layout, block_size=16)
+                             cache_layout=layout, block_size=16, kv_dtype=kv_dtype)
             for i, p in enumerate(prompts):
                 eng.submit(Request(f"r{i}", p.copy(), max_new=max_new))
             stats = eng.run()
@@ -88,14 +90,17 @@ def run(tiny: bool = False) -> dict:
         kb_c, kb_p = ec.kv_bytes(), ep.kv_bytes()
 
         # Eq. (5) bandwidth term on v5e: bytes of KV streamed per decoded
-        # token at max_len-resident vs actual-length-resident caches.
-        tok_bytes = 2 * cfg.num_layers * cfg.num_kv_heads * cfg.head_dim * 2
+        # token at max_len-resident vs actual-length-resident caches —
+        # kv_dtype-dependent (the quantized subsystem's roofline shift).
+        kv_cols = kv_cache_columns(cfg, kv_dtype)
+        tok_bytes = kv_cols["kv_bytes/ctx_tok"]
         mean_ctx = np.mean([len(p) + max_new for p in prompts])
         t_kv_max = tok_bytes * max_len / TPU_V5E.hbm_bw
         t_kv_actual = tok_bytes * mean_ctx / TPU_V5E.hbm_bw
         rows.append({
             "max_len": max_len,
             "mean_ctx": float(mean_ctx),
+            **kv_cols,
             "contig_kv_bytes": kb_c["allocated"],
             "paged_kv_peak_bytes": kb_p["peak_in_use"],
             "kv_footprint_ratio": kb_p["peak_in_use"] / kb_c["allocated"],
@@ -114,7 +119,8 @@ def run(tiny: bool = False) -> dict:
         "paged holds <= half the contiguous KV at ragged lengths": all(s <= 0.5 for s in shrink),
     }
     result = {
-        "name": "paged_vs_contiguous" + ("_tiny" if tiny else ""),
+        "name": "paged_vs_contiguous" + ("_tiny" if tiny else "")
+        + ("" if kv_dtype == "fp" else f"_{kv_dtype}"),
         "rows": rows,
         "notes": (
             "Paged vs contiguous KV cache on a ragged shared-prefix workload "
@@ -133,8 +139,11 @@ def main(argv=None) -> int:
     p = argparse.ArgumentParser()
     p.add_argument("--tiny", action="store_true",
                    help="single-regime smoke mode (CI tier-1)")
+    p.add_argument("--kv-dtype", default="fp", choices=["fp", "int8", "int4"],
+                   help="KV-cache precision for both layouts (parity must "
+                        "hold at any storage precision)")
     args = p.parse_args(argv)
-    result = run(tiny=args.tiny)
+    result = run(tiny=args.tiny, kv_dtype=args.kv_dtype)
     print(render(result))
     return 0 if all(result["checks"].values()) else 1
 

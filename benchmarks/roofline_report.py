@@ -24,6 +24,26 @@ _SUGGEST = {
 }
 
 
+def _kv_dtype_bound_note(chip) -> str:
+    """One line showing how the analytic Eq.(5) decode bound shifts with the
+    KV-cache storage precision (the kv_dtype subsystem's roofline lever)."""
+    from repro.configs import get_config
+    from repro.core.roofline import decode_kv_stream_time, kv_bytes_per_ctx_token
+
+    cfg = get_config("bitnet-730m")  # the paper's model
+    ctx = 2048
+    parts = []
+    for kv_dtype in ("fp", "int8", "int4"):
+        b = kv_bytes_per_ctx_token(cfg, kv_dtype)
+        t = decode_kv_stream_time(cfg, ctx, kv_dtype, chip)
+        parts.append(f"{kv_dtype}: {b:.0f} B/ctx-tok -> {1e3 * t:.3f} ms/tok")
+    return (
+        f"Eq.(5) KV-stream decode bound, bitnet-730m @ ctx {ctx} on {chip.name} "
+        "(payload + fp32 scale planes; see benchmarks/kv_quant_sweep.py): "
+        + "; ".join(parts) + "."
+    )
+
+
 def run() -> dict:
     chip = DEFAULT_CHIP
     rows = []
@@ -61,7 +81,8 @@ def run() -> dict:
             f"{chip.ici_bw_per_link*chip.ici_links/1e9:.0f} GB/s ICI/chip). "
             "FLOPs/bytes are while-loop trip-count folded (repro.core.hlo_cost); "
             "collective bytes summed over all-gather/all-reduce/reduce-scatter/"
-            "all-to-all/collective-permute operands in the optimized HLO."
+            "all-to-all/collective-permute operands in the optimized HLO.  "
+            + _kv_dtype_bound_note(chip)
         ),
     }
     save_result(result)

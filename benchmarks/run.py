@@ -17,6 +17,7 @@ from . import (
     fig5_overlap,
     fig6_decode_throughput,
     fig6_ttft,
+    kv_quant_sweep,
     paged_vs_contiguous,
     policy_compare,
     roofline_report,
@@ -36,6 +37,7 @@ BENCHES = {
     "fig5_overlap": fig5_overlap,
     "serving_e2e": serving_e2e,
     "paged_vs_contiguous": paged_vs_contiguous,
+    "kv_quant_sweep": kv_quant_sweep,
     "policy_compare": policy_compare,
     "beyond_paper": beyond_paper,
 }

@@ -1,4 +1,5 @@
-"""Long-context decode on the sub-quadratic architectures.
+"""Long-context decode on the sub-quadratic architectures — and the
+quantized-KV transformer.
 
 The ``long_500k`` cell (524,288-token context, batch 1) is only feasible for
 architectures whose decode state is bounded: xlstm (O(1) recurrent state)
@@ -6,8 +7,14 @@ and hymba (sliding-window attention + SSM).  This example runs the decode
 RMs of both at a reduced scale and shows the per-step cost is flat in
 context length — the property the full-scale dry-run certifies at 500k.
 
-    PYTHONPATH=src python examples/long_context_decode.py
+``--kv-dtype int8|int4`` additionally runs a transformer decode RM over the
+*quantized* KV cache (packed payload + fp32 scale planes,
+``repro.quant.kv_quant``): the state column shrinks 2x/4x, which is the
+paper's Eq. (5) bandwidth lever at long context.
+
+    PYTHONPATH=src python examples/long_context_decode.py --kv-dtype int4
 """
+import argparse
 import time
 
 import jax
@@ -15,6 +22,10 @@ import jax.numpy as jnp
 
 from repro.configs import reduced_config
 from repro.models import get_model
+
+
+def _state_bytes(cache) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
 
 
 def run_arch(arch: str, ctx_lengths=(64, 256, 1024)):
@@ -37,13 +48,43 @@ def run_arch(arch: str, ctx_lengths=(64, 256, 1024)):
             logits, cache = step(params, tok, cache, lengths)
         jax.block_until_ready(logits)
         dt = (time.perf_counter() - t0) / 5
-        state_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
-        print(f"  ctx {ctx:6d}: {dt*1e3:7.2f} ms/step   state {state_bytes/2**20:7.2f} MiB")
+        print(f"  ctx {ctx:6d}: {dt*1e3:7.2f} ms/step   state {_state_bytes(cache)/2**20:7.2f} MiB")
 
 
-def main():
+def run_transformer_kv(arch: str, kv_dtype: str, ctx_lengths=(64, 256, 1024)):
+    """Transformer decode RM over a (possibly quantized) contiguous cache:
+    the KV state column is what ``kv_dtype`` shrinks."""
+    from repro.models import transformer as T
+    from repro.quant.kv_quant import payload_bytes
+
+    cfg = reduced_config(arch)
+    api = get_model(cfg)
+    params = api.init(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    print(f"\n{arch} (transformer, kv_dtype={kv_dtype}): per-decode-step wall time vs context")
+    for ctx in ctx_lengths:
+        cache = T.init_cache(cfg, 1, ctx, kv_dtype=kv_dtype)
+        lengths = jnp.full((1,), ctx - 1, jnp.int32)
+        tok = jnp.zeros((1,), jnp.int32)
+        step = jax.jit(lambda p, t, c, l: api.decode_step(p, t, c, l, cfg))
+        logits, cache = step(params, tok, cache, lengths)  # compile
+        jax.block_until_ready(logits)
+        t0 = time.perf_counter()
+        for _ in range(5):
+            logits, cache = step(params, tok, cache, lengths)
+        jax.block_until_ready(logits)
+        dt = (time.perf_counter() - t0) / 5
+        print(f"  ctx {ctx:6d}: {dt*1e3:7.2f} ms/step   KV {_state_bytes(cache)/2**20:7.2f} MiB "
+              f"(payload {payload_bytes(cache)/2**20:.2f} MiB)")
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--kv-dtype", default="fp", choices=["fp", "int8", "int4"],
+                   help="KV-cache precision for the transformer long-context run")
+    args = p.parse_args(argv)
     run_arch("xlstm-1.3b")
     run_arch("hymba-1.5b")
+    run_transformer_kv("smollm-135m", args.kv_dtype)
     print("\nfull-scale long_500k certification: results/dryrun/*long_500k*.json")
 
 

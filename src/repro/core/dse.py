@@ -93,11 +93,14 @@ class ArchCoefficients:
     weights_bytes: float  # resident weights (T_weights analogue: one full stream)
 
     @staticmethod
-    def from_config(cfg: ModelConfig, chips: int = 1) -> "ArchCoefficients":
+    def from_config(cfg: ModelConfig, chips: int = 1, kv_dtype: str = "fp") -> "ArchCoefficients":
+        from repro.core.roofline import kv_bytes_per_ctx_token
+
         n_active = cfg.active_param_count()
         wbytes = 0.25 if cfg.quant.ternary else 2.0
-        kv_heads = cfg.num_kv_heads if not cfg.attention_free else 0
-        kv_per_tok = 2 * cfg.num_layers * kv_heads * cfg.head_dim * 2  # bf16
+        # Eq. (5) KV coefficient, parameterized by cache precision: int8/int4
+        # payload + fp32 scale rows (repro.core.roofline owns the arithmetic)
+        kv_per_tok = kv_bytes_per_ctx_token(cfg, kv_dtype)
         attn_flops = 0 if cfg.attention_free else 4 * cfg.num_layers * cfg.num_heads * cfg.head_dim
         return ArchCoefficients(
             proj_flops_per_tok=2 * n_active / chips,
@@ -136,14 +139,16 @@ def run_dse(
     t_pre_max: Optional[float] = None,
     chip: ChipSpec = DEFAULT_CHIP,
     static_baseline: bool = False,
+    kv_dtype: str = "fp",
 ) -> List[DsePoint]:
     """Enumerate the space; returns points sorted by Eq. (6) objective.
 
     static_baseline=True models the paper's static-accelerator comparison:
     ONE attention configuration serves both phases, so the constraint
     becomes r_proj + r_pre + r_dec <= R (both RMs resident) and blk == bk.
+    ``kv_dtype`` shifts the Eq. (5) KV coefficient (quantized cache).
     """
-    co = ArchCoefficients.from_config(cfg, chips)
+    co = ArchCoefficients.from_config(cfg, chips, kv_dtype)
     points: List[DsePoint] = []
     blks = [128, 256, 512]
     bks = [128, 256, 512, 1024, 2048]

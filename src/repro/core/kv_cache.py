@@ -74,7 +74,10 @@ def insert_prefill_kv(cache, prefill_kv, slot: int, seq_len: int):
 
     cache leaves: (B_slots, L, ...) — decode layout, batch-leading;
     prefill_kv leaves: (1, L, ...) already padded to max_len and transposed
-    by the relayout program.
+    by the relayout program.  Under ``kv_dtype`` quantization both trees
+    hold ``QuantKV`` (payload + scale plane) leaves with matching structure
+    — the relayout program quantized on write — so the same slot-leading
+    dynamic_update_slice installs payload and scales together.
     """
 
     def ins(buf, new):

@@ -81,15 +81,23 @@ class PhaseEngine:
         *,
         max_len: int = 0,
         long_context: bool = False,
-        kv_quant: Optional[str] = None,  # None | "int8" (beyond-paper)
+        kv_quant: Optional[str] = None,  # legacy knob: None | "int8" ((int8, scale) tuples)
         cache_layout: str = "contiguous",  # "contiguous" | "paged"
+        kv_dtype: str = "fp",  # "fp" | "int8" | "int4" — quantized KV subsystem
     ):
+        from repro.quant.kv_quant import assert_kv_dtype
+
         assert cache_layout in ("contiguous", "paged"), cache_layout
+        assert_kv_dtype(kv_dtype)
+        assert kv_quant is None or kv_dtype == "fp", (
+            "kv_quant (legacy relayout-only int8) and kv_dtype (the quantized "
+            "KV-cache subsystem) are mutually exclusive")
         self.cfg = cfg
         self.mesh = mesh
         self.api = get_model(cfg)
         self.max_len = max_len
         self.kv_quant = kv_quant
+        self.kv_dtype = kv_dtype
         self.cache_layout = cache_layout
         self.decode_phase = "long_decode" if long_context else "decode"
         self.prefill_ctx = make_pctx(mesh, "prefill")
@@ -216,8 +224,11 @@ class PhaseEngine:
         Implements (i) the reshard from prefill sharding (batch x heads) to
         decode sharding (batch x *sequence*) — the collective this program
         pays is the TPU bitstream-load analogue; (ii) right-padding into the
-        persistent decode buffer; (iii) optional int8 KV compression
-        (beyond-paper knob, halves decode KV traffic).
+        persistent decode buffer; (iii) with ``kv_dtype`` in {"int8",
+        "int4"}, quantize-on-write into packed payload + fp32 scale planes
+        (halving/quartering decode KV traffic — the subsystem's Eq. (5)
+        lever); the legacy ``kv_quant="int8"`` knob keeps its (int8, scale)
+        tuple output.
         """
         cfg, pctx = self.cfg, self.decode_ctx
         key = f"relayout:{batch}x{seq}->{max_len}"
@@ -240,7 +251,11 @@ class PhaseEngine:
                 def q(x):
                     s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0 + 1e-8
                     return (x / s).astype(jnp.int8), s.astype(jnp.float32)
-                kv = jax.tree.map(q, kv)
+                return jax.tree.map(q, kv)
+            if self.kv_dtype != "fp":
+                from repro.quant.kv_quant import quantize_kv_tree
+
+                kv = quantize_kv_tree(kv, self.kv_dtype)
             return kv
 
         prog = PhaseProgram(key, self._jit(fn))
@@ -260,7 +275,13 @@ class PhaseEngine:
         if self.mesh is not None:
             psh = self.param_shardings(params_abstract)
             tok_sh = self._sd(pctx, "batch")
-            cache_abstract = jax.eval_shape(lambda: api.init_cache(cfg, batch, max_len))
+            if self.kv_dtype != "fp":
+                from repro.models import transformer as T
+
+                cache_abstract = jax.eval_shape(
+                    lambda: T.init_cache(cfg, batch, max_len, kv_dtype=self.kv_dtype))
+            else:
+                cache_abstract = jax.eval_shape(lambda: api.init_cache(cfg, batch, max_len))
             cache_sh = self._cache_shardings(cache_abstract)
             in_sh = (psh, tok_sh, cache_sh, self._sd(pctx, "batch"))
         prog = PhaseProgram(key, self._jit(fn, in_shardings=in_sh, donate=(2,)))
@@ -288,7 +309,14 @@ class PhaseEngine:
             # (any sequence's table may reference any page).
             page_sh = self._sd(pctx, None, "layers", "kv_heads", None, "head_dim")
             from repro.layers.attention import KVCache
-            in_sh = (psh, self._sd(pctx, "batch"), KVCache(page_sh, page_sh), None,
+            if self.kv_dtype != "fp":
+                from repro.quant.kv_quant import QuantKV
+
+                scale_sh = self._sd(pctx, None, "layers", "kv_heads", None)
+                leaf_sh = QuantKV(page_sh, scale_sh)
+            else:
+                leaf_sh = page_sh
+            in_sh = (psh, self._sd(pctx, "batch"), KVCache(leaf_sh, leaf_sh), None,
                      self._sd(pctx, "batch"))
         prog = PhaseProgram(key, self._jit(fn, in_shardings=in_sh, donate=(2,)))
         self._programs[key] = prog
@@ -323,16 +351,18 @@ class PhaseEngine:
         ``fn(pages, kv, page_ids) -> new_pages`` (pages donated).  Plays the
         role ``relayout_program`` plays for the contiguous cache; its
         dispatch is what the latency-overlapped swap hides behind the
-        prefill tail."""
+        prefill tail.  Under ``kv_dtype`` in {"int8", "int4"} the scatter is
+        quantize-on-write: the fp prefill KV is packed (payload + scale
+        planes) on its way into the pool and never stored at full width."""
         key = f"page_write:{seq}@{block_size}"
         if key in self._programs:
             return self._programs[key]
-        from repro.layers.attention import KVCache, write_prefill_pages
+        from repro.layers.attention import KVCache, write_prefill_pages_q
 
         def fn(pages, kv, page_ids):
             return KVCache(
-                write_prefill_pages(pages.k, kv.k, page_ids, block_size=block_size),
-                write_prefill_pages(pages.v, kv.v, page_ids, block_size=block_size),
+                write_prefill_pages_q(pages.k, kv.k, page_ids, block_size=block_size),
+                write_prefill_pages_q(pages.v, kv.v, page_ids, block_size=block_size),
             )
 
         prog = PhaseProgram(key, self._jit(fn, donate=(0,)))
@@ -362,6 +392,8 @@ class PhaseEngine:
                 return self._sd(pctx, *names)
             if "slstm" in p:  # (G, B, H, hd)
                 return self._sd(pctx, None, "batch", None, "state")
+            if "scale" in p and nd == 4:  # (B, L, Hkv, S) quantized-KV scale plane
+                return self._sd(pctx, "batch", "layers", "kv_heads", "kv_seq")
             if nd == 5:  # (B, L, Hkv, S, D) KV — decode layout, batch-leading
                 return self._sd(pctx, "batch", "layers", "kv_heads", "kv_seq", "head_dim")
             if "conv" in p and nd == 4:  # (L, B, w-1, d_in)

@@ -27,6 +27,53 @@ COLLECTIVE_OPS = (
     "collective-permute",
 )
 
+# ------------------------------------------------ KV-dtype decode bound --
+#
+# The paper's Eq. (5) decode bound is KV bytes streamed per token; the
+# quantized KV-cache subsystem (repro.quant.kv_quant) changes the bytes-per-
+# cached-token coefficient, so the analytic bound is parameterized by
+# kv_dtype here and every consumer (DSE coefficients, benchmarks, the
+# roofline report note) shifts together.  The bit widths come from the
+# storage implementation itself — one source of truth for the format.
+
+from repro.quant.kv_quant import KV_DTYPE_BITS, SCALE_BITS as KV_SCALE_BITS  # noqa: E402
+
+
+def kv_bytes_per_ctx_token(cfg, kv_dtype: str = "fp", *, include_scales: bool = True) -> float:
+    """Bytes of ONE cached token (K + V, all layers) streamed per decode
+    step — the Eq. (5) bandwidth coefficient.  Quantized dtypes add the
+    fp32 scale row per (layer, head, token) unless ``include_scales=False``
+    (the payload-only figure the 2x/4x headline ratios quote)."""
+    if kv_dtype not in KV_DTYPE_BITS:
+        raise ValueError(f"kv_dtype must be one of {sorted(KV_DTYPE_BITS)}, got {kv_dtype!r}")
+    kv_heads = 0 if getattr(cfg, "attention_free", False) else cfg.num_kv_heads
+    payload = 2 * cfg.num_layers * kv_heads * cfg.head_dim * KV_DTYPE_BITS[kv_dtype] / 8
+    scales = 0.0
+    if kv_dtype != "fp" and include_scales:
+        scales = 2 * cfg.num_layers * kv_heads * KV_SCALE_BITS / 8
+    return payload + scales
+
+
+def decode_kv_stream_time(cfg, context: int, kv_dtype: str = "fp",
+                          chip: ChipSpec = DEFAULT_CHIP) -> float:
+    """Eq. (5) KV-bandwidth term: seconds per decoded token spent streaming
+    the accumulated cache at ``context`` tokens, at the given precision."""
+    return kv_bytes_per_ctx_token(cfg, kv_dtype) * context / chip.hbm_bw
+
+
+def decode_arithmetic_intensity(cfg, kv_dtype: str = "fp") -> float:
+    """Attention FLOPs per KV byte streamed in decode (flops/byte).
+
+    Per context token the decode RM does 2 flops (QK^T) + 2 flops (PV) per
+    query head per head_dim element; shrinking the KV bytes raises the
+    intensity, moving the kernel up the bandwidth roofline.
+    """
+    kv_heads = 0 if getattr(cfg, "attention_free", False) else cfg.num_kv_heads
+    if kv_heads == 0:
+        return 0.0
+    flops = 4 * cfg.num_layers * cfg.num_heads * cfg.head_dim
+    return flops / kv_bytes_per_ctx_token(cfg, kv_dtype)
+
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,

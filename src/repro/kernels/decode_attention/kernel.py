@@ -32,8 +32,17 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.common.compat import tpu_compiler_params
+from repro.quant.kv_quant import unpack_int4
 
 NEG_INF = -1e30
+
+
+def _dequant_tile(q_tile, s_tile, kv_dtype):
+    """In-VMEM dequant of one (bk, Dp) payload tile + (bk,) scale row -> f32
+    (bk, D).  This is the *fused* step: packed bytes are what the DMA moved;
+    the fp tile exists only in registers/VMEM, never in HBM."""
+    q = unpack_int4(q_tile) if kv_dtype == "int4" else q_tile
+    return q.astype(jnp.float32) * s_tile.astype(jnp.float32)[:, None]
 
 
 def _decode_kernel(
@@ -158,3 +167,140 @@ def decode_attention_pallas(
         ),
         interpret=interpret,
     )(starts.astype(jnp.int32), lengths.astype(jnp.int32), q, k, v)
+
+
+def _decode_quant_kernel(
+    start_ref,  # scalar-prefetch: (B,) int32
+    len_ref,  # scalar-prefetch: (B,) int32
+    q_ref,  # (1, 1, G, D)
+    kq_ref,  # (1, 1, bk, Dp) int8 / uint8 packed payload
+    ks_ref,  # (1, 1, bk) f32 scale rows
+    vq_ref,  # (1, 1, bk, Dp)
+    vs_ref,  # (1, 1, bk)
+    out_ref,  # (1, 1, G, D)
+    out_l_ref,
+    out_m_ref,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    bk: int,
+    n_steps: int,
+    sm_scale: float,
+    kv_dtype: str,
+):
+    """Fused-dequant decode RM: identical online-softmax walk to
+    ``_decode_kernel`` but the K/V streams are the *packed* cache — the DMA
+    moves 1/2 (int8) or 1/4 (int4) of the fp bytes plus a 4-byte scale per
+    row, and dequant happens on the VMEM tile right before the dot."""
+    b = pl.program_id(0)
+    t = pl.program_id(2)
+    length = len_ref[b]
+    start = start_ref[b]
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(jnp.logical_and(t * bk < length, (t + 1) * bk > start))
+    def _step():
+        q = q_ref[...].astype(jnp.float32)[0, 0]  # (G, D)
+        k = _dequant_tile(kq_ref[...][0, 0], ks_ref[...][0, 0], kv_dtype)  # (bk, D)
+        v = _dequant_tile(vq_ref[...][0, 0], vs_ref[...][0, 0], kv_dtype)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * sm_scale
+        pos = t * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        s = jnp.where(jnp.logical_and(pos >= start, pos < length), s, NEG_INF)
+
+        m_prev = m_ref[...][:, :1]
+        l_prev = l_ref[...][:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = jnp.broadcast_to(alpha * l_prev + jnp.sum(p, axis=1, keepdims=True), l_ref.shape)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ()))
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(t == n_steps - 1)
+    def _finalize():
+        l = l_ref[...][:, :1]
+        out_ref[...] = (acc_ref[...] / jnp.maximum(l, 1e-30))[None, None].astype(out_ref.dtype)
+        out_l_ref[...] = l_ref[...][None, None]
+        out_m_ref[...] = m_ref[...][None, None]
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "sm_scale", "kv_dtype", "interpret"))
+def decode_attention_quant_pallas(
+    q: jax.Array,  # (B, Hkv, G, D)
+    k_q: jax.Array,  # (B, Hkv, S, Dp) packed payload (int8 / uint8)
+    k_scale: jax.Array,  # (B, Hkv, S) f32
+    v_q: jax.Array,
+    v_scale: jax.Array,
+    lengths: jax.Array,  # (B,) int32
+    starts: jax.Array | None = None,
+    *,
+    kv_dtype: str,
+    bk: int = 512,
+    sm_scale: float | None = None,
+    interpret: bool = False,
+):
+    """Fused-dequant variant of ``decode_attention_pallas`` over a quantized
+    contiguous cache.  Same outputs (normalized out + l/m stats)."""
+    b, hkv, g, d = q.shape
+    s = k_q.shape[2]
+    bk = min(bk, s)
+    pad = (-s) % bk
+    if pad:
+        pad4 = ((0, 0), (0, 0), (0, pad), (0, 0))
+        k_q = jnp.pad(k_q, pad4)
+        v_q = jnp.pad(v_q, pad4)
+        pad3 = ((0, 0), (0, 0), (0, pad))
+        k_scale = jnp.pad(k_scale, pad3)
+        v_scale = jnp.pad(v_scale, pad3)
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    n_steps = (s + pad) // bk
+    dp = k_q.shape[3]
+
+    if starts is None:
+        starts = jnp.zeros_like(lengths)
+    kernel = functools.partial(
+        _decode_quant_kernel, bk=bk, n_steps=n_steps, sm_scale=sm_scale, kv_dtype=kv_dtype
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, n_steps),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, ti, *_: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, bk, dp), lambda bi, hi, ti, *_: (bi, hi, ti, 0)),
+            pl.BlockSpec((1, 1, bk), lambda bi, hi, ti, *_: (bi, hi, ti)),
+            pl.BlockSpec((1, 1, bk, dp), lambda bi, hi, ti, *_: (bi, hi, ti, 0)),
+            pl.BlockSpec((1, 1, bk), lambda bi, hi, ti, *_: (bi, hi, ti)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, ti, *_: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, g, 128), lambda bi, hi, ti, *_: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, g, 128), lambda bi, hi, ti, *_: (bi, hi, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g, 128), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g, 128), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(starts.astype(jnp.int32), lengths.astype(jnp.int32), q, k_q, k_scale, v_q, v_scale)

@@ -19,8 +19,12 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.kernel import (
+    decode_attention_pallas,
+    decode_attention_quant_pallas,
+)
 from repro.kernels.decode_attention.ref import decode_attention_reference
+from repro.quant.kv_quant import dequantize_kv
 
 
 def _decode_attention_streaming(
@@ -59,7 +63,7 @@ def _decode_attention_streaming(
 
 def decode_attention(
     q: jax.Array,  # (B, H, D)
-    k: jax.Array,  # (B, Hkv, S, D)
+    k: jax.Array,  # (B, Hkv, S, D) — or packed payload (B, Hkv, S, Dp) when quantized
     v: jax.Array,
     lengths: jax.Array,  # (B,) int32
     starts: Optional[jax.Array] = None,  # (B,) int32 — sliding-window start
@@ -69,14 +73,38 @@ def decode_attention(
     interpret: bool = True,
     sm_scale: Optional[float] = None,
     return_stats: bool = False,
+    k_scales: Optional[jax.Array] = None,  # (B, Hkv, S) f32 — quantized cache
+    v_scales: Optional[jax.Array] = None,
+    kv_dtype: str = "fp",
 ):
     """Attention of one query token per sequence over a masked KV cache.
+
+    ``kv_dtype`` in {"int8", "int4"} (with ``k_scales``/``v_scales``) reads a
+    *quantized* cache: the kernel path streams the packed payload and fuses
+    dequant into the KV walk; the jnp path dequantizes then delegates (the
+    oracle dataflow — it materializes the fp cache the kernel avoids).
 
     ``return_stats=True`` additionally returns the online-softmax stats
     (l, m) of shape (B, H, 1) — in f32, with the output UN-astype'd — so the
     caller can merge further blocks (e.g. the freshly-projected token)."""
     b, h, d = q.shape
     hkv, s = k.shape[1], k.shape[2]
+    if kv_dtype != "fp":
+        assert k_scales is not None and v_scales is not None, "quantized cache needs scales"
+        if use_kernel:
+            g = h // hkv
+            out, l, m = decode_attention_quant_pallas(
+                q.reshape(b, hkv, g, d), k, k_scales, v, v_scales,
+                lengths.astype(jnp.int32),
+                None if starts is None else starts.astype(jnp.int32),
+                kv_dtype=kv_dtype, bk=bk, interpret=interpret, sm_scale=sm_scale,
+            )
+            if return_stats:
+                return (out.reshape(b, h, d),
+                        l[:, :, :, :1].reshape(b, h, 1), m[:, :, :, :1].reshape(b, h, 1))
+            return out.reshape(b, h, d).astype(q.dtype)
+        k = dequantize_kv(k, k_scales, kv_dtype)
+        v = dequantize_kv(v, v_scales, kv_dtype)
     g = h // hkv
     qg = q.reshape(b, hkv, g, d)
     if not use_kernel:

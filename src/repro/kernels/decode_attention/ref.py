@@ -30,3 +30,23 @@ def decode_attention_reference(
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+def decode_attention_quant_reference(
+    q: jax.Array,  # (B, Hkv, G, D)
+    k_q: jax.Array,  # (B, Hkv, S, Dp) packed payload
+    k_scale: jax.Array,  # (B, Hkv, S) f32
+    v_q: jax.Array,
+    v_scale: jax.Array,
+    lengths: jax.Array,
+    starts: Optional[jax.Array] = None,
+    *,
+    kv_dtype: str,
+    sm_scale: Optional[float] = None,
+) -> jax.Array:
+    """Dequantize-then-attend oracle for the fused-dequant decode kernel."""
+    from repro.quant.kv_quant import dequantize_kv
+
+    k = dequantize_kv(k_q, k_scale, kv_dtype)
+    v = dequantize_kv(v_q, v_scale, kv_dtype)
+    return decode_attention_reference(q, k, v, lengths, starts, sm_scale=sm_scale)

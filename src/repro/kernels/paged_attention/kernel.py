@@ -26,6 +26,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.common.compat import tpu_compiler_params
+from repro.kernels.decode_attention.kernel import _dequant_tile
 
 NEG_INF = -1e30
 
@@ -152,5 +153,145 @@ def paged_decode_attention_pallas(
         q,
         k_pages,
         v_pages,
+    )
+    return out, out_l, out_m
+
+
+def _paged_decode_quant_kernel(
+    tables_ref,  # scalar-prefetch: (B, P) int32
+    start_ref,  # scalar-prefetch: (B,) int32
+    len_ref,  # scalar-prefetch: (B,) int32
+    q_ref,  # (1, 1, G, D)
+    kq_ref,  # (1, 1, bs, Dp) packed payload of page tables_ref[b, t]
+    ks_ref,  # (1, 1, bs) f32 scale rows of the same page
+    vq_ref,  # (1, 1, bs, Dp)
+    vs_ref,  # (1, 1, bs)
+    out_ref,  # (1, 1, G, D)
+    out_l_ref,
+    out_m_ref,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    bs: int,
+    n_pages: int,
+    sm_scale: float,
+    kv_dtype: str,
+):
+    """Fused-dequant paged decode: the same block-table walk as
+    ``_paged_decode_kernel``, but each grid step DMAs the page's *packed*
+    payload (1/2 or 1/4 of the fp bytes) plus its fp32 scale plane, and the
+    fp page exists only as the VMEM tile feeding the dot — decode reads
+    packed pages directly, never materializing an fp cache in HBM."""
+    b = pl.program_id(0)
+    t = pl.program_id(2)
+    length = len_ref[b]
+    start = start_ref[b]
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(jnp.logical_and(t * bs < length, (t + 1) * bs > start))
+    def _step():
+        q = q_ref[...].astype(jnp.float32)[0, 0]  # (G, D)
+        k = _dequant_tile(kq_ref[...][0, 0], ks_ref[...][0, 0], kv_dtype)  # (bs, D)
+        v = _dequant_tile(vq_ref[...][0, 0], vs_ref[...][0, 0], kv_dtype)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * sm_scale  # (G, bs)
+        pos = t * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        s = jnp.where(jnp.logical_and(pos >= start, pos < length), s, NEG_INF)
+
+        m_prev = m_ref[...][:, :1]
+        l_prev = l_ref[...][:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = jnp.broadcast_to(alpha * l_prev + jnp.sum(p, axis=1, keepdims=True), l_ref.shape)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ()))
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(t == n_pages - 1)
+    def _finalize():
+        l = l_ref[...][:, :1]
+        out_ref[...] = (acc_ref[...] / jnp.maximum(l, 1e-30))[None, None].astype(out_ref.dtype)
+        out_l_ref[...] = l_ref[...][None, None]
+        out_m_ref[...] = m_ref[...][None, None]
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "kv_dtype", "interpret"))
+def paged_decode_attention_quant_pallas(
+    q: jax.Array,  # (B, Hkv, G, D)
+    k_pages_q: jax.Array,  # (N, Hkv, bs, Dp) packed payload pool (one layer)
+    k_scales: jax.Array,  # (N, Hkv, bs) f32 scale planes
+    v_pages_q: jax.Array,
+    v_scales: jax.Array,
+    block_tables: jax.Array,  # (B, P) int32
+    lengths: jax.Array,  # (B,) int32
+    starts: jax.Array | None = None,
+    *,
+    kv_dtype: str,
+    sm_scale: float | None = None,
+    interpret: bool = False,
+):
+    """Fused-dequant variant of ``paged_decode_attention_pallas``: walks the
+    block table over the *packed* page pool."""
+    b, hkv, g, d = q.shape
+    n, hkv_p, bs, dp = k_pages_q.shape
+    assert hkv_p == hkv, (k_pages_q.shape, q.shape)
+    n_pages = block_tables.shape[1]
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+
+    if starts is None:
+        starts = jnp.zeros_like(lengths)
+    kernel = functools.partial(
+        _paged_decode_quant_kernel, bs=bs, n_pages=n_pages, sm_scale=sm_scale, kv_dtype=kv_dtype
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, ti, tbl, *_: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, bs, dp), lambda bi, hi, ti, tbl, *_: (tbl[bi, ti], hi, 0, 0)),
+            pl.BlockSpec((1, 1, bs), lambda bi, hi, ti, tbl, *_: (tbl[bi, ti], hi, 0)),
+            pl.BlockSpec((1, 1, bs, dp), lambda bi, hi, ti, tbl, *_: (tbl[bi, ti], hi, 0, 0)),
+            pl.BlockSpec((1, 1, bs), lambda bi, hi, ti, tbl, *_: (tbl[bi, ti], hi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, ti, *_: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, g, 128), lambda bi, hi, ti, *_: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, g, 128), lambda bi, hi, ti, *_: (bi, hi, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    out, out_l, out_m = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g, 128), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g, 128), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(
+        jnp.clip(block_tables, 0, n - 1).astype(jnp.int32),
+        starts.astype(jnp.int32),
+        lengths.astype(jnp.int32),
+        q,
+        k_pages_q,
+        k_scales,
+        v_pages_q,
+        v_scales,
     )
     return out, out_l, out_m

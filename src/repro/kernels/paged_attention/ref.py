@@ -49,3 +49,27 @@ def paged_decode_attention_reference(
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+def paged_decode_attention_quant_reference(
+    q: jax.Array,  # (B, Hkv, G, D)
+    k_pages_q: jax.Array,  # (N, Hkv, bs, Dp) packed payload pool
+    k_scales: jax.Array,  # (N, Hkv, bs) f32 scale planes
+    v_pages_q: jax.Array,
+    v_scales: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    starts: Optional[jax.Array] = None,
+    *,
+    kv_dtype: str,
+    sm_scale: Optional[float] = None,
+) -> jax.Array:
+    """Dequantize-the-pool-then-attend oracle for the fused-dequant paged
+    kernel (materializes the fp pool; the kernel never does)."""
+    from repro.quant.kv_quant import dequantize_kv
+
+    k_pages = dequantize_kv(k_pages_q, k_scales, kv_dtype)
+    v_pages = dequantize_kv(v_pages_q, v_scales, kv_dtype)
+    return paged_decode_attention_reference(
+        q, k_pages, v_pages, block_tables, lengths, starts, sm_scale=sm_scale
+    )

@@ -35,6 +35,9 @@ def main(argv=None) -> int:
                    help="tokens per KV page (paged layout)")
     p.add_argument("--num-blocks", type=int, default=None,
                    help="KV pool pages (paged layout; default = full provisioning)")
+    p.add_argument("--kv-dtype", default="fp", choices=["fp", "int8", "int4"],
+                   help="KV-cache precision: packed int8/int4 payload + fp32 "
+                        "scale planes (fused dequant in the decode kernels)")
     p.add_argument("--ragged", action="store_true",
                    help="draw prompt lengths uniformly in [4, prompt_len]")
     p.add_argument("--requests", type=int, default=6)
@@ -67,8 +70,8 @@ def main(argv=None) -> int:
     eng = EngineCore(cfg, params, n_slots=args.slots, max_len=args.max_len,
                      prompt_len=args.prompt_len, mode=args.mode,
                      cache_layout=args.cache_layout, block_size=args.block_size,
-                     num_blocks=args.num_blocks, overlap=not args.no_overlap,
-                     swap_policy=args.swap_policy)
+                     num_blocks=args.num_blocks, kv_dtype=args.kv_dtype,
+                     overlap=not args.no_overlap, swap_policy=args.swap_policy)
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p, seed=args.seed,
                         stop_tokens=tuple(args.stop_token or ()))
@@ -113,7 +116,8 @@ def main(argv=None) -> int:
     if args.cache_layout == "paged":
         kb = eng.kv_bytes()
         print(f"  KV pool           : {kb['allocated']/2**20:.2f} MiB allocated, "
-              f"{kb['peak_in_use']/2**20:.2f} MiB peak in use")
+              f"{kb['peak_in_use']/2**20:.2f} MiB peak in use "
+              f"(kv_dtype={kb['kv_dtype']}, payload {kb['payload']/2**20:.2f} MiB)")
         print(f"  prefix cache      : {stats.prefix_hits} page hits / "
               f"{stats.prefix_misses} misses ({stats.prefix_hit_tokens} tokens reused)")
         print(f"  preemptions       : {stats.preemptions}  "

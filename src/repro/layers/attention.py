@@ -30,11 +30,24 @@ from repro.kernels.prefill_attention.ops import prefill_attention
 from repro.layers.linear import linear_apply, linear_init
 from repro.layers.rotary import apply_rope
 from repro.layers.sharding import PartitionCtx
+from repro.quant.kv_quant import QuantKV, infer_kv_dtype, quantize_kv
 
 
 class KVCache(NamedTuple):
-    k: jax.Array  # (B, Hkv, Smax, D)
+    k: jax.Array  # (B, Hkv, Smax, D) — or a QuantKV (payload + scale plane)
     v: jax.Array  # (B, Hkv, Smax, D)
+
+
+def _kv_leaf_args(k_leaf, v_leaf):
+    """Split a (possibly quantized) K/V cache leaf pair into the positional
+    payload arrays + the keyword scale/dtype arguments the kernel ops take.
+    The cache pytree itself carries the precision — no dtype plumbing."""
+    if isinstance(k_leaf, QuantKV):
+        return k_leaf.q, v_leaf.q, dict(
+            k_scales=k_leaf.scale, v_scales=v_leaf.scale,
+            kv_dtype=infer_kv_dtype(k_leaf.q),
+        )
+    return k_leaf, v_leaf, {}
 
 
 def attention_init(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> dict:
@@ -268,6 +281,95 @@ def write_prefill_pages(
     return pages.at[page_ids].set(kb.astype(pages.dtype), mode="drop")
 
 
+def scatter_new_scales(buf: jax.Array, new: jax.Array, lengths: jax.Array) -> jax.Array:
+    """Scale-plane analogue of ``scatter_new_tokens``.
+
+    buf: (B, L, Hkv, Smax) fp32 per-token scale plane of the quantized
+    contiguous cache; new: (L, B, Hkv, 1) fresh-token scales.  Same batch-
+    leading single-DUS shape as the payload write.
+    """
+    b, l, hkv, smax = buf.shape
+    idx = jnp.minimum(lengths, smax - 1)
+    newb = jnp.moveaxis(new[:, :, :, 0], 1, 0).astype(buf.dtype)  # (B, L, Hkv)
+
+    def upd_one(c, n, i):  # c: (L, Hkv, Smax); n: (L, Hkv); i scalar
+        return jax.lax.dynamic_update_slice(c, n[:, :, None], (0, 0, i))
+
+    return jax.vmap(upd_one)(buf, newb, idx)
+
+
+def scatter_new_tokens_q(buf, new: jax.Array, lengths: jax.Array):
+    """``scatter_new_tokens`` generalized to a possibly-quantized cache leaf:
+    quantize-on-write of the fresh token rows (payload + scale plane), so
+    the fp cache is never materialized.  ``new`` is always fp (L, B, Hkv, 1,
+    D); requantizing the same values reproduces the same bytes, which keeps
+    preemption replay bit-identical under quantization."""
+    if not isinstance(buf, QuantKV):
+        return scatter_new_tokens(buf, new, lengths)
+    payload, scale = quantize_kv(new, infer_kv_dtype(buf.q))
+    return QuantKV(
+        scatter_new_tokens(buf.q, payload, lengths),
+        scatter_new_scales(buf.scale, scale, lengths),
+    )
+
+
+def scatter_new_scales_paged(
+    pages: jax.Array, new: jax.Array, block_tables: jax.Array, lengths: jax.Array
+) -> jax.Array:
+    """Scale-plane analogue of ``scatter_new_tokens_paged``.
+
+    pages: (N, L, Hkv, bs) fp32 scale planes; new: (L, B, Hkv, 1).  Inactive
+    slots route to an out-of-bounds page id and are dropped, exactly like
+    the payload scatter.
+    """
+    n, l, hkv, bs = pages.shape
+    page_idx = jnp.minimum(lengths // bs, block_tables.shape[1] - 1)
+    page = jnp.take_along_axis(block_tables, page_idx[:, None], axis=1)[:, 0]
+    page = jnp.where(lengths > 0, page, n)
+    off = lengths % bs
+    newb = jnp.moveaxis(new[:, :, :, 0], 1, 0).astype(pages.dtype)  # (B, L, Hkv)
+    return pages.at[page, :, :, off].set(newb, mode="drop")
+
+
+def scatter_new_tokens_paged_q(pages, new: jax.Array, block_tables: jax.Array, lengths: jax.Array):
+    """``scatter_new_tokens_paged`` generalized to a possibly-quantized page
+    pool leaf — quantize-on-write into the current page (see
+    ``scatter_new_tokens_q`` for the determinism contract)."""
+    if not isinstance(pages, QuantKV):
+        return scatter_new_tokens_paged(pages, new, block_tables, lengths)
+    payload, scale = quantize_kv(new, infer_kv_dtype(pages.q))
+    return QuantKV(
+        scatter_new_tokens_paged(pages.q, payload, block_tables, lengths),
+        scatter_new_scales_paged(pages.scale, scale, block_tables, lengths),
+    )
+
+
+def write_prefill_scales(
+    pages: jax.Array, scales: jax.Array, page_ids: jax.Array, *, block_size: int
+) -> jax.Array:
+    """Scale-plane analogue of ``write_prefill_pages``: pages (N, L, Hkv,
+    bs), scales (L, 1, Hkv, S) with S a multiple of ``block_size``; same
+    out-of-bounds skip semantics for prefix-cache hits."""
+    l, b, hkv, s = scales.shape
+    bs = block_size
+    sb = scales[:, 0].reshape(l, hkv, s // bs, bs)
+    sb = jnp.moveaxis(sb, 2, 0)  # (P, L, Hkv, bs)
+    return pages.at[page_ids].set(sb.astype(pages.dtype), mode="drop")
+
+
+def write_prefill_pages_q(pages, kv: jax.Array, page_ids: jax.Array, *, block_size: int):
+    """``write_prefill_pages`` generalized to a possibly-quantized pool leaf:
+    the paged swap becomes quantize-on-write (per-token-per-head scales),
+    so prefilled KV lands in the pool already packed."""
+    if not isinstance(pages, QuantKV):
+        return write_prefill_pages(pages, kv, page_ids, block_size=block_size)
+    payload, scale = quantize_kv(kv, infer_kv_dtype(pages.q))
+    return QuantKV(
+        write_prefill_pages(pages.q, payload, page_ids, block_size=block_size),
+        write_prefill_scales(pages.scale, scale, page_ids, block_size=block_size),
+    )
+
+
 def _merge_new_token(
     out_cache: jax.Array,  # (B, H, D) — attention over cache, f32-normalized
     l_cache: jax.Array,  # (B, H, 1) — softmax denominator over cache
@@ -335,9 +437,10 @@ def attention_decode(
         return y, cache
 
     def attend(qd, starts):
+        k_arr, v_arr, qkw = _kv_leaf_args(cache.k, cache.v)
         return decode_attention(
-            qd, cache.k, cache.v, lengths.astype(jnp.int32), starts,
-            use_kernel=cfg.use_pallas, interpret=True, return_stats=True,
+            qd, k_arr, v_arr, lengths.astype(jnp.int32), starts,
+            use_kernel=cfg.use_pallas, interpret=True, return_stats=True, **qkw,
         )
 
     return _decode_new_token(params, x, lengths, cfg, window, attend)
@@ -391,9 +494,10 @@ def attention_decode_paged(
     """
 
     def attend(qd, starts):
+        k_arr, v_arr, qkw = _kv_leaf_args(k_pages, v_pages)
         return paged_decode_attention(
-            qd, k_pages, v_pages, block_tables, lengths.astype(jnp.int32), starts,
-            use_kernel=cfg.use_pallas, interpret=True, return_stats=True,
+            qd, k_arr, v_arr, block_tables, lengths.astype(jnp.int32), starts,
+            use_kernel=cfg.use_pallas, interpret=True, return_stats=True, **qkw,
         )
 
     return _decode_new_token(params, x, lengths, cfg, window, attend)

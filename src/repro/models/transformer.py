@@ -213,21 +213,50 @@ def prefill_tail(params, x_mid, cfg: ModelConfig, pctx: PartitionCtx = NULL_CTX,
     return logits[:, -1, :]
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> KVCache:
+def _kv_buffer(shape, dtype, kv_dtype: str):
+    """One K or V cache buffer: a plain fp array, or a QuantKV holding the
+    packed payload (int8, or uint8 nibble pairs for int4) plus the fp32
+    per-(layer, head, token) scale plane."""
+    from repro.quant.kv_quant import QuantKV, assert_kv_dtype
+
+    assert_kv_dtype(kv_dtype)
+    if kv_dtype == "fp":
+        return jnp.zeros(shape, dtype)
+    d = shape[-1]
+    if kv_dtype == "int4":
+        assert d % 2 == 0, f"head_dim must be even for int4 nibble packing, got {d}"
+        payload = jnp.zeros(shape[:-1] + (d // 2,), jnp.uint8)
+    else:
+        payload = jnp.zeros(shape, jnp.int8)
+    return QuantKV(payload, jnp.ones(shape[:-1], jnp.float32))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               kv_dtype: str = "fp") -> KVCache:
     # Decode cache is BATCH-LEADING (B, L, Hkv, S, D): all layers' new
     # tokens for one sequence land in one contiguous DUS window, and the
     # leading dim is the vmap/sharding axis (see attention.scatter_new_tokens).
+    # kv_dtype != "fp" stores packed payload + scale planes instead.
     shape = (batch, cfg.num_layers, cfg.num_kv_heads, max_len, cfg.head_dim)
-    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+    return KVCache(_kv_buffer(shape, dtype, kv_dtype), _kv_buffer(shape, dtype, kv_dtype))
 
 
 def init_paged_pool(cfg: ModelConfig, num_blocks: int, block_size: int,
-                    dtype=jnp.bfloat16) -> KVCache:
+                    dtype=jnp.bfloat16, kv_dtype: str = "fp") -> KVCache:
     # Paged decode cache: the slot axis of init_cache becomes the PAGE axis
     # — (N, L, Hkv, bs, D), each page layer-complete for block_size token
     # positions.  Ownership/refcounts live in serving.paging.PagedKVCache.
+    # kv_dtype != "fp" makes each page a packed payload + fp32 scale plane.
     shape = (num_blocks, cfg.num_layers, cfg.num_kv_heads, block_size, cfg.head_dim)
-    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+    return KVCache(_kv_buffer(shape, dtype, kv_dtype), _kv_buffer(shape, dtype, kv_dtype))
+
+
+def _slice_layer(leaf, li):
+    """Slice layer ``li`` (axis 1) from a decode-cache leaf; quantized leaves
+    are QuantKV pytrees (payload + scale plane) — slice both together."""
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, li, axis=1, keepdims=False), leaf
+    )
 
 
 def decode_step(
@@ -248,15 +277,15 @@ def decode_step(
     (donated, aliased-in-place) cache — per-step cache write traffic is
     O(L*B*Hkv*D), not O(cache).
     """
-    from repro.layers.attention import scatter_new_tokens
+    from repro.layers.attention import scatter_new_tokens_q
 
     b = token.shape[0]
     x = _embed(params, token[:, None], cfg, pctx)
 
     def body(x, scanned):
         lp, li = scanned
-        ck = jax.lax.dynamic_index_in_dim(cache.k, li, axis=1, keepdims=False)
-        cv = jax.lax.dynamic_index_in_dim(cache.v, li, axis=1, keepdims=False)
+        ck = _slice_layer(cache.k, li)
+        cv = _slice_layer(cache.v, li)
         h = apply_norm(lp["ln1"], x, cfg.norm, cfg.norm_eps)
         attn_out, new_kv = attention_decode(
             lp["attn"], h, KVCache(ck, cv), lengths, cfg, pctx, window=cfg.sliding_window
@@ -270,8 +299,8 @@ def decode_step(
         return x + ffn_out, (new_kv.k, new_kv.v)
 
     x, (tok_k, tok_v) = jax.lax.scan(body, x, (params["layers"], jnp.arange(cfg.num_layers)))
-    new_k = scatter_new_tokens(cache.k, tok_k, lengths)
-    new_v = scatter_new_tokens(cache.v, tok_v, lengths)
+    new_k = scatter_new_tokens_q(cache.k, tok_k, lengths)
+    new_v = scatter_new_tokens_q(cache.v, tok_v, lengths)
     logits = _logits(params, x, cfg, pctx)
     return logits[:, 0, :], KVCache(new_k, new_v)
 
@@ -294,14 +323,14 @@ def decode_step_paged(
     sequence's current page — per-step write traffic O(L*B*Hkv*D).  Returns
     (logits (B, Vp), new_pages).
     """
-    from repro.layers.attention import attention_decode_paged, scatter_new_tokens_paged
+    from repro.layers.attention import attention_decode_paged, scatter_new_tokens_paged_q
 
     x = _embed(params, token[:, None], cfg, pctx)
 
     def body(x, scanned):
         lp, li = scanned
-        pk = jax.lax.dynamic_index_in_dim(pages.k, li, axis=1, keepdims=False)
-        pv = jax.lax.dynamic_index_in_dim(pages.v, li, axis=1, keepdims=False)
+        pk = _slice_layer(pages.k, li)
+        pv = _slice_layer(pages.v, li)
         h = apply_norm(lp["ln1"], x, cfg.norm, cfg.norm_eps)
         attn_out, new_kv = attention_decode_paged(
             lp["attn"], h, pk, pv, block_tables, lengths, cfg, pctx,
@@ -316,7 +345,7 @@ def decode_step_paged(
         return x + ffn_out, (new_kv.k, new_kv.v)
 
     x, (tok_k, tok_v) = jax.lax.scan(body, x, (params["layers"], jnp.arange(cfg.num_layers)))
-    new_k = scatter_new_tokens_paged(pages.k, tok_k, block_tables, lengths)
-    new_v = scatter_new_tokens_paged(pages.v, tok_v, block_tables, lengths)
+    new_k = scatter_new_tokens_paged_q(pages.k, tok_k, block_tables, lengths)
+    new_v = scatter_new_tokens_paged_q(pages.v, tok_v, block_tables, lengths)
     logits = _logits(params, x, cfg, pctx)
     return logits[:, 0, :], KVCache(new_k, new_v)

@@ -6,3 +6,14 @@ from repro.quant.ternary import (
     TernaryWeight,
 )
 from repro.quant.act_quant import quantize_activations_int8
+from repro.quant.kv_quant import (
+    KV_DTYPES,
+    QuantKV,
+    assert_kv_dtype,
+    dequantize_kv,
+    infer_kv_dtype,
+    pack_int4,
+    quantize_kv,
+    quantize_kv_tree,
+    unpack_int4,
+)

@@ -1,0 +1,165 @@
+"""KV-cache quantization: symmetric int8/int4 storage with fp32 scale planes.
+
+The paper's decode bound (Eq. 5) is KV bytes streamed per token; the most
+direct software lever on it is shrinking bytes per cached token.  This module
+is the numeric core of the ``kv_dtype`` subsystem (``"fp"`` | ``"int8"`` |
+``"int4"``):
+
+* **Granularity** — one symmetric absmax scale per (layer, kv-head, token)
+  row, stored as an fp32 *scale plane* alongside each block's packed payload
+  (``payload.shape[:-1]``).  Scales at token granularity (rather than one
+  scale per whole block) are what keep decode appends and preemption replay
+  exact: writing token ``t`` into a page never rescales tokens ``< t``, so
+  requantizing the same values always reproduces the same page bytes.
+* **int4** — values in [-7, 7] nibble-packed in pairs along the head_dim
+  axis (lo nibble = even index), so one token's row is ``D/2`` bytes and a
+  single-token append touches only its own packed bytes.
+* **Determinism** — ``quantize_kv`` is a pure function and a fixed point of
+  ``quantize ∘ dequantize`` on the payload (the scale of a dequantized row
+  round-trips to within 1 ulp and the integer payload exactly), which is the
+  property the serving engine's bit-identical preemption replay rests on.
+
+``QuantKV`` is a pytree (payload + scale), so quantized caches flow through
+``jax.tree.map``-based plumbing (relayout, slot insert, copy-on-write,
+donation) unchanged.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+KV_DTYPES = ("fp", "int8", "int4")
+
+# symmetric range per dtype: int4 uses [-7, 7] (not -8) so negation is exact
+QMAX = {"int8": 127, "int4": 7}
+
+# storage bits per payload element (fp = the bf16 cache default)
+KV_DTYPE_BITS = {"fp": 16, "int8": 8, "int4": 4}
+SCALE_BITS = 32  # fp32 scale per (layer, head, token) row
+
+
+class QuantKV(NamedTuple):
+    """One quantized K or V tensor: packed payload + its fp32 scale plane.
+
+    ``q``:     int8 (int8 mode) or uint8 nibble-packed (int4 mode); the
+               trailing axis is head_dim (int8) or head_dim // 2 (int4).
+    ``scale``: fp32 with shape ``q.shape[:-1]`` — one symmetric absmax scale
+               per (…, token) row.
+    """
+
+    q: jax.Array
+    scale: jax.Array
+
+
+def assert_kv_dtype(kv_dtype: str) -> str:
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(f"kv_dtype must be one of {KV_DTYPES}, got {kv_dtype!r}")
+    return kv_dtype
+
+
+def is_quantized(leaf) -> bool:
+    return isinstance(leaf, QuantKV)
+
+
+def infer_kv_dtype(payload: jax.Array) -> str:
+    """Payload dtype encodes the mode: int8 -> "int8", uint8 -> "int4"."""
+    if payload.dtype == jnp.int8:
+        return "int8"
+    if payload.dtype == jnp.uint8:
+        return "int4"
+    return "fp"
+
+
+# ------------------------------------------------------------- int4 packing --
+
+
+def pack_int4(q: jax.Array) -> jax.Array:
+    """(… , D) int8 values in [-8, 7] -> (…, D//2) uint8 nibble pairs.
+
+    Even indices land in the low nibble, odd in the high nibble, so one
+    packed byte holds two adjacent head_dim elements of the SAME token —
+    tokens never share bytes and single-token appends stay independent.
+    """
+    assert q.shape[-1] % 2 == 0, f"head_dim must be even to nibble-pack, got {q.shape}"
+    lo = q[..., 0::2] & 0x0F
+    hi = q[..., 1::2] & 0x0F
+    return ((hi << 4) | lo).astype(jnp.uint8)
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    """(…, D//2) uint8 -> (…, D) int8, sign-extending each nibble."""
+    pi = packed.astype(jnp.int8)
+    lo = jnp.right_shift(jnp.left_shift(pi, 4), 4)  # arithmetic shift sign-extends
+    hi = jnp.right_shift(pi, 4)
+    both = jnp.stack([lo, hi], axis=-1)  # (..., D//2, 2)
+    return both.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+
+
+# --------------------------------------------------------- quant / dequant --
+
+
+def quantize_kv(x: jax.Array, kv_dtype: str) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Symmetric per-row absmax quantization of a (…, D) K/V tensor.
+
+    Returns ``(payload, scale)`` with ``scale.shape == x.shape[:-1]`` (fp32)
+    and ``x ≈ unpack(payload) * scale[..., None]``.  ``kv_dtype="fp"``
+    returns ``(x, None)`` so callers can treat fp as the degenerate case.
+    All-zero rows get scale 1.0 (payload 0), avoiding 0/0.
+    """
+    assert_kv_dtype(kv_dtype)
+    if kv_dtype == "fp":
+        return x, None
+    qmax = QMAX[kv_dtype]
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.where(absmax > 0, absmax / qmax, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -qmax, qmax).astype(jnp.int8)
+    if kv_dtype == "int4":
+        q = pack_int4(q)
+    return q, scale
+
+
+def dequantize_kv(payload: jax.Array, scale: jax.Array, kv_dtype: Optional[str] = None) -> jax.Array:
+    """Inverse of :func:`quantize_kv` -> fp32 (…, D)."""
+    if kv_dtype is None:
+        kv_dtype = infer_kv_dtype(payload)
+    if kv_dtype == "fp":
+        return payload
+    q = unpack_int4(payload) if kv_dtype == "int4" else payload
+    return q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+
+
+def quantize_kv_tree(kv, kv_dtype: str):
+    """Map a KVCache-shaped pytree of fp arrays to QuantKV leaves (identity
+    for "fp").  Used by the relayout / static-relay swap programs."""
+    assert_kv_dtype(kv_dtype)
+    if kv_dtype == "fp":
+        return kv
+
+    def q(x):
+        payload, scale = quantize_kv(x, kv_dtype)
+        return QuantKV(payload, scale)
+
+    return jax.tree.map(q, kv, is_leaf=lambda l: isinstance(l, jax.Array))
+
+
+# ----------------------------------------------------------- byte accounting --
+
+
+def payload_nbytes(leaf) -> int:
+    """Bytes of actual KV payload in one cache leaf (scales excluded)."""
+    return int(leaf.q.nbytes) if is_quantized(leaf) else int(leaf.nbytes)
+
+
+def total_nbytes(tree) -> int:
+    return sum(int(a.nbytes) for a in jax.tree.leaves(tree))
+
+
+def payload_bytes(tree) -> int:
+    """Payload bytes across a KVCache pytree whose k/v leaves may be QuantKV."""
+    total = 0
+    for leaf in jax.tree.leaves(tree, is_leaf=is_quantized):
+        total += payload_nbytes(leaf)
+    return total

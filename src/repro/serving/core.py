@@ -133,17 +133,22 @@ class ModelRunner:
         cache_layout: str = "contiguous",  # "contiguous" | "paged"
         block_size: int = 16,
         num_blocks: Optional[int] = None,
+        kv_dtype: str = "fp",  # "fp" | "int8" | "int4" — quantized KV cache
         mesh=None,
         overlap: bool = True,
     ):
+        from repro.quant.kv_quant import assert_kv_dtype, quantize_kv_tree
+
         assert cfg.family == "transformer", "serving engine drives the transformer family"
         assert mode in ("pdswap", "static"), mode
         assert cache_layout in ("contiguous", "paged"), cache_layout
+        assert_kv_dtype(kv_dtype)
         self.cfg = cfg
         self.params = params
         self.api = get_model(cfg)
         self.mode = mode
         self.cache_layout = cache_layout
+        self.kv_dtype = kv_dtype
         self.overlap = overlap and mode == "pdswap"
         self.max_len = max_len
         self.prompt_len = prompt_len
@@ -153,7 +158,9 @@ class ModelRunner:
         from repro.core.phase_engine import PhaseEngine
         from repro.models import transformer as T
 
-        self.engine = PhaseEngine(cfg, mesh, max_len=max_len, cache_layout=cache_layout)
+        self.engine = PhaseEngine(
+            cfg, mesh, max_len=max_len, cache_layout=cache_layout, kv_dtype=kv_dtype
+        )
         self._pa = jax.eval_shape(lambda: params)
         self._bucket_progs: Dict[int, dict] = {}  # bucket len -> phase programs
 
@@ -161,7 +168,7 @@ class ModelRunner:
             if num_blocks is None:
                 # full provisioning: every slot can grow to max_len
                 num_blocks = n_slots * cdiv(max_len, block_size)
-            pool_kv = T.init_paged_pool(cfg, num_blocks, block_size)
+            pool_kv = T.init_paged_pool(cfg, num_blocks, block_size, kv_dtype=kv_dtype)
             self.paged = PagedKVCache(
                 pool_kv, n_slots=n_slots, max_len=max_len, block_size=block_size
             )
@@ -173,17 +180,19 @@ class ModelRunner:
             self.paged = None
 
             def relay_static(kv):  # static engine: pad + layout only, no
-                # phase-specialized resharding / program swap
+                # phase-specialized resharding / program swap (but the
+                # quantized cache still quantizes on write — storage
+                # precision is a cache property, not a phase program)
                 def pad(x):
                     p = [(0, 0)] * x.ndim
                     p[-2] = (0, max_len - x.shape[-2])
                     return jnp.moveaxis(jnp.pad(x, p), 0, 1)  # -> (B, L, ...)
 
-                return jax.tree.map(pad, kv)
+                return quantize_kv_tree(jax.tree.map(pad, kv), kv_dtype)
 
             self.relay_static = jax.jit(relay_static)
             self.decode_prog = self.engine.decode_program(self._pa, n_slots, max_len)
-            self.cache = self.api.init_cache(cfg, n_slots, max_len)
+            self.cache = T.init_cache(cfg, n_slots, max_len, kv_dtype=kv_dtype)
         self.last_tokens = jnp.zeros((n_slots,), jnp.int32)
 
         # Per-slot sampling state, refreshed on slot assignment.  The fold_in
@@ -386,9 +395,10 @@ class ModelRunner:
         copy = self.paged.ensure_append_page(slot, length)
         if copy is not None:
             dst, src = copy
-            kv = self.paged.kv
-            self.paged.kv = type(kv)(
-                kv.k.at[dst].set(kv.k[src]), kv.v.at[dst].set(kv.v[src])
+            # device copy of every page plane — payload AND (quantized) the
+            # fp32 scale rows travel together, so the fork is exact
+            self.paged.kv = jax.tree.map(
+                lambda a: a.at[dst].set(a[src]), self.paged.kv
             )
 
     def replay(self, slot: int, req: Request, stats: EngineStats) -> bool:
@@ -424,7 +434,7 @@ class ModelRunner:
                 jnp.asarray(lengths),
             )
             stats.replayed_tokens += 1
-        jax.block_until_ready(self.paged.kv.k)
+        jax.block_until_ready(jax.tree.leaves(self.paged.kv))
         stats.t_replay += time.perf_counter() - t0
         return True
 
@@ -437,15 +447,22 @@ class ModelRunner:
 
     def kv_bytes(self) -> dict:
         """KV memory accounting for the benchmark: bytes reserved up front vs
-        the peak actually backing live tokens."""
+        the peak actually backing live tokens.  ``payload`` is the packed
+        K/V bytes alone (scale planes excluded) — the term ``kv_dtype``
+        shrinks 2x (int8) / 4x (int4) against the fp cache."""
+        from repro.quant.kv_quant import payload_bytes, total_nbytes
+
         if self.cache_layout == "paged":
             return {
                 "allocated": self.paged.pool_bytes(),
                 "peak_in_use": self.paged.peak_live_pages * self.paged.page_bytes(),
                 "page_bytes": self.paged.page_bytes(),
+                "payload": self.paged.num_blocks * self.paged.page_payload_bytes(),
+                "kv_dtype": self.kv_dtype,
             }
-        nbytes = int(self.cache.k.nbytes + self.cache.v.nbytes)
-        return {"allocated": nbytes, "peak_in_use": nbytes, "page_bytes": 0}
+        nbytes = total_nbytes(self.cache)
+        return {"allocated": nbytes, "peak_in_use": nbytes, "page_bytes": 0,
+                "payload": payload_bytes(self.cache), "kv_dtype": self.kv_dtype}
 
 
 class Scheduler:
@@ -535,6 +552,7 @@ class EngineCore:
         cache_layout: str = "contiguous",  # "contiguous" | "paged"
         block_size: int = 16,
         num_blocks: Optional[int] = None,
+        kv_dtype: str = "fp",  # "fp" | "int8" | "int4" — quantized KV cache
         mesh=None,
         overlap: bool = True,
         swap_policy: Union[SwapPolicy, str, None] = None,
@@ -543,7 +561,7 @@ class EngineCore:
         self.runner = ModelRunner(
             cfg, params, n_slots=n_slots, max_len=max_len, prompt_len=prompt_len,
             mode=mode, cache_layout=cache_layout, block_size=block_size,
-            num_blocks=num_blocks, mesh=mesh, overlap=overlap,
+            num_blocks=num_blocks, kv_dtype=kv_dtype, mesh=mesh, overlap=overlap,
         )
         if swap_policy is None:
             swap_policy = DrainPolicy()
@@ -564,6 +582,10 @@ class EngineCore:
     @property
     def cache_layout(self) -> str:
         return self.runner.cache_layout
+
+    @property
+    def kv_dtype(self) -> str:
+        return self.runner.kv_dtype
 
     def submit(self, request: Request) -> None:
         self.scheduler.submit(request)

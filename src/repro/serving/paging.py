@@ -34,8 +34,11 @@ import dataclasses
 from collections import OrderedDict, deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.quant.kv_quant import infer_kv_dtype, is_quantized, payload_bytes, total_nbytes
 
 
 def cdiv(a: int, b: int) -> int:
@@ -225,7 +228,8 @@ class PagedKVCache:
 
     def __init__(
         self,
-        pool_kv,  # KVCache of (num_blocks, L, Hkv, block_size, D) arrays
+        pool_kv,  # KVCache of (num_blocks, L, Hkv, block_size, D) arrays —
+        # or of QuantKV leaves (packed payload + fp32 scale planes)
         *,
         n_slots: int,
         max_len: int,
@@ -235,7 +239,10 @@ class PagedKVCache:
         self.block_size = block_size
         self.max_len = max_len
         self.max_pages = cdiv(max_len, block_size)
-        self.pool = BlockPool(pool_kv.k.shape[0], block_size)
+        self.kv_dtype = (
+            infer_kv_dtype(pool_kv.k.q) if is_quantized(pool_kv.k) else "fp"
+        )
+        self.pool = BlockPool(jax.tree.leaves(pool_kv)[0].shape[0], block_size)
         self.tables: List[List[int]] = [[] for _ in range(n_slots)]
         self.peak_live_pages = 0
         self._tables_dirty = True
@@ -248,8 +255,14 @@ class PagedKVCache:
         return self.pool.num_blocks
 
     def page_bytes(self) -> int:
-        n, l, hkv, bs, d = self.kv.k.shape
-        return 2 * l * hkv * bs * d * self.kv.k.dtype.itemsize  # K + V
+        """Total bytes of one page: K + V payload plus (quantized) the fp32
+        scale planes — the real footprint the pool reserves per page."""
+        return total_nbytes(self.kv) // self.num_blocks
+
+    def page_payload_bytes(self) -> int:
+        """Packed K/V payload bytes of one page, scales excluded — the
+        quantity the kv_dtype lever shrinks (2x int8, 4x int4 vs bf16)."""
+        return payload_bytes(self.kv) // self.num_blocks
 
     def pool_bytes(self) -> int:
         return self.num_blocks * self.page_bytes()

@@ -1,14 +1,30 @@
-"""Prefill/decode attention kernels: shape/dtype/schedule sweeps vs oracles."""
+"""Prefill/decode attention kernels: shape/dtype/schedule sweeps vs oracles,
+plus the quantized-KV subsystem (int4 pack/unpack properties and the
+fused-dequant kernel parity)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis", reason="property tests need hypothesis")
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip; the parametrized sweeps still run
+    def given(*_a, **_k):
+        return lambda f: pytest.mark.skip(reason="property tests need hypothesis")(f)
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class _NullStrategies:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _NullStrategies()
 
 from repro.kernels.decode_attention.ops import decode_attention
 from repro.kernels.prefill_attention.ops import prefill_attention
 from repro.kernels.prefill_attention.ref import prefill_attention_reference
+from repro.quant.kv_quant import QMAX, dequantize_kv, pack_int4, quantize_kv, unpack_int4
 
 
 def _qkv(b, h, hkv, s, d, seed=0, dtype=jnp.float32):
@@ -137,6 +153,138 @@ def test_decode_stats_merge_matches_appended_cache(use_kernel):
     k2, v2 = append(k, k_new), append(v, v_new)
     ref = decode_attention(q, k2, v2, lengths + 1, use_kernel=False)
     np.testing.assert_allclose(np.asarray(merged), np.asarray(ref), rtol=3e-5, atol=3e-5)
+
+
+# ------------------------------------------------ KV quantization (kv_dtype) --
+
+
+@given(
+    st.integers(1, 4),  # leading rows
+    st.sampled_from([2, 8, 32, 64]),  # head_dim (even — nibble pairs)
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_int4_pack_unpack_roundtrip(rows, d, seed):
+    """Nibble packing is lossless over the full int4 range [-8, 7]."""
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-8, 8, size=(rows, 3, d)).astype(np.int8)
+    packed = pack_int4(jnp.asarray(q))
+    assert packed.shape == (rows, 3, d // 2) and packed.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(unpack_int4(packed)), q)
+
+
+@given(
+    st.sampled_from(["int8", "int4"]),
+    st.integers(1, 3),  # rows
+    st.sampled_from([4, 16, 64]),  # head_dim
+    st.integers(0, 2**31 - 1),
+    st.floats(1e-2, 1e2),  # magnitude sweep: scales must track dynamic range
+)
+@settings(max_examples=30, deadline=None)
+def test_kv_quant_error_bound_and_idempotent_requantization(kv_dtype, rows, d, seed, mag):
+    """Symmetric per-row absmax quantization: reconstruction error is within
+    half a quantization step, and requantizing the dequantized values is a
+    payload FIXED POINT — the property bit-identical preemption replay
+    rests on (same values -> same page bytes, every time)."""
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=(rows, 2, 5, d)) * mag).astype(np.float32)
+    payload, scale = quantize_kv(jnp.asarray(x), kv_dtype)
+    assert scale.shape == x.shape[:-1]
+    xh = np.asarray(dequantize_kv(payload, scale, kv_dtype))
+    step = np.abs(x).max(axis=-1, keepdims=True) / QMAX[kv_dtype]
+    assert np.all(np.abs(xh - x) <= step / 2 + 1e-4 * mag)
+    # fixed point: quantize(dequantize(quantize(x))) == quantize(x) bit-for-bit
+    p2, s2 = quantize_kv(jnp.asarray(xh), kv_dtype)
+    np.testing.assert_array_equal(np.asarray(p2), np.asarray(payload))
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(scale), rtol=2e-6)
+
+
+def test_kv_quant_zero_rows_are_safe():
+    """All-zero rows must not divide by zero and must reconstruct as zero."""
+    x = jnp.zeros((2, 3, 8), jnp.float32)
+    for kv_dtype in ("int8", "int4"):
+        payload, scale = quantize_kv(x, kv_dtype)
+        assert np.all(np.asarray(scale) == 1.0)
+        np.testing.assert_array_equal(np.asarray(dequantize_kv(payload, scale, kv_dtype)), 0.0)
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "int4"])
+@pytest.mark.parametrize(
+    "b,h,hkv,s,d,bk",
+    [
+        (2, 4, 2, 37, 32, 16),  # partial final block, GQA
+        (1, 8, 1, 130, 64, 64),  # MQA, partial final block
+        (3, 6, 2, 64, 32, 32),  # exact blocks
+    ],
+)
+def test_decode_quant_kernel_matches_dequant_reference(kv_dtype, b, h, hkv, s, d, bk):
+    """Fused-dequant contiguous decode kernel == dequantize-then-attend
+    oracle, through the op-level dispatch (randomized ragged lengths)."""
+    rng = np.random.default_rng(b * s + d)
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    kq, ks = quantize_kv(k, kv_dtype)
+    vq, vs = quantize_kv(v, kv_dtype)
+    lengths = jnp.asarray(rng.integers(1, s + 1, size=(b,)), jnp.int32)
+    ref = decode_attention(q, kq, vq, lengths, k_scales=ks, v_scales=vs,
+                           kv_dtype=kv_dtype, use_kernel=False)
+    out = decode_attention(q, kq, vq, lengths, k_scales=ks, v_scales=vs,
+                           kv_dtype=kv_dtype, bk=bk, use_kernel=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "int4"])
+def test_decode_quant_tracks_fp_within_quant_error(kv_dtype):
+    """The quantized decode output stays close to the fp output — the
+    accuracy/bandwidth trade-off is bounded by the quantization step."""
+    rng = np.random.default_rng(9)
+    b, h, hkv, s, d = 2, 4, 2, 48, 32
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    lengths = jnp.asarray([s, 17], jnp.int32)
+    fp = decode_attention(q, k, v, lengths, use_kernel=False)
+    kq, ks = quantize_kv(k, kv_dtype)
+    vq, vs = quantize_kv(v, kv_dtype)
+    qd = decode_attention(q, kq, vq, lengths, k_scales=ks, v_scales=vs,
+                          kv_dtype=kv_dtype, use_kernel=False)
+    tol = {"int8": 0.05, "int4": 0.6}[kv_dtype]  # ~attention of one quant step
+    assert float(jnp.max(jnp.abs(qd - fp))) < tol
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "int4"])
+@pytest.mark.parametrize(
+    "b,hkv,g,d,bs,n_pages_seq",
+    [
+        (2, 2, 2, 32, 8, 3),
+        (1, 1, 4, 64, 16, 2),  # MHA-as-GQA grouping
+        (3, 2, 1, 32, 4, 4),  # g=1
+    ],
+)
+def test_paged_quant_kernel_matches_reference_at_ragged_lengths(
+    kv_dtype, b, hkv, g, d, bs, n_pages_seq
+):
+    """Fused-dequant paged decode kernel == dequantize-the-pool oracle on
+    randomized shuffled block tables and ragged lengths (partial pages)."""
+    from repro.kernels.paged_attention.kernel import paged_decode_attention_quant_pallas
+    from repro.kernels.paged_attention.ref import paged_decode_attention_quant_reference
+
+    rng = np.random.default_rng(d + bs)
+    n_blocks = b * n_pages_seq + 2
+    q = jnp.asarray(rng.normal(size=(b, hkv, g, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(n_blocks, hkv, bs, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(n_blocks, hkv, bs, d)), jnp.float32)
+    kq, ks = quantize_kv(kp, kv_dtype)
+    vq, vs = quantize_kv(vp, kv_dtype)
+    perm = rng.permutation(n_blocks)[: b * n_pages_seq].reshape(b, n_pages_seq)
+    tables = jnp.asarray(perm, jnp.int32)
+    lengths = jnp.asarray(rng.integers(1, n_pages_seq * bs + 1, size=b), jnp.int32)
+    ref = paged_decode_attention_quant_reference(
+        q, kq, ks, vq, vs, tables, lengths, kv_dtype=kv_dtype)
+    out, _, _ = paged_decode_attention_quant_pallas(
+        q, kq, ks, vq, vs, tables, lengths, kv_dtype=kv_dtype, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
 
 
 def test_decode_stats_empty_cache_merge_is_new_token_only():

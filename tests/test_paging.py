@@ -284,6 +284,47 @@ def test_paged_heavy_pressure_no_livelock(tiny):
     assert got == ref
 
 
+def test_kv_bytes_payload_ratio_across_dtypes(tiny):
+    """kv_bytes() must reflect the REAL pool footprint: the packed payload
+    is exactly 2x (int8) / 4x (int4) smaller than fp; the allocated total
+    additionally carries the fp32 scale planes."""
+    cfg, api, params = tiny
+    kb = {}
+    for kv_dtype in ("fp", "int8", "int4"):
+        eng = ServingEngine(cfg, params, n_slots=2, max_len=64, prompt_len=12,
+                            mode="static", cache_layout="paged", block_size=8,
+                            kv_dtype=kv_dtype)
+        kb[kv_dtype] = eng.kv_bytes()
+    assert kb["fp"]["payload"] == 2 * kb["int8"]["payload"] == 4 * kb["int4"]["payload"]
+    assert kb["fp"]["payload"] == kb["fp"]["allocated"]  # fp carries no scales
+    for dt in ("int8", "int4"):
+        assert kb[dt]["allocated"] > kb[dt]["payload"]  # + scale planes
+        assert kb[dt]["allocated"] < kb["fp"]["allocated"]  # still a net win
+        assert kb[dt]["kv_dtype"] == dt
+    # contiguous accounting agrees on the ratio
+    kc = {dt: ServingEngine(cfg, params, n_slots=2, max_len=64, prompt_len=12,
+                            mode="static", kv_dtype=dt).kv_bytes()
+          for dt in ("fp", "int4")}
+    assert kc["fp"]["payload"] == 4 * kc["int4"]["payload"]
+
+
+def test_paged_preemption_replay_bit_identical_int4(tiny):
+    """THE quantized-replay property: under kv_dtype="int4" a preempted +
+    replayed request continues bit-identically to an int4 run that was never
+    preempted — requantizing the same values reproduces the same pages, so
+    eviction/restart is invisible in the token stream."""
+    cfg, api, params = tiny
+    rng = np.random.default_rng(4)
+    prompts = [(rng.integers(0, cfg.vocab_size, 14).astype(np.int32), i) for i in range(4)]
+    # ample capacity (contiguous) int4 reference: never preempts
+    _, _, ref = _serve(cfg, params, prompts, layout="contiguous", mode="static",
+                       max_new=10, kv_dtype="int4")
+    _, stats, got = _serve(cfg, params, prompts, layout="paged", mode="static",
+                           max_new=10, num_blocks=7, kv_dtype="int4")
+    assert stats.preemptions > 0 and stats.replayed_tokens > 0
+    assert got == ref
+
+
 def test_varlen_prompts_not_truncated(tiny):
     """Satellite: prompts longer than prompt_len keep every token (the seed
     engine silently dropped them)."""
