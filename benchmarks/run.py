@@ -13,6 +13,7 @@ import traceback
 
 from . import (
     beyond_paper,
+    chunked_prefill_interleave,
     dse_sweep,
     fig5_overlap,
     fig6_decode_throughput,
@@ -38,6 +39,7 @@ BENCHES = {
     "serving_e2e": serving_e2e,
     "paged_vs_contiguous": paged_vs_contiguous,
     "kv_quant_sweep": kv_quant_sweep,
+    "chunked_prefill_interleave": chunked_prefill_interleave,
     "policy_compare": policy_compare,
     "beyond_paper": beyond_paper,
 }

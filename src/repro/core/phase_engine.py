@@ -218,6 +218,72 @@ class PhaseEngine:
         tail = PhaseProgram(f"prefill_tail:{batch}x{seq}", self._jit(tail_fn, in_shardings=in_tail))
         return body, tail
 
+    def prefill_chunk_program(
+        self, chunk: int, n_slots: int, max_len: int, prefix_width: int
+    ) -> PhaseProgram:
+        """Chunked prefill against the contiguous decode cache:
+        ``fn(params, tokens (1, C), cache, prefix, slot, prefix_len,
+        last_pos) -> (logits, new_cache, new_prefix)`` (cache and the fp
+        prefix mirror both donated — the chunk installs its KV in place,
+        quantize-on-write under ``kv_dtype``).
+
+        This is the bounded-quantum prefill RM: ONE compiled shape per
+        chunk size serves every prompt (plus one tail bucket per prompt),
+        replacing the per-prompt power-of-two bucket ladder.  The swap is
+        fused into the program — each chunk both computes and installs its
+        KV, so the fabric can flip back to decode after every quantum.
+        ``slot``/``prefix_len``/``last_pos`` are traced scalars: no
+        recompilation across slots or chunk indices; ``prefix_width`` is
+        compile-time (the runner's geometric ladder over the prefix), so
+        short prompts never pay attention over the mirror's full max_len
+        capacity.  No pinned in_shardings: the serving core runs these
+        unsharded today, and under a mesh GSPMD propagates from the
+        committed param/cache buffers (pinning the full tuple like the
+        monolithic programs do is future work)."""
+        key = f"prefill_chunk:{chunk}+{prefix_width}@{n_slots}x{max_len}"
+        if key in self._programs:
+            return self._programs[key]
+        cfg, pctx = self.cfg, self.prefill_ctx
+        assert cfg.family == "transformer", "chunked prefill implemented for the transformer family"
+        from repro.models import transformer as T
+
+        def fn(params, tokens, cache, prefix, slot, prefix_len, last_pos):
+            return T.prefill_chunk(params, tokens, cache, prefix, slot,
+                                   prefix_len, last_pos, cfg, pctx,
+                                   prefix_width=prefix_width)
+
+        prog = PhaseProgram(key, self._jit(fn, donate=(2, 3)))
+        self._programs[key] = prog
+        return prog
+
+    def paged_prefill_chunk_program(
+        self, chunk: int, max_pages: int, block_size: int, prefix_width: int
+    ) -> PhaseProgram:
+        """Chunked prefill against the paged pool: ``fn(params, tokens
+        (1, C), pages, prefix, page_ids (C/bs,), prefix_len, last_pos) ->
+        (logits, new_pages, new_prefix)`` (pool and fp prefix mirror both
+        donated).  ``C`` must be a multiple of ``block_size``; the chunk's
+        pages are written by the same quantize-on-write scatter the
+        monolithic page-write swap uses, with prefix-cache-hit pages
+        skipped via out-of-bounds ids.  ``prefix_width`` / sharding: see
+        ``prefill_chunk_program`` (unsharded today; GSPMD propagates)."""
+        key = f"prefill_chunk_paged:{chunk}+{prefix_width}@{max_pages}x{block_size}"
+        if key in self._programs:
+            return self._programs[key]
+        cfg, pctx = self.cfg, self.prefill_ctx
+        assert cfg.family == "transformer", "chunked prefill implemented for the transformer family"
+        assert chunk % block_size == 0, (chunk, block_size)
+        from repro.models import transformer as T
+
+        def fn(params, tokens, pages, prefix, page_ids, prefix_len, last_pos):
+            return T.prefill_chunk_paged(params, tokens, pages, prefix,
+                                         page_ids, prefix_len, last_pos, cfg,
+                                         pctx, prefix_width=prefix_width)
+
+        prog = PhaseProgram(key, self._jit(fn, donate=(2, 3)))
+        self._programs[key] = prog
+        return prog
+
     def relayout_program(self, batch: int, seq: int, max_len: int) -> PhaseProgram:
         """The swap: prefill-layout KV -> decode-layout cache buffer.
 

@@ -38,6 +38,11 @@ def main(argv=None) -> int:
     p.add_argument("--kv-dtype", default="fp", choices=["fp", "int8", "int4"],
                    help="KV-cache precision: packed int8/int4 payload + fp32 "
                         "scale planes (fused dequant in the decode kernels)")
+    p.add_argument("--prefill-chunk", type=int, default=None,
+                   help="tokens per prefill quantum: run long prompts as "
+                        "bounded chunks with a decode round between each, "
+                        "instead of one atomic burst (None = monolithic; "
+                        "paged layout needs a multiple of --block-size)")
     p.add_argument("--ragged", action="store_true",
                    help="draw prompt lengths uniformly in [4, prompt_len]")
     p.add_argument("--requests", type=int, default=6)
@@ -71,7 +76,8 @@ def main(argv=None) -> int:
                      prompt_len=args.prompt_len, mode=args.mode,
                      cache_layout=args.cache_layout, block_size=args.block_size,
                      num_blocks=args.num_blocks, kv_dtype=args.kv_dtype,
-                     overlap=not args.no_overlap, swap_policy=args.swap_policy)
+                     overlap=not args.no_overlap, swap_policy=args.swap_policy,
+                     prefill_chunk=args.prefill_chunk)
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p, seed=args.seed,
                         stop_tokens=tuple(args.stop_token or ()))
@@ -105,6 +111,9 @@ def main(argv=None) -> int:
           f"{stats.decode_tput():.1f} tok/s on this host)")
     print(f"  logic swaps       : {stats.swaps}  in {stats.prefill_bursts} "
           f"prefill bursts (fabric flips)")
+    if stats.prefill_chunks:
+        print(f"  prefill chunks    : {stats.prefill_chunks}  "
+              f"(chunk={args.prefill_chunk} tokens, decode interleaved between chunks)")
     ttfts = [r.first_token_t - r.enqueue_t for r in eng.finished.values()]
     if ttfts:
         print(f"  TTFT              : mean {1e3*float(np.mean(ttfts)):.1f} ms, "

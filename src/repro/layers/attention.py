@@ -186,6 +186,80 @@ def attention_prefill(
     return y, (kt, vt)
 
 
+def attention_prefill_chunk(
+    params: dict,
+    x: jax.Array,  # (B, C, d) — one chunk of the prompt
+    k_prefix: jax.Array,  # (B, Hkv, Cap, D) fp — the installed cache prefix,
+    v_prefix: jax.Array,  # valid in [0, prefix_len), garbage beyond
+    prefix_len: jax.Array,  # traced scalar — tokens already prefilled
+    cfg: ModelConfig,
+    pctx: PartitionCtx,
+    *,
+    window: Optional[int] = None,
+    positions: Optional[jax.Array] = None,  # (B, C), default prefix_len + arange(C)
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Chunked-prefill attention: the chunk's queries attend over the
+    already-installed KV-cache prefix PLUS the chunk itself, with a
+    position-offset causal mask.
+
+    This is the third execution path of the dynamic region (prefill RM run
+    one bounded quantum at a time): query position ``q`` sits at global
+    position ``prefix_len + q`` and may attend key ``k`` iff ``k`` is a
+    valid prefix position (``k < prefix_len``) or a chunk position at or
+    before it.  ``k_prefix``/``v_prefix`` are the prefill-resident fp
+    mirror of the already-installed prefix (see
+    ``transformer._prefill_chunk_body`` for why the fp values, not the
+    possibly-quantized cache bytes, are what keep chunked == monolithic).
+
+    Returns (y, (k, v)) with the CHUNK's new K/V in (B, Hkv, C, D) cache
+    layout; the caller installs them at ``[prefix_len, prefix_len + C)``
+    (quantize-on-write under ``kv_dtype``).  A Pallas chunk kernel is a
+    future optimization — this jnp path matches the reference prefill's
+    f32 einsum numerics, so chunked == monolithic bitwise in the reference
+    regime (monolithic prompts past the 1024-token reference cutoff, or
+    under the Pallas kernel, accumulate in a different order and agree to
+    float rounding instead).
+    """
+    b, c, _ = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    cap = k_prefix.shape[2]
+    if positions is None:
+        positions = jnp.broadcast_to(prefix_len + jnp.arange(c), (b, c))
+    q, k, v = _project_qkv(params, x, cfg, positions, training=False,
+                           rope=cfg.rope_theta > 0)
+    qt = q.transpose(0, 2, 1, 3)  # (B, H, C, D)
+    kt = k.transpose(0, 2, 1, 3)  # (B, Hkv, C, D)
+    vt = v.transpose(0, 2, 1, 3)
+
+    if cfg.attn_impl == "stub":
+        out = qt  # kernel-substituted lowering; see kernels/costs.py
+    else:
+        kk = jnp.concatenate([k_prefix.astype(jnp.float32), kt.astype(jnp.float32)], axis=2)
+        vv = jnp.concatenate([v_prefix.astype(jnp.float32), vt.astype(jnp.float32)], axis=2)
+        g = h // hkv
+        if g > 1:
+            kk = jnp.repeat(kk, g, axis=1)
+            vv = jnp.repeat(vv, g, axis=1)
+        sm = 1.0 / math.sqrt(hd)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", qt.astype(jnp.float32), kk) * sm
+        # global key positions: prefix buffer slot i holds position i (valid
+        # iff i < prefix_len); chunk key j sits at prefix_len + j
+        qpos = prefix_len + jnp.arange(c)[:, None]  # (C, 1)
+        kpos = jnp.concatenate([jnp.arange(cap), prefix_len + jnp.arange(c)])
+        valid = jnp.concatenate(
+            [jnp.arange(cap) < prefix_len, jnp.ones((c,), bool)])
+        mask = valid[None, :] & (qpos >= kpos[None, :])
+        if window is not None:
+            mask &= qpos - kpos[None, :] < window
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        out = jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(scores, -1), vv).astype(x.dtype)
+
+    out = pctx.shard(out, "batch", "heads", "seq", "head_dim")
+    y = out.transpose(0, 2, 1, 3).reshape(b, c, h * hd)
+    y = linear_apply(params["wo"], y, quant=cfg.quant, training=False, use_pallas=cfg.use_pallas)
+    return y, (kt, vt)
+
+
 def update_cache(cache: KVCache, k_new: jax.Array, v_new: jax.Array, lengths: jax.Array) -> KVCache:
     """Insert one token's K/V per sequence at its current length."""
     smax = cache.k.shape[2]
@@ -367,6 +441,44 @@ def write_prefill_pages_q(pages, kv: jax.Array, page_ids: jax.Array, *, block_si
     return QuantKV(
         write_prefill_pages(pages.q, payload, page_ids, block_size=block_size),
         write_prefill_scales(pages.scale, scale, page_ids, block_size=block_size),
+    )
+
+
+def write_chunk_kv(buf: jax.Array, new: jax.Array, slot, start) -> jax.Array:
+    """Install one prefill chunk's KV into the contiguous decode cache.
+
+    buf: (B_slots, L, Hkv, Smax, D) batch-leading decode cache; new:
+    (L, 1, Hkv, C, D) — the chunk's per-layer K or V collected as scan ys;
+    ``slot``/``start`` are traced scalars.  All L layers' C tokens land in
+    one contiguous window, so the write is a single dynamic_update_slice
+    (the donated buffer aliases in place — same shape discipline as
+    ``scatter_new_tokens``).  ``start + C <= Smax`` is the caller's
+    contract (the chunk tail bucket is clamped to the cache bound;
+    dynamic_update_slice would silently shift a write that overflows).
+    """
+    newb = jnp.moveaxis(new, 1, 0).astype(buf.dtype)  # (1, L, Hkv, C, D)
+    return jax.lax.dynamic_update_slice(buf, newb, (slot, 0, 0, start, 0))
+
+
+def write_chunk_scales(buf: jax.Array, new: jax.Array, slot, start) -> jax.Array:
+    """Scale-plane analogue of ``write_chunk_kv``: buf (B, L, Hkv, Smax)
+    fp32, new (L, 1, Hkv, C)."""
+    newb = jnp.moveaxis(new, 1, 0).astype(buf.dtype)  # (1, L, Hkv, C)
+    return jax.lax.dynamic_update_slice(buf, newb, (slot, 0, 0, start))
+
+
+def write_chunk_kv_q(buf, new: jax.Array, slot, start):
+    """``write_chunk_kv`` generalized to a possibly-quantized cache leaf:
+    quantize-on-write of the chunk rows (payload + scale plane).  Per-token
+    scales mean chunk-at-a-time quantization writes exactly the bytes
+    whole-prompt quantization would — the chunked/monolithic cache-state
+    equivalence and preemption-replay bit-identity rest on that."""
+    if not isinstance(buf, QuantKV):
+        return write_chunk_kv(buf, new, slot, start)
+    payload, scale = quantize_kv(new, infer_kv_dtype(buf.q))
+    return QuantKV(
+        write_chunk_kv(buf.q, payload, slot, start),
+        write_chunk_scales(buf.scale, scale, slot, start),
     )
 
 

@@ -213,6 +213,137 @@ def prefill_tail(params, x_mid, cfg: ModelConfig, pctx: PartitionCtx = NULL_CTX,
     return logits[:, -1, :]
 
 
+def _prefill_chunk_body(params, tokens, prefix, prefix_len, cfg, pctx,
+                        prefix_width=None):
+    """Shared chunk forward for both cache layouts: run one prompt chunk
+    through the layer stack, each layer attending over the prefill-resident
+    fp KV ``prefix`` (valid in ``[0, prefix_len)``) plus the chunk itself.
+    Returns (hidden (1, C, d), chunk KV ys (L, 1, Hkv, C, D), new prefix
+    with the chunk inserted at ``[prefix_len, prefix_len + C)``).
+
+    ``prefix_width`` (compile-time) truncates the prefix the attention
+    SEES to its leading ``prefix_width`` positions — the caller picks a
+    ladder bucket >= prefix_len, so a short prompt's chunks never pay
+    attention over the buffer's full max_len capacity.  The running
+    update still lands in the full-capacity buffer.
+
+    Why an fp prefix mirror rather than re-reading the decode cache: the
+    cache may be quantized (``kv_dtype``), and a chunk attending over a
+    dequantized prefix would compute hidden states — and therefore KV —
+    that drift from the monolithic prefill (which attends its own fp KV).
+    The mirror keeps chunked prefill numerically equal to monolithic for
+    EVERY kv_dtype; per-token quantize-on-write of the same fp values then
+    lands the exact bytes whole-prompt quantization would, so the decode
+    trajectory is invariant to chunking.  The mirror is one (L, 1, Hkv,
+    Cap, D) fp32 buffer — the same transient footprint the monolithic
+    prefill's KV held, bounded by max_len, and shared across requests
+    because only one request prefills at a time.
+    """
+    from repro.layers.attention import attention_prefill_chunk
+
+    b, c = tokens.shape
+    x = _embed(params, tokens, cfg, pctx)
+    positions = jnp.broadcast_to(prefix_len + jnp.arange(c), (b, c))
+    pk, pv = prefix.k, prefix.v
+    if prefix_width is not None and prefix_width < pk.shape[3]:
+        pk = pk[:, :, :, :prefix_width, :]  # static slice: attention-visible
+        pv = pv[:, :, :, :prefix_width, :]  # window of the running prefix
+
+    def body(x, scanned):
+        lp, li = scanned
+        kp = jax.lax.dynamic_index_in_dim(pk, li, axis=0, keepdims=False)
+        vp = jax.lax.dynamic_index_in_dim(pv, li, axis=0, keepdims=False)
+        h = apply_norm(lp["ln1"], x, cfg.norm, cfg.norm_eps)
+        attn_out, (k_new, v_new) = attention_prefill_chunk(
+            lp["attn"], h, kp, vp, prefix_len, cfg, pctx,
+            window=cfg.sliding_window, positions=positions,
+        )
+        x = x + attn_out
+        h = apply_norm(lp["ln2"], x, cfg.norm, cfg.norm_eps)
+        if cfg.moe:
+            ffn_out, _ = moe_apply(lp["moe"], h, cfg, pctx, training=False)
+        else:
+            ffn_out = mlp_apply(lp["mlp"], h, cfg, pctx, training=False)
+        return x + ffn_out, (k_new, v_new)
+
+    x, (tok_k, tok_v) = jax.lax.scan(body, x, (params["layers"], jnp.arange(cfg.num_layers)))
+    start = (0, 0, 0, prefix_len, 0)
+    new_prefix = KVCache(
+        jax.lax.dynamic_update_slice(prefix.k, tok_k.astype(prefix.k.dtype), start),
+        jax.lax.dynamic_update_slice(prefix.v, tok_v.astype(prefix.v.dtype), start),
+    )
+    return x, tok_k, tok_v, new_prefix
+
+
+def prefill_chunk(
+    params: dict,
+    tokens: jax.Array,  # (1, C) int32 — one right-padded chunk of the prompt
+    cache: KVCache,  # (B_slots, L, Hkv, Smax, D) decode cache (donated)
+    prefix: KVCache,  # (L, 1, Hkv, Cap, D) fp32 running prefix (donated)
+    slot: jax.Array,  # traced scalar — destination slot
+    prefix_len: jax.Array,  # traced scalar — tokens already installed
+    last_pos: jax.Array,  # traced scalar — chunk-local position of the last real token
+    cfg: ModelConfig,
+    pctx: PartitionCtx = NULL_CTX,
+    prefix_width=None,  # compile-time attention-visible prefix width
+):
+    """One chunk of prefill installed into the CONTIGUOUS decode cache.
+
+    The chunk's queries attend over the already-prefilled prefix plus the
+    chunk itself with a position-offset causal mask (see
+    ``_prefill_chunk_body`` for why the prefix is an fp mirror); the
+    chunk's KV is installed at ``[prefix_len, prefix_len + C)`` of slot
+    ``slot`` by one post-scan ``write_chunk_kv_q`` (quantize-on-write
+    under ``kv_dtype``).  Returns (logits (1, Vp) of ``last_pos``,
+    new_cache, new_prefix) — intermediate chunks simply ignore the logits
+    (the head is one tiny matmul at these chunk sizes).
+
+    Chunk boundaries are a pure function of (prompt length, chunk size), so
+    a preemption-restart re-prefills through the exact same programs and
+    replay stays bit-identical.
+    """
+    from repro.layers.attention import write_chunk_kv_q
+
+    x, tok_k, tok_v, new_prefix = _prefill_chunk_body(
+        params, tokens, prefix, prefix_len, cfg, pctx, prefix_width=prefix_width)
+    new_k = write_chunk_kv_q(cache.k, tok_k, slot, prefix_len)
+    new_v = write_chunk_kv_q(cache.v, tok_v, slot, prefix_len)
+    x_last = jax.lax.dynamic_slice_in_dim(x, last_pos, 1, axis=1)
+    logits = _logits(params, x_last, cfg, pctx)
+    return logits[:, -1, :], KVCache(new_k, new_v), new_prefix
+
+
+def prefill_chunk_paged(
+    params: dict,
+    tokens: jax.Array,  # (1, C) int32 — one right-padded chunk, C % bs == 0
+    pages: KVCache,  # (N, L, Hkv, bs, D) page pool (donated)
+    prefix: KVCache,  # (L, 1, Hkv, Cap, D) fp32 running prefix (donated)
+    page_ids: jax.Array,  # (C // bs,) int32 — destinations; OOB entries dropped
+    prefix_len: jax.Array,  # traced scalar
+    last_pos: jax.Array,  # traced scalar, chunk-local
+    cfg: ModelConfig,
+    pctx: PartitionCtx = NULL_CTX,
+    prefix_width=None,  # compile-time attention-visible prefix width
+):
+    """One chunk of prefill installed into the PAGED pool —
+    ``prefill_chunk`` with the chunk's KV scattered into its own pages by
+    ``write_prefill_pages_q`` (quantize-on-write; prefix-cache-hit pages
+    arrive as out-of-bounds ids and keep their shared contents).  The
+    chunk start is page-aligned (``prefill_chunk % block_size == 0``), so
+    every chunk writes whole pages.
+    """
+    from repro.layers.attention import write_prefill_pages_q
+
+    bs = pages.k.q.shape[3] if hasattr(pages.k, "q") else pages.k.shape[3]
+    x, tok_k, tok_v, new_prefix = _prefill_chunk_body(
+        params, tokens, prefix, prefix_len, cfg, pctx, prefix_width=prefix_width)
+    new_k = write_prefill_pages_q(pages.k, tok_k, page_ids, block_size=bs)
+    new_v = write_prefill_pages_q(pages.v, tok_v, page_ids, block_size=bs)
+    x_last = jax.lax.dynamic_slice_in_dim(x, last_pos, 1, axis=1)
+    logits = _logits(params, x_last, cfg, pctx)
+    return logits[:, -1, :], KVCache(new_k, new_v), new_prefix
+
+
 def _kv_buffer(shape, dtype, kv_dtype: str):
     """One K or V cache buffer: a plain fp array, or a QuantKV holding the
     packed payload (int8, or uint8 nibble pairs for int4) plus the fp32

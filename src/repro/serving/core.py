@@ -30,6 +30,20 @@ compatibility loop over ``step()`` and, with greedy sampling and the default
 ``DrainPolicy``, reproduces the PR-1 engine token-for-token.
 ``generate()`` streams one request's outputs as an iterator.
 
+With ``prefill_chunk=N`` the prefill burst becomes CHUNKED: ``step()`` runs
+at most one N-token chunk of pending prefill per quantum (continue the
+partially-prefilled request, else admit the queue head and run its first
+chunk), then the decode round — so a long prompt no longer stalls every
+active stream for its whole prefill; decode interleaves between chunks.
+Greedy streams are bit-identical to monolithic prefill for every layout x
+kv_dtype (chunk-size invariance; in the jnp reference regime — past the
+reference path's 1024-token cutoff or under the Pallas prefill kernel the
+monolithic summation order differs, so agreement is to float rounding),
+and chunk boundaries are a pure function of (prompt length, chunk size)
+so preemption replay stays bit-identical.
+See ``PrefillProgress``, ``ModelRunner.run_prefill_chunk`` and the chunk
+phase programs in ``core.phase_engine``.
+
 Faithful mode (``mode="pdswap"``) and the static baseline, and the
 contiguous vs paged cache layouts, keep their PR-1 semantics — see
 ``repro.serving.engine`` for the original mode/layout notes.  Sampling is
@@ -54,7 +68,7 @@ from repro.core.kv_cache import KVSlotManager, insert_prefill_kv
 from repro.core.swap import SwapAggregates, SwapController, SwapTiming
 from repro.models import get_model
 from repro.serving.outputs import OutputProcessor, RequestOutput
-from repro.serving.paging import PagedKVCache, PoolExhausted, cdiv
+from repro.serving.paging import PagedKVCache, PoolExhausted, PrefixMatch, cdiv
 from repro.serving.policy import DrainPolicy, SchedulerView, SwapPolicy, make_policy
 from repro.serving.sampling import SamplingParams
 
@@ -85,12 +99,40 @@ class Request:
 
 
 @dataclasses.dataclass
+class PrefillProgress:
+    """Host-side state of one partially-prefilled request (chunked prefill).
+
+    Chunk boundaries (``sizes``) are a pure function of (prompt length,
+    chunk size) — a preemption-restart re-prefills through the exact same
+    chunk programs, which is what keeps replay bit-identical under
+    chunking.  Paged prompts allocate ALL their pages at admission
+    (``match``); each chunk then writes only its own page span.
+    """
+
+    req: Request
+    slot: int
+    resuming: bool  # restart with recorded tokens: replay them after prefill
+    restarted: bool  # ANY preemption restart (even mid-prefill, no tokens yet):
+    # its re-prefill is recompute overhead (t_replay), never offered load —
+    # prefill_tokens / swaps / prefix counters are charged once per request
+    sizes: List[int]  # real (unpadded) chunk sizes, in order
+    ci: int = 0  # next chunk index
+    pos: int = 0  # tokens already prefilled (real, unpadded)
+    match: Optional[PrefixMatch] = None
+
+    @property
+    def remaining_chunks(self) -> int:
+        return len(self.sizes) - self.ci
+
+
+@dataclasses.dataclass
 class EngineStats:
     prefill_tokens: int = 0
     decode_tokens: int = 0
     decode_rounds: int = 0
     swaps: int = 0
     prefill_bursts: int = 0  # prefill phases entered (fabric flips, not swaps)
+    prefill_chunks: int = 0  # chunked-prefill quanta executed (0 = monolithic)
     swap_timings: Deque[SwapTiming] = dataclasses.field(
         default_factory=lambda: deque(maxlen=SWAP_TIMING_WINDOW)
     )
@@ -136,6 +178,7 @@ class ModelRunner:
         kv_dtype: str = "fp",  # "fp" | "int8" | "int4" — quantized KV cache
         mesh=None,
         overlap: bool = True,
+        prefill_chunk: Optional[int] = None,  # tokens per prefill quantum (None = monolithic)
     ):
         from repro.quant.kv_quant import assert_kv_dtype, quantize_kv_tree
 
@@ -143,6 +186,15 @@ class ModelRunner:
         assert mode in ("pdswap", "static"), mode
         assert cache_layout in ("contiguous", "paged"), cache_layout
         assert_kv_dtype(kv_dtype)
+        if prefill_chunk is not None:
+            if prefill_chunk < 1:
+                raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+            if cache_layout == "paged" and prefill_chunk % block_size:
+                raise ValueError(
+                    f"prefill_chunk ({prefill_chunk}) must be a multiple of "
+                    f"block_size ({block_size}) so chunk boundaries align with "
+                    "page boundaries (each chunk writes whole pages)")
+        self.prefill_chunk = prefill_chunk
         self.cfg = cfg
         self.params = params
         self.api = get_model(cfg)
@@ -163,6 +215,7 @@ class ModelRunner:
         )
         self._pa = jax.eval_shape(lambda: params)
         self._bucket_progs: Dict[int, dict] = {}  # bucket len -> phase programs
+        self._chunk_progs: Dict[tuple, object] = {}  # (padded len, prefix width) -> program
 
         if cache_layout == "paged":
             if num_blocks is None:
@@ -195,6 +248,21 @@ class ModelRunner:
             self.cache = T.init_cache(cfg, n_slots, max_len, kv_dtype=kv_dtype)
         self.last_tokens = jnp.zeros((n_slots,), jnp.int32)
 
+        # Chunked prefill keeps an fp mirror of the in-flight prompt's KV
+        # (prefill layout, bounded at the cache capacity) so every chunk
+        # attends the exact values monolithic prefill would — see
+        # transformer._prefill_chunk_body.  One buffer suffices: the
+        # engine runs at most one chunked prefill at a time.
+        self.chunk_prefix = None
+        if prefill_chunk is not None:
+            from repro.layers.attention import KVCache as _KVCache
+
+            cap = (cdiv(max_len, block_size) * block_size
+                   if cache_layout == "paged" else max_len)
+            shape = (cfg.num_layers, 1, cfg.num_kv_heads, cap, cfg.head_dim)
+            self.chunk_prefix = _KVCache(jnp.zeros(shape, jnp.float32),
+                                         jnp.zeros(shape, jnp.float32))
+
         # Per-slot sampling state, refreshed on slot assignment.  The fold_in
         # step index is recomputed from each request's out_tokens at sample
         # time, so there is no mutable PRNG state to checkpoint or restore.
@@ -221,11 +289,16 @@ class ModelRunner:
             b = g
         # clamp to max_len: the paged bound stays a multiple of the quantum
         # (page-write reshape needs it, and never pads to max_len); the
-        # contiguous bound is exact (relayout pads bucket -> max_len)
+        # contiguous bound clamps to the largest quantum-aligned length
+        # <= max_len so bucket shapes stay consistent when max_len is not a
+        # multiple of the quantum — only a prompt too long for that aligned
+        # cap falls back to the single exact max_len shape (relayout pads
+        # bucket -> max_len, so the bound may never exceed max_len)
         if self.cache_layout == "paged":
             b = min(b, cdiv(self.max_len, q) * q)
         else:
-            b = min(b, self.max_len)
+            cap = self.max_len - self.max_len % q
+            b = min(b, cap) if n <= cap else self.max_len
         return max(b, q)
 
     def progs(self, bucket: int) -> dict:
@@ -243,6 +316,106 @@ class ModelRunner:
             p["relayout"] = self.engine.relayout_program(1, bucket, self.max_len)
         self._bucket_progs[bucket] = p
         return p
+
+    # ------------------------------------------------------ chunked prefill --
+
+    def chunk_sizes(self, n: int) -> List[int]:
+        """Real (unpadded) chunk sizes for an n-token prompt — a pure
+        function of (n, prefill_chunk), so a preemption-restart re-prefills
+        through the exact same chunk boundaries and compiled programs
+        (replay bit-identity under chunking)."""
+        c = self.prefill_chunk
+        sizes = [c] * (n // c)
+        if n % c:
+            sizes.append(n % c)
+        return sizes
+
+    def chunk_bucket(self, size: int, start: int) -> int:
+        """Compile bucket for one chunk: every full chunk shares the single
+        chunk-shaped compilation; the tail rounds up to the layout quantum
+        (ONE tail bucket per prompt), replacing the power-of-two bucket
+        ladder.  The contiguous tail additionally clamps to ``max_len -
+        start`` so the in-place install window never overflows the cache
+        (dynamic_update_slice would silently shift an overflowing write)."""
+        c = self.prefill_chunk
+        if size == c:
+            return c
+        if self.cache_layout == "paged":
+            return cdiv(size, self.block_size) * self.block_size
+        q = max(1, min(self.prompt_len, c))
+        return max(min(cdiv(size, q) * q, self.max_len - start), size)
+
+    def prefix_width(self, start: int) -> int:
+        """Compile-time width of the prefix the chunk's attention sees:
+        0 for the first chunk, else the chunk-based geometric ladder bucket
+        >= start, clamped to the mirror capacity — O(log(cap / chunk))
+        distinct widths, and a short prompt's chunks never attend over the
+        mirror's full max_len capacity."""
+        cap = jax.tree.leaves(self.chunk_prefix)[0].shape[3]
+        if start == 0:
+            return 0
+        g = self.prefill_chunk
+        while g < start:
+            g *= 2
+        return min(g, cap)
+
+    def chunk_prog(self, padded: int, prefix_width: int):
+        """The chunk-shaped phase program for one (padded chunk length,
+        prefix width) pair."""
+        key = (padded, prefix_width)
+        if key in self._chunk_progs:
+            return self._chunk_progs[key]
+        if self.cache_layout == "paged":
+            prog = self.engine.paged_prefill_chunk_program(
+                padded, self.paged.max_pages, self.block_size, prefix_width)
+        else:
+            prog = self.engine.prefill_chunk_program(
+                padded, self.slots.n_slots, self.max_len, prefix_width)
+        self._chunk_progs[key] = prog
+        return prog
+
+    def run_prefill_chunk(
+        self,
+        req: Request,
+        slot: int,
+        start: int,
+        size: int,
+        match: Optional[PrefixMatch],
+        restarted: bool,
+        stats: EngineStats,
+    ):
+        """Run ONE chunk ``[start, start + size)`` of a request's prefill
+        and install its KV (quantize-on-write) — the bounded prefill
+        quantum.  Returns the chunk's last-token logits (meaningful only
+        for the final chunk).  The install is fused into the chunk program,
+        so there is no separate relayout swap to overlap: the fabric flips
+        back to decode right after each chunk."""
+        padded = self.chunk_bucket(size, start)
+        prog = self.chunk_prog(padded, self.prefix_width(start))
+        buf = np.zeros((padded,), np.int32)
+        buf[:size] = np.asarray(req.prompt[start : start + size], np.int32)
+        tokens = jnp.asarray(buf[None])
+        t0 = time.perf_counter()
+        if self.cache_layout == "paged":
+            bs = self.block_size
+            # start is page-aligned (chunk % bs == 0); prefix-cache hits and
+            # padding pages arrive as the OOB skip sentinel and are dropped
+            ids = self.paged.page_ids_for_write(
+                match, padded // bs, first_page=start // bs)
+            logits, self.paged.kv, self.chunk_prefix = prog.fn(
+                self.params, tokens, self.paged.kv, self.chunk_prefix,
+                ids, start, size - 1)
+        else:
+            logits, self.cache, self.chunk_prefix = prog.fn(
+                self.params, tokens, self.cache, self.chunk_prefix, slot,
+                start, size - 1)
+        jax.block_until_ready(logits)
+        if restarted:  # restart re-prefill is recompute overhead, not load
+            stats.t_replay += time.perf_counter() - t0
+        else:
+            stats.t_prefill += time.perf_counter() - t0
+        stats.prefill_chunks += 1
+        return logits
 
     # ------------------------------------------------------------- prefill --
 
@@ -501,12 +674,17 @@ class Scheduler:
     def requeue_head(self, request: Request) -> None:
         self.queue.appendleft(request)
 
-    def enter_prefill_phase(self, stats: EngineStats) -> bool:
+    def enter_prefill_phase(self, stats: EngineStats, *, pending_chunks: int = 0) -> bool:
         """The swap decision: flip into the prefill phase this step?  Called
-        only when work is queued and a slot is free.  An empty active set
-        bypasses the policy — with nothing decoding the flip has no
-        opportunity cost, and this guarantees progress under any policy."""
-        active = len(self.runner.slots.active_slots())
+        when work is queued and a slot is free, or (chunked prefill) when a
+        partially-prefilled request has chunks pending — ``pending_chunks``
+        carries that count into the view so a policy can reason about
+        in-flight prefill work.  An empty DECODING set bypasses the policy —
+        with nothing decoding the flip has no opportunity cost, and this
+        guarantees progress under any policy.  (``active_slots`` counts
+        decoding slots only; a mid-prefill slot is occupied but produces no
+        tokens the flip could stall.)"""
+        active = len(self.inflight)
         if active == 0:
             return True
         view = SchedulerView(
@@ -515,6 +693,7 @@ class Scheduler:
             active_slots=active,
             swap_cost=stats.swap_agg.mean_cost,
             decode_round_cost=stats.decode_round_cost(),
+            pending_chunks=pending_chunks,
         )
         return self.policy.should_prefill(view)
 
@@ -556,13 +735,18 @@ class EngineCore:
         mesh=None,
         overlap: bool = True,
         swap_policy: Union[SwapPolicy, str, None] = None,
+        prefill_chunk: Optional[int] = None,  # tokens per prefill quantum (None = monolithic)
     ):
         self.cfg = cfg
         self.runner = ModelRunner(
             cfg, params, n_slots=n_slots, max_len=max_len, prompt_len=prompt_len,
             mode=mode, cache_layout=cache_layout, block_size=block_size,
             num_blocks=num_blocks, kv_dtype=kv_dtype, mesh=mesh, overlap=overlap,
+            prefill_chunk=prefill_chunk,
         )
+        # slot -> partially-prefilled request state (chunked prefill only);
+        # insertion order is admission order, so continuation is FIFO
+        self._prefilling: Dict[int, PrefillProgress] = {}
         if swap_policy is None:
             swap_policy = DrainPolicy()
         elif isinstance(swap_policy, str):
@@ -587,6 +771,10 @@ class EngineCore:
     def kv_dtype(self) -> str:
         return self.runner.kv_dtype
 
+    @property
+    def prefill_chunk(self) -> Optional[int]:
+        return self.runner.prefill_chunk
+
     def submit(self, request: Request) -> None:
         self.scheduler.submit(request)
 
@@ -596,13 +784,25 @@ class EngineCore:
     # --------------------------------------------------------------- step --
 
     def step(self) -> List[RequestOutput]:
-        """Advance one scheduling quantum: a policy-gated prefill burst
-        (admitting queued requests into free slots, one swap each), then one
-        decode round over the active slots.  Returns every streaming output
-        the quantum produced."""
+        """Advance one scheduling quantum.
+
+        Monolithic prefill (``prefill_chunk=None``): a policy-gated prefill
+        burst (admitting queued requests into free slots, one swap each),
+        then one decode round over the active slots — the PR-2 behavior,
+        token-for-token.
+
+        Chunked prefill: at most ONE chunk of pending prefill (continue the
+        partially-prefilled request, or admit the queue head and run its
+        first chunk), then one decode round over the DECODING slots — so a
+        long prompt's prefill is spread over many quanta and active streams
+        get a token between every pair of chunks instead of stalling for
+        the whole burst.  Returns every streaming output the quantum
+        produced."""
         outs: List[RequestOutput] = []
         sched, runner = self.scheduler, self.runner
-        if sched.queue and runner.slots.free_slots() and sched.enter_prefill_phase(self.stats):
+        if runner.prefill_chunk is not None:
+            outs.extend(self._chunked_prefill_quantum())
+        elif sched.queue and runner.slots.free_slots() and sched.enter_prefill_phase(self.stats):
             admitted = 0
             while sched.queue and runner.slots.free_slots():
                 ok, out = self._admit_one(sched.queue.popleft())
@@ -610,21 +810,145 @@ class EngineCore:
                     outs.append(out)
                 if not ok:
                     if not runner.slots.active_slots():
-                        head = sched.queue[0]
-                        raise RuntimeError(
-                            f"{head.request_id} can never be admitted: needs more "
-                            f"pages than the pool holds ({runner.paged.num_blocks} "
-                            f"blocks x {runner.block_size} tokens)"
-                        )
+                        self._unblock_admission_or_raise()
                     break  # decode to drain capacity, then retry admission
                 admitted += 1
             if admitted:
                 self.stats.prefill_bursts += 1
-        if runner.slots.active_slots():
+        if sched.inflight:
             outs.extend(self._decode_round())
         if not self.has_unfinished():
             sched.policy.reset()
         return outs
+
+    def _unblock_admission_or_raise(self) -> None:
+        """The queue head failed admission with ZERO active slots — nothing
+        is decoding, so no capacity will drain on its own.  Before
+        declaring livelock, shed every refcount-0 prefix-cache page and
+        let the next step retry: the old code raised unconditionally, an
+        assertion of impossibility it never verified.  (``alloc()``
+        already consumes the evictable LRU page by page, so today the
+        retry mostly re-proves the failure — the eviction makes the raise
+        correct by construction for ANY admission path, including future
+        ones that reserve capacity via ``num_free`` checks rather than
+        ``alloc()``.)"""
+        runner = self.runner
+        if runner.cache_layout == "paged" and runner.paged.pool.evict_all_cached():
+            return
+        head = self.scheduler.queue[0]
+        raise RuntimeError(
+            f"{head.request_id} can never be admitted: needs more "
+            f"pages than the pool holds ({runner.paged.num_blocks} "
+            f"blocks x {runner.block_size} tokens)"
+        )
+
+    # ----------------------------------------------------- chunked prefill --
+
+    def _pending_chunks(self) -> int:
+        return sum(p.remaining_chunks for p in self._prefilling.values())
+
+    def _chunked_prefill_quantum(self) -> List[RequestOutput]:
+        """At most one chunk of pending prefill this quantum: continue the
+        oldest partially-prefilled request, or — none pending — admit the
+        queue head and run its first chunk.  Both are policy-gated (the
+        view carries the pending-chunk count), and each chunk executed is
+        one fabric flip (``prefill_bursts``)."""
+        sched, runner = self.scheduler, self.runner
+        if self._prefilling:
+            if not sched.enter_prefill_phase(
+                    self.stats, pending_chunks=self._pending_chunks()):
+                return []
+            slot = next(iter(self._prefilling))
+            return self._advance_chunk(self._prefilling[slot])
+        if not (sched.queue and runner.slots.free_slots()):
+            return []
+        if not sched.enter_prefill_phase(self.stats):
+            return []
+        ok, outs = self._admit_one_chunked(sched.queue.popleft())
+        if not ok and not sched.inflight:
+            self._unblock_admission_or_raise()
+        return outs
+
+    def _admit_one_chunked(self, req: Request):
+        """Chunked admission: reserve the slot (and, paged, ALL prompt
+        pages — chunk writes then land in a stable page plan), then run the
+        first chunk.  Returns ``(ok, outputs)`` with the same blocked-
+        admission contract as ``_admit_one``."""
+        runner, stats = self.runner, self.stats
+        resuming = req.preempted and bool(req.out_tokens)
+        restarted = req.preempted  # mid-prefill evictions restart with no tokens
+
+        if runner.cache_layout == "paged" and resuming and not runner.restart_headroom_ok(req):
+            self._block_admission(req)
+            return False, []
+
+        slot = runner.slots.assign(req.request_id, len(req.prompt), req.max_new)
+        runner.set_slot_sampling(slot, req)
+        match = None
+        if runner.cache_layout == "paged":
+            try:
+                match = runner.paged.allocate_prompt(slot, np.asarray(req.prompt, np.int32))
+            except PoolExhausted:
+                self._block_admission(req, slot)
+                return False, []
+            if not restarted:
+                n_full = len(req.prompt) // runner.block_size
+                stats.prefix_hits += match.cached_pages
+                stats.prefix_misses += n_full - match.cached_pages
+                stats.prefix_hit_tokens += match.cached_pages * runner.block_size
+        if not restarted:
+            # Offered load is charged once, at the FIRST admission — a
+            # restart (with or without recorded tokens) re-prefills as
+            # recompute overhead (t_replay) and must not re-count.  One
+            # logical swap per request, as in the monolithic path; the
+            # install is fused into the chunk programs, so there is no
+            # separate relayout latency to overlap/record (no SwapTiming).
+            stats.prefill_tokens += len(req.prompt)
+            stats.swaps += 1
+
+        # the shared fp prefix mirror (runner.chunk_prefix) supports exactly
+        # one in-flight chunked prefill — _chunked_prefill_quantum only
+        # admits when none is pending, and this guards the invariant
+        assert not self._prefilling, "one chunked prefill in flight at a time"
+        prog = PrefillProgress(req, slot, resuming, restarted,
+                               sizes=runner.chunk_sizes(len(req.prompt)), match=match)
+        self._prefilling[slot] = prog
+        return True, self._advance_chunk(prog)
+
+    def _advance_chunk(self, prog: PrefillProgress) -> List[RequestOutput]:
+        """Run one chunk; on the final chunk, finish the prefill (first
+        token / replay) and hand the slot to the decode set."""
+        runner, stats = self.runner, self.stats
+        size = prog.sizes[prog.ci]
+        logits = runner.run_prefill_chunk(
+            prog.req, prog.slot, prog.pos, size, prog.match, prog.restarted, stats)
+        prog.ci += 1
+        prog.pos += size
+        stats.prefill_bursts += 1
+        if prog.ci < len(prog.sizes):
+            return []
+        del self._prefilling[prog.slot]
+        return self._finish_chunked_prefill(prog, logits)
+
+    def _finish_chunked_prefill(self, prog: PrefillProgress, logits) -> List[RequestOutput]:
+        """The post-prefill half of ``_admit_one`` for the chunked path:
+        publish prefix pages, then the shared ``_finish_prefill`` handoff
+        (restart replay or first-token sampling -> decode set)."""
+        if self.runner.cache_layout == "paged":
+            self.runner.paged.register_prompt_pages(prog.match)
+        _, out = self._finish_prefill(prog.req, prog.slot, logits, prog.resuming)
+        return [out] if out is not None else []
+
+    def _preempt_prefilling(self, slot: int) -> None:
+        """Evict a partially-prefilled request (decode growth exhausted the
+        pool and every decoding request is already gone): requeue it for a
+        deterministic chunked restart — same chunk boundaries, so the
+        replayed trajectory stays bit-identical."""
+        prog = self._prefilling.pop(slot)
+        prog.req.preempted = True
+        self.runner.release(slot)
+        self.stats.preemptions += 1
+        self.scheduler.queue.appendleft(prog.req)
 
     def run(self, max_rounds: int = 10_000) -> EngineStats:
         """Compatibility loop: the PR-1 ``ServingEngine.run()`` drain-then-
@@ -653,11 +977,26 @@ class EngineCore:
         """
         if params is None:
             params = SamplingParams()
+        prompt = np.asarray(prompt, np.int32)
         if max_new is None:
-            max_new = 16  # submit() applies the params.max_tokens override
+            if params.max_tokens is not None:
+                max_new = params.max_tokens  # submit() applies the override
+            else:
+                # default to the request's full slot headroom — the old
+                # silent cap of 16 truncated any longer generation the
+                # caller never asked to limit.  The paged layout further
+                # clamps to what the pool can hold over the request's
+                # lifetime (submit() rejects trajectories that can never
+                # fit; an unbudgeted generate() should degrade, not raise)
+                max_new = self.runner.max_len - len(prompt)
+                if self.runner.cache_layout == "paged":
+                    pool_tokens = (self.runner.paged.num_blocks
+                                   * self.runner.block_size)
+                    max_new = min(max_new, pool_tokens - len(prompt) + 1)
+                max_new = max(1, max_new)
         self._gen_seq += 1
         rid = request_id or f"gen-{self._gen_seq}"
-        req = Request(rid, np.asarray(prompt, np.int32), max_new=max_new,
+        req = Request(rid, prompt, max_new=max_new,
                       priority=priority, params=params)
         self.submit(req)
         for _ in range(max_steps):
@@ -675,12 +1014,11 @@ class EngineCore:
         Returns ``(ok, output)``: ``ok=False`` means admission is blocked
         (paged pool exhausted) — the request went back to the queue head and
         the engine should decode to drain capacity first."""
-        runner, stats, sched = self.runner, self.stats, self.scheduler
+        runner, stats = self.runner, self.stats
         resuming = req.preempted and bool(req.out_tokens)
 
         if runner.cache_layout == "paged" and resuming and not runner.restart_headroom_ok(req):
-            stats.admission_blocks += 1
-            sched.requeue_head(req)
+            self._block_admission(req)
             return False, None
 
         slot = runner.slots.assign(req.request_id, len(req.prompt), req.max_new)
@@ -688,11 +1026,25 @@ class EngineCore:
         try:
             logits = runner.prefill(req, slot, resuming, stats)
         except PoolExhausted:
-            runner.slots.release(slot)
-            stats.admission_blocks += 1
-            sched.requeue_head(req)
+            self._block_admission(req, slot)
             return False, None
 
+        return self._finish_prefill(req, slot, logits, resuming)
+
+    def _block_admission(self, req: Request, slot: Optional[int] = None) -> None:
+        """One admission attempt is blocked on pool pressure: roll the slot
+        back (if one was taken), count the block, requeue at the head."""
+        if slot is not None:
+            self.runner.release(slot)
+        self.stats.admission_blocks += 1
+        self.scheduler.requeue_head(req)
+
+    def _finish_prefill(self, req: Request, slot: int, logits, resuming: bool):
+        """Post-prefill handoff shared by the monolithic and chunked paths.
+        Returns ``(ok, output)``; ``ok=False`` means the restart replay lost
+        a pool race — the request went back to the queue head, preempted.
+        """
+        runner, stats, sched = self.runner, self.stats, self.scheduler
         out = None
         if resuming:
             # Re-feed the already-generated tokens through the decode program
@@ -700,9 +1052,7 @@ class EngineCore:
             # its pre-eviction state, so the continuation is too.
             if not runner.replay(slot, req, stats):
                 # pool raced away mid-replay: back off, stay preempted
-                runner.release(slot)
-                stats.admission_blocks += 1
-                sched.requeue_head(req)
+                self._block_admission(req, slot)
                 return False, None
             req.preempted = False
             if req.first_token_t == 0.0:
@@ -716,6 +1066,7 @@ class EngineCore:
             runner.slots.slots[slot].length = len(req.prompt) + len(req.out_tokens) - 1
             runner.slots.slots[slot].generated = len(req.out_tokens)
         else:
+            req.preempted = False  # a mid-prefill eviction restarts token-free
             tok = runner.sample_first(logits, req)
             out = self.out_proc.process_token(req, tok)
             # the prefill already produced the first new token
@@ -745,6 +1096,15 @@ class EngineCore:
             except PoolExhausted:
                 victim = self.scheduler.pick_victim()
                 if victim is None:
+                    if self._prefilling:
+                        # nothing decoding left to evict, but a partially-
+                        # prefilled request still holds pages — preempt the
+                        # lowest-priority one (ties youngest-first)
+                        pslot = min(self._prefilling, key=lambda s: (
+                            self._prefilling[s].req.priority,
+                            -self._prefilling[s].req.enqueue_t))
+                        self._preempt_prefilling(pslot)
+                        continue
                     raise RuntimeError(
                         "paged KV pool exhausted with nothing left to preempt; "
                         f"raise num_blocks (have {self.runner.paged.num_blocks})"
@@ -762,6 +1122,8 @@ class EngineCore:
             s = self.runner.slots.slots[slot]
             if s.request_id is None:  # preempted earlier in this loop
                 continue
+            if slot in self._prefilling:  # mid-prefill: pages preallocated,
+                continue  # and the slot sits out the decode round
             self._grow_slot_page(slot, s.length)
 
     # --------------------------------------------------------------- decode --
@@ -770,10 +1132,24 @@ class EngineCore:
         runner, stats, sched = self.runner, self.stats, self.scheduler
         if runner.cache_layout == "paged":
             self._ensure_append_pages()
-        active = runner.slots.active_slots()
+        active = sorted(sched.inflight)
         if not active:
             return []
-        lengths = runner.slots.lengths_array()
+        if self._prefilling:
+            # Mid-prefill slots sit the round out, but the batched decode
+            # program still computes (and scatters) a row for them — park
+            # that garbage write where it can never be read.  Paged: length
+            # 0 routes the scatter to an out-of-bounds page id (dropped).
+            # Contiguous: length >= max_len clamps the write to the cache's
+            # last row, which live data never occupies (the last generated
+            # token's KV lands at position n + max_new - 2 <= max_len - 2).
+            lengths_np = np.asarray([s.length for s in runner.slots.slots], np.int32)
+            park = 0 if runner.cache_layout == "paged" else runner.max_len
+            for slot in self._prefilling:
+                lengths_np[slot] = park
+            lengths = jnp.asarray(lengths_np)
+        else:
+            lengths = runner.slots.lengths_array()
         t0 = time.perf_counter()
         logits = runner.decode_logits(lengths)
         next_tokens = runner.sample_batch(logits, sched.inflight)

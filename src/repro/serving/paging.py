@@ -140,6 +140,24 @@ class BlockPool:
                 self.free_list.append(pid)
         return m.refcount
 
+    def evict_all_cached(self) -> int:
+        """Reclaim EVERY evictable (refcount-0, prefix-registered) page into
+        the free list; returns how many were reclaimed.  The admission
+        livelock breaker's last resort: pages held purely for future
+        prefix hits are pressure the engine may always shed.  (``alloc()``
+        already falls back to the LRU page by page, so this is a
+        defensive guarantee — after it runs, a still-failing admission
+        provably needs more pages than the pool holds, whatever path the
+        admission took.)"""
+        n = 0
+        while self.evictable:
+            pid, _ = self.evictable.popitem(last=False)  # LRU first
+            self._unregister(pid)
+            self.free_list.append(pid)
+            self.stats.cache_evictions += 1
+            n += 1
+        return n
+
     def copy_on_write(self, pid: int) -> Tuple[int, bool]:
         """Prepare ``pid`` for writing.  A uniquely-held page is returned
         as-is; a shared one is forked: the caller gets a fresh page (and must
@@ -374,18 +392,25 @@ class PagedKVCache:
             self._tables_dirty = False
         return self._tables_dev
 
-    def page_ids_for_write(self, match: PrefixMatch, padded_pages: int) -> jnp.ndarray:
-        """(padded_pages,) int32 destination pages for the prefill page-write.
+    def page_ids_for_write(
+        self, match: PrefixMatch, padded_pages: int, first_page: int = 0
+    ) -> jnp.ndarray:
+        """(padded_pages,) int32 destination pages for the prefill page-write
+        covering prompt pages ``[first_page, first_page + padded_pages)`` —
+        the whole prompt for the monolithic swap (``first_page=0``), one
+        chunk's span for chunked prefill.
 
         Cache-hit pages already hold identical content and may be shared with
         live requests — they are marked out-of-bounds so the scatter drops
-        them (the "reuse" in copy-on-write free/reuse).  Trailing entries
-        beyond the prompt's pages are dropped too (prompt padded up to the
-        compile bucket).  The skip sentinel is ``num_blocks`` (not -1, which
-        jnp scatter would wrap to the last pool page).
+        them (the "reuse" in copy-on-write free/reuse).  Entries beyond the
+        prompt's pages are dropped too (prompt padded up to the compile
+        bucket).  The skip sentinel is ``num_blocks`` (not -1, which jnp
+        scatter would wrap to the last pool page).
         """
         skip = self.num_blocks
         ids = np.full((padded_pages,), skip, np.int32)
-        for i, pid in enumerate(match.pages):
-            ids[i] = skip if i < match.cached_pages else pid
+        for i in range(padded_pages):
+            gi = first_page + i
+            if match.cached_pages <= gi < len(match.pages):
+                ids[i] = match.pages[gi]
         return jnp.asarray(ids)

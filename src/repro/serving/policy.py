@@ -39,9 +39,15 @@ class SchedulerView:
 
     queue_depth: int
     free_slots: int
-    active_slots: int
+    active_slots: int  # slots currently DECODING (mid-prefill slots excluded)
     swap_cost: float  # mean exposed swap latency, seconds (0 until measured)
     decode_round_cost: float  # mean decode-round latency, seconds
+    # Chunked prefill: chunks still owed to partially-prefilled requests
+    # (0 under monolithic prefill, and when no prefill is in flight).  A
+    # partially-prefilled request already paid admission and holds its slot
+    # (and, paged, its pages), so policies should weigh finishing it against
+    # deferring — see SwapCostAwarePolicy.
+    pending_chunks: int = 0
 
 
 class SwapPolicy:
@@ -104,6 +110,14 @@ class SwapCostAwarePolicy(SwapPolicy):
         return max(1, math.ceil(self.cost_ratio * cost / view.decode_round_cost))
 
     def should_prefill(self, view: SchedulerView) -> bool:
+        if view.pending_chunks > 0:
+            # A partially-prefilled request holds a slot (and its pages)
+            # while producing nothing; each remaining chunk is a bounded
+            # quantum whose cost the per-step decode round already
+            # amortizes.  Deferring it only stretches that occupancy, so
+            # in-flight chunked prefill always continues.
+            self._deferred = 0
+            return True
         if view.active_slots == 0 or self._deferred >= self.max_defer_rounds:
             self._deferred = 0
             return True

@@ -1,0 +1,286 @@
+"""Chunked prefill with decode interleaving + the satellite serving fixes.
+
+The tentpole property is CHUNK-SIZE INVARIANCE: greedy token streams must be
+bit-identical between chunked and whole-prompt prefill across every cache
+layout x kv_dtype combination, and across preemption-replay restarts after
+chunked admission (chunk boundaries are a pure function of prompt length and
+chunk size, and per-token quantize-on-write installs the exact bytes the
+monolithic swap would).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.models import get_model
+from repro.serving import (
+    DrainPolicy,
+    EngineCore,
+    Request,
+    SamplingParams,
+    SchedulerView,
+    SwapCostAwarePolicy,
+)
+from repro.serving.core import ModelRunner
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = reduced_config("bitnet-730m", num_layers=3, d_model=128, vocab_size=512,
+                         num_heads=4, num_kv_heads=2)
+    api = get_model(cfg)
+    params = api.init(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    return cfg, api, params
+
+
+def _prompts(cfg, lengths=(7, 12, 20, 33), seed=11):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, n).astype(np.int32) for n in lengths]
+
+
+def _serve(cfg, params, prompts, *, chunk, layout, kv_dtype="fp", max_new=6, **kw):
+    eng = EngineCore(cfg, params, n_slots=3, max_len=64, prompt_len=12,
+                     cache_layout=layout, block_size=8, kv_dtype=kv_dtype,
+                     prefill_chunk=chunk, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(f"r{i}", p.copy(), max_new=max_new))
+    eng.run()
+    assert len(eng.finished) == len(prompts)
+    return {k: v.out_tokens for k, v in eng.finished.items()}, eng.stats
+
+
+# ------------------------------------------------------ chunk-size invariance --
+
+
+_MONO_CACHE = {}  # (layout, kv_dtype) -> monolithic reference tokens
+
+
+def _mono_ref(cfg, params, layout, kv_dtype):
+    key = (layout, kv_dtype)
+    if key not in _MONO_CACHE:
+        _MONO_CACHE[key], _ = _serve(cfg, params, _prompts(cfg), chunk=None,
+                                     layout=layout, kv_dtype=kv_dtype)
+    return _MONO_CACHE[key]
+
+
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+@pytest.mark.parametrize("kv_dtype", ["fp", "int8", "int4"])
+def test_chunked_equals_monolithic_greedy(tiny, layout, kv_dtype):
+    """Bit-identical greedy streams, chunked vs whole-prompt prefill, for
+    every layout x kv_dtype — prompts span sub-chunk, exact-multiple and
+    multi-chunk-plus-tail lengths."""
+    cfg, api, params = tiny
+    ref = _mono_ref(cfg, params, layout, kv_dtype)
+    got, stats = _serve(cfg, params, _prompts(cfg), chunk=16,
+                        layout=layout, kv_dtype=kv_dtype)
+    assert got == ref
+    # prompts (7, 12, 20, 33) at chunk 16 -> 1 + 1 + 2 + 3 prefill quanta
+    assert stats.prefill_chunks == 7
+    assert stats.swaps == 4  # still one logical swap per request
+    assert stats.prefill_tokens == 7 + 12 + 20 + 33  # offered load, once each
+
+
+def test_chunked_unaligned_chunk_contiguous(tiny):
+    """The contiguous layout accepts any chunk size (no page alignment):
+    a prime chunk length must still reproduce the monolithic stream."""
+    cfg, api, params = tiny
+    ref = _mono_ref(cfg, params, "contiguous", "fp")
+    got, _ = _serve(cfg, params, _prompts(cfg), chunk=7, layout="contiguous")
+    assert got == ref
+
+
+def test_chunked_validation(tiny):
+    cfg, api, params = tiny
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        EngineCore(cfg, params, cache_layout="paged", block_size=8, prefill_chunk=12)
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        EngineCore(cfg, params, prefill_chunk=0)
+
+
+def test_chunked_preemption_replay_restarts_mid_generation(tiny):
+    """A request preempted mid-generation after CHUNKED admission must
+    restart deterministically: re-prefill through the same chunk programs,
+    teacher-forced replay, continuation bit-identical to an unpreempted run
+    — under temperature/top-k/top-p sampling."""
+    cfg, api, params = tiny
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab_size, 14).astype(np.int32) for _ in range(4)]
+    sps = [SamplingParams(temperature=0.8, top_k=64, top_p=0.95, seed=100 + i)
+           for i in range(4)]
+
+    def serve(layout, **kw):
+        eng = EngineCore(cfg, params, n_slots=3, max_len=64, prompt_len=12,
+                         mode="static", cache_layout=layout, block_size=8,
+                         prefill_chunk=8, **kw)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(f"r{i}", p.copy(), max_new=10, priority=i,
+                               params=sps[i]))
+        stats = eng.run()
+        return stats, {k: v.out_tokens for k, v in eng.finished.items()}
+
+    _, ref = serve("contiguous")  # ample capacity: never preempts
+    stats, got = serve("paged", num_blocks=7)  # starved pool: must evict
+    assert stats.preemptions > 0 and stats.replayed_tokens > 0
+    assert got == ref
+
+
+def test_chunked_decode_interleaves_between_chunks(tiny):
+    """THE serving property this PR exists for: while a long prompt
+    prefills chunk by chunk, active streams receive decode rounds between
+    chunks — monolithic prefill executes zero rounds in that window."""
+    cfg, api, params = tiny
+    rng = np.random.default_rng(7)
+    short = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    long = rng.integers(0, cfg.vocab_size, 96).astype(np.int32)
+
+    def window_rounds(chunk):
+        eng = EngineCore(cfg, params, n_slots=2, max_len=128, prompt_len=12,
+                         cache_layout="paged", block_size=8, prefill_chunk=chunk)
+        eng.submit(Request("short", short.copy(), max_new=60))
+        while not eng.scheduler.inflight:  # short stream reaches decode
+            eng.step()
+        eng.submit(Request("long", long.copy(), max_new=4))
+        d0, first = eng.stats.decode_rounds, None
+        while eng.has_unfinished():
+            outs = eng.step()
+            if first is None and any(o.request_id == "long" for o in outs):
+                first = eng.stats.decode_rounds
+        assert set(eng.finished) == {"short", "long"}
+        return first - d0 - 1  # rounds strictly before the completing quantum
+
+    assert window_rounds(None) == 0  # monolithic starves decode
+    assert window_rounds(16) > 0  # chunked interleaves (96/16 - 1 boundaries)
+
+
+def test_chunked_policy_sees_pending_chunks(tiny):
+    """SwapCostAwarePolicy must never defer the continuation of a
+    partially-prefilled request (it holds a slot and pages while producing
+    nothing), while still deferring fresh admissions on shallow queues."""
+    view = dict(queue_depth=1, free_slots=1, active_slots=2,
+                swap_cost=0.04, decode_round_cost=0.01)
+    pol = SwapCostAwarePolicy(max_defer_rounds=100)
+    assert not pol.should_prefill(SchedulerView(**view))  # shallow queue: defer
+    assert pol.should_prefill(SchedulerView(**view, pending_chunks=3))
+    assert SchedulerView(**view).pending_chunks == 0  # monolithic default
+
+    # end to end: a chunked engine under the cost-aware policy still
+    # completes everything with drain-identical tokens
+    cfg, api, params = tiny
+    prompts = _prompts(cfg, lengths=(7, 20), seed=3)
+    drain, _ = _serve(cfg, params, prompts, chunk=16, layout="paged",
+                      swap_policy=DrainPolicy())
+    aware, _ = _serve(cfg, params, prompts, chunk=16, layout="paged",
+                      swap_policy=SwapCostAwarePolicy(min_queue=2, max_defer_rounds=4))
+    assert aware == drain
+
+
+# ------------------------------------------------------------- satellites --
+
+
+def test_generate_defaults_to_headroom_budget(tiny):
+    """generate() without max_new/max_tokens used to cap output at 16
+    tokens silently; it must default to the request's full slot headroom
+    (max_len - prompt_len)."""
+    cfg, api, params = tiny
+    eng = EngineCore(cfg, params, n_slots=1, max_len=48, prompt_len=12)
+    outs = list(eng.generate(np.arange(10, dtype=np.int32)))
+    req = eng.finished[outs[-1].request_id]
+    assert len(req.out_tokens) == 48 - 10  # the full headroom, not 16
+    assert req.finish_reason == "length"
+    # an explicit SamplingParams.max_tokens still wins
+    eng2 = EngineCore(cfg, params, n_slots=1, max_len=48, prompt_len=12)
+    outs = list(eng2.generate(np.arange(10, dtype=np.int32),
+                              SamplingParams(max_tokens=3)))
+    assert len(eng2.finished[outs[-1].request_id].out_tokens) == 3
+    # paged: the default budget additionally clamps to pool capacity — an
+    # unbudgeted generate() on a small pool degrades instead of raising
+    eng3 = EngineCore(cfg, params, n_slots=1, max_len=64, prompt_len=8,
+                      cache_layout="paged", block_size=8, num_blocks=4)
+    outs = list(eng3.generate(np.arange(10, dtype=np.int32)))
+    req = eng3.finished[outs[-1].request_id]
+    assert len(req.out_tokens) == 4 * 8 - 10 + 1  # pool tokens - prompt + 1
+    assert req.finish_reason == "length"
+
+
+def test_admission_after_prefix_cache_fills_pool(tiny):
+    """Satellite regression: fill the paged pool with refcount-0 prefix-
+    cache pages, drain every slot, then admit a request that needs most of
+    the pool — evictable pages must be reclaimed (LRU), never surfacing a
+    'can never be admitted' livelock error to a satisfiable request."""
+    cfg, api, params = tiny
+    eng = EngineCore(cfg, params, n_slots=2, max_len=64, prompt_len=8,
+                     mode="static", cache_layout="paged", block_size=8,
+                     num_blocks=8)
+    rng = np.random.default_rng(0)
+    for i in range(4):
+        eng.submit(Request(f"w{i}", rng.integers(0, cfg.vocab_size, 16).astype(np.int32),
+                           max_new=2))
+    eng.run()
+    pool = eng.runner.paged.pool
+    assert not eng.has_unfinished() and pool.num_live == 0
+    assert len(pool.evictable) > 0  # drained prompts left cached pages behind
+    eng.submit(Request("big", rng.integers(0, cfg.vocab_size, 48).astype(np.int32),
+                       max_new=4))
+    eng.run()
+    assert len(eng.finished["big"].out_tokens) == 4
+
+
+def test_admission_livelock_evicts_cached_pages_before_raising(tiny):
+    """The livelock branch itself: with evictable pages present it must
+    reclaim them and return (retry next step); only an unreclaimable pool
+    proves livelock and raises."""
+    cfg, api, params = tiny
+    eng = EngineCore(cfg, params, n_slots=2, max_len=64, prompt_len=8,
+                     mode="static", cache_layout="paged", block_size=8,
+                     num_blocks=8)
+    rng = np.random.default_rng(1)
+    for i in range(3):
+        eng.submit(Request(f"w{i}", rng.integers(0, cfg.vocab_size, 16).astype(np.int32),
+                           max_new=2))
+    eng.run()
+    pool = eng.runner.paged.pool
+    n_evictable = len(pool.evictable)
+    assert n_evictable > 0
+    eng.scheduler.queue.append(Request("head", np.arange(8, dtype=np.int32), max_new=2))
+    eng._unblock_admission_or_raise()  # reclaims, must NOT raise
+    assert len(pool.evictable) == 0
+    assert pool.num_free == pool.num_blocks
+    with pytest.raises(RuntimeError, match="can never be admitted"):
+        eng._unblock_admission_or_raise()  # nothing left to reclaim
+
+
+def test_block_pool_evict_all_cached(tiny):
+    from repro.serving.paging import BlockPool
+
+    pool = BlockPool(num_blocks=4, block_size=4)
+    pids = [pool.alloc() for _ in range(3)]
+    for i, pid in enumerate(pids):
+        pool.register(hash(("h", i)), pid, tokens=(i,) * 4)
+        pool.decref(pid)  # registered + refcount 0 -> evictable
+    assert len(pool.evictable) == 3
+    assert pool.evict_all_cached() == 3
+    assert len(pool.evictable) == 0 and len(pool.free_list) == 4
+    assert pool.lookup(hash(("h", 0)), (0,) * 4) is None  # unregistered
+
+
+def test_bucket_contiguous_quantum_alignment(tiny):
+    """Satellite regression: with max_len not a multiple of the contiguous
+    quantum, every bucket must be quantum-aligned — except the single exact
+    max_len shape reserved for prompts longer than the aligned cap."""
+    cfg, api, params = tiny
+    runner = ModelRunner(cfg, params, n_slots=1, max_len=50, prompt_len=12)
+    assert runner.max_len % runner.prompt_len != 0  # the regression setup
+    cap = 50 - 50 % 12  # 48
+    for n in range(1, 51):
+        b = runner.bucket(n)
+        assert n <= b <= runner.max_len, (n, b)
+        if n <= cap:
+            assert b % 12 == 0, f"bucket({n}) = {b} is not quantum-aligned"
+        else:
+            assert b == 50  # the one exact fallback shape
+    # paged buckets stay block-aligned under a misaligned max_len too
+    prunner = ModelRunner(cfg, params, n_slots=1, max_len=50, prompt_len=12,
+                          cache_layout="paged", block_size=8)
+    for n in range(1, 51):
+        assert prunner.bucket(n) % 8 == 0
