@@ -28,19 +28,31 @@ def _kv_dtype_bound_note(chip) -> str:
     """One line showing how the analytic Eq.(5) decode bound shifts with the
     KV-cache storage precision (the kv_dtype subsystem's roofline lever)."""
     from repro.configs import get_config
-    from repro.core.roofline import decode_kv_stream_time, kv_bytes_per_ctx_token
+    from repro.core.roofline import (
+        decode_kv_stream_time,
+        decode_kv_stream_time_speculative,
+        kv_bytes_per_ctx_token,
+    )
 
     cfg = get_config("bitnet-730m")  # the paper's model
     ctx = 2048
+    spec_k, spec_p = 4, 0.7  # representative prompt-lookup operating point
     parts = []
+    spec_parts = []
     for kv_dtype in ("fp", "int8", "int4"):
         b = kv_bytes_per_ctx_token(cfg, kv_dtype)
         t = decode_kv_stream_time(cfg, ctx, kv_dtype, chip)
         parts.append(f"{kv_dtype}: {b:.0f} B/ctx-tok -> {1e3 * t:.3f} ms/tok")
+        ts = decode_kv_stream_time_speculative(cfg, ctx, spec_k, spec_p, kv_dtype, chip)
+        spec_parts.append(f"{kv_dtype}: {1e3 * ts:.3f} ms/tok")
     return (
         f"Eq.(5) KV-stream decode bound, bitnet-730m @ ctx {ctx} on {chip.name} "
         "(payload + fp32 scale planes; see benchmarks/kv_quant_sweep.py): "
-        + "; ".join(parts) + "."
+        + "; ".join(parts) + ".  "
+        f"Speculative VERIFY bound at k={spec_k}, accept p={spec_p} "
+        "(one round streams the same dtype-dependent packed bytes and emits "
+        "E[accept] tokens — the kv_dtype and speculation levers multiply; see "
+        "benchmarks/spec_decode.py): " + "; ".join(spec_parts) + "."
     )
 
 

@@ -23,6 +23,7 @@ from . import (
     policy_compare,
     roofline_report,
     serving_e2e,
+    spec_decode,
     table1_comparison,
     table2_resources,
 )
@@ -40,6 +41,7 @@ BENCHES = {
     "paged_vs_contiguous": paged_vs_contiguous,
     "kv_quant_sweep": kv_quant_sweep,
     "chunked_prefill_interleave": chunked_prefill_interleave,
+    "spec_decode": spec_decode,
     "policy_compare": policy_compare,
     "beyond_paper": beyond_paper,
 }

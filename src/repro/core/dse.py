@@ -119,13 +119,23 @@ def t_prefill(co: ArchCoefficients, cfg_p: DseConfig, length: int, chip: ChipSpe
     return co.proj_flops_per_tok * length / f_pre + co.attn_flops_per_tok_per_ctx * length**2 / g_pre + t_w
 
 
-def t_decode(co: ArchCoefficients, cfg_p: DseConfig, context: int, chip: ChipSpec = DEFAULT_CHIP) -> float:
-    """Per-token decode latency at a given context (Eq. 5)."""
+def t_decode(co: ArchCoefficients, cfg_p: DseConfig, context: int, chip: ChipSpec = DEFAULT_CHIP,
+             tokens_per_round: float = 1.0) -> float:
+    """Per-token decode latency at a given context (Eq. 5).
+
+    ``tokens_per_round`` amortizes the weight + KV stream over a
+    speculative verify round's expected emitted tokens
+    (``repro.core.roofline.expected_accept_length``): the round streams
+    weights and cache ONCE whatever the draft depth — the verify FLOPs for
+    the extra k positions ride in the bandwidth shadow on a memory-bound
+    fabric — so the per-token bound divides by the expected acceptance
+    length.  1.0 (the default) is plain decode."""
     d = 128
     f_dec = chip.hbm_bw * _eff_mem(256 * 1024)  # weight streaming, big transfers
     kv_transfer = cfg_p.decode_bk * d * 2
     g_dec = chip.hbm_bw * _eff_mem(kv_transfer)
-    return co.proj_bytes_per_tok_dec / f_dec + co.kv_bytes_per_tok_per_ctx * context / g_dec
+    per_round = co.proj_bytes_per_tok_dec / f_dec + co.kv_bytes_per_tok_per_ctx * context / g_dec
+    return per_round / max(tokens_per_round, 1.0)
 
 
 def run_dse(
@@ -140,15 +150,23 @@ def run_dse(
     chip: ChipSpec = DEFAULT_CHIP,
     static_baseline: bool = False,
     kv_dtype: str = "fp",
+    spec_k: int = 0,
+    spec_accept_rate: float = 0.0,
 ) -> List[DsePoint]:
     """Enumerate the space; returns points sorted by Eq. (6) objective.
 
     static_baseline=True models the paper's static-accelerator comparison:
     ONE attention configuration serves both phases, so the constraint
     becomes r_proj + r_pre + r_dec <= R (both RMs resident) and blk == bk.
-    ``kv_dtype`` shifts the Eq. (5) KV coefficient (quantized cache).
+    ``kv_dtype`` shifts the Eq. (5) KV coefficient (quantized cache);
+    ``spec_k``/``spec_accept_rate`` amortize the decode terms over the
+    expected speculative acceptance length (prompt-lookup verify rounds) —
+    the two levers compose multiplicatively.
     """
     co = ArchCoefficients.from_config(cfg, chips, kv_dtype)
+    from repro.core.roofline import expected_accept_length
+
+    tokens_per_round = expected_accept_length(spec_k, spec_accept_rate)
     points: List[DsePoint] = []
     blks = [128, 256, 512]
     bks = [128, 256, 512, 1024, 2048]
@@ -163,8 +181,8 @@ def run_dse(
             vmem = p.vmem_static() + max(p.vmem_prefill(cfg), p.vmem_decode(cfg))  # Eq. (2)
         feasible = vmem <= chip.vmem_bytes
         tp = t_prefill(co, p, prefill_len, chip)
-        td_s = t_decode(co, p, l_short, chip)
-        td_l = t_decode(co, p, l_long, chip)
+        td_s = t_decode(co, p, l_short, chip, tokens_per_round)
+        td_l = t_decode(co, p, l_long, chip, tokens_per_round)
         if t_pre_max is not None and tp > t_pre_max:
             feasible = False
         obj = tp + alpha * td_l + (1 - alpha) * td_s  # Eq. (6)

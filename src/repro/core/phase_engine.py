@@ -388,6 +388,91 @@ class PhaseEngine:
         self._programs[key] = prog
         return prog
 
+    def verify_program(self, params_abstract, batch: int, max_len: int, width: int) -> PhaseProgram:
+        """The speculative VERIFY program over the contiguous cache:
+        ``fn(params, tokens (B, W), cache, lengths, n_tokens) -> (logits
+        (B, W, Vp), new_cache)`` (cache donated, in-place block append).
+
+        A third decode-phase configuration next to ``decode``: the same
+        bandwidth-optimized RM dataflow — stream the cache once — but
+        scoring ``width = k + 1`` token positions per slot per round, so
+        every accepted draft token amortizes the KV/weight stream the
+        paper's Eq. (5) says decode is bound by.  One compiled shape per
+        (slot batch, width); ``lengths``/``n_tokens`` are traced operands,
+        so acceptance-dependent rollback never recompiles."""
+        key = f"verify:{batch}x{width}@{max_len}"
+        if key in self._programs:
+            return self._programs[key]
+        cfg, pctx = self.cfg, self.decode_ctx
+        assert cfg.family == "transformer", "speculative verify implemented for the transformer family"
+        from repro.models import transformer as T
+
+        def fn(params, tokens, cache, lengths, n_tokens):
+            return T.verify(params, tokens, cache, lengths, n_tokens, cfg, pctx)
+
+        in_sh = None
+        if self.mesh is not None:
+            psh = self.param_shardings(params_abstract)
+            if self.kv_dtype != "fp":
+                cache_abstract = jax.eval_shape(
+                    lambda: T.init_cache(cfg, batch, max_len, kv_dtype=self.kv_dtype))
+            else:
+                cache_abstract = jax.eval_shape(lambda: self.api.init_cache(cfg, batch, max_len))
+            in_sh = (psh, self._sd(pctx, "batch", None), self._cache_shardings(cache_abstract),
+                     self._sd(pctx, "batch"), self._sd(pctx, "batch"))
+        prog = PhaseProgram(key, self._jit(fn, in_shardings=in_sh, donate=(2,)))
+        self._programs[key] = prog
+        return prog
+
+    def paged_verify_program(self, params_abstract, n_slots: int, max_pages: int, width: int) -> PhaseProgram:
+        """Speculative verify over the paged pool: ``fn(params, tokens
+        (B, W), pages, block_tables, lengths, n_tokens) -> (logits
+        (B, W, Vp), new_pages)`` (pool donated).  See ``verify_program``;
+        pages shard like ``paged_decode_program``."""
+        key = f"verify_paged:{n_slots}x{width}@{max_pages}"
+        if key in self._programs:
+            return self._programs[key]
+        cfg, pctx = self.cfg, self.decode_ctx
+        assert cfg.family == "transformer", "speculative verify implemented for the transformer family"
+        from repro.models import transformer as T
+
+        def fn(params, tokens, pages, block_tables, lengths, n_tokens):
+            return T.verify_paged(params, tokens, pages, block_tables, lengths, n_tokens, cfg, pctx)
+
+        in_sh = None
+        if self.mesh is not None:
+            psh = self.param_shardings(params_abstract)
+            page_sh = self._sd(pctx, None, "layers", "kv_heads", None, "head_dim")
+            from repro.layers.attention import KVCache
+            if self.kv_dtype != "fp":
+                from repro.quant.kv_quant import QuantKV
+
+                scale_sh = self._sd(pctx, None, "layers", "kv_heads", None)
+                leaf_sh = QuantKV(page_sh, scale_sh)
+            else:
+                leaf_sh = page_sh
+            in_sh = (psh, self._sd(pctx, "batch", None), KVCache(leaf_sh, leaf_sh), None,
+                     self._sd(pctx, "batch"), self._sd(pctx, "batch"))
+        prog = PhaseProgram(key, self._jit(fn, in_shardings=in_sh, donate=(2,)))
+        self._programs[key] = prog
+        return prog
+
+    def block_sampler_program(self, batch: int, width: int) -> PhaseProgram:
+        """Vectorized verify-target sampler: ``fn(logits (B, W, V), seeds,
+        step0s, temps, top_ks, top_ps) -> (B, W) tokens``.  Block position
+        ``i`` of slot ``b`` draws with ``fold_in(PRNGKey(seeds[b]),
+        step0s[b] + i)`` — the exact key stream sequential decode uses, so
+        the speculative accept rule preserves sampled streams bit-for-bit
+        (see ``repro.core.sampling.sample_block_tokens``)."""
+        key = f"block_sampler:{batch}x{width}"
+        if key in self._programs:
+            return self._programs[key]
+        from repro.core.sampling import sample_block_tokens
+
+        prog = PhaseProgram(key, jax.jit(sample_block_tokens))
+        self._programs[key] = prog
+        return prog
+
     def sampler_program(self, batch: int) -> PhaseProgram:
         """Vectorized per-slot token sampler — the decode epilogue program:
         ``fn(logits, seeds, steps, temps, top_ks, top_ps) -> tokens``.

@@ -61,6 +61,37 @@ def decode_kv_stream_time(cfg, context: int, kv_dtype: str = "fp",
     return kv_bytes_per_ctx_token(cfg, kv_dtype) * context / chip.hbm_bw
 
 
+def expected_accept_length(k: int, accept_rate: float) -> float:
+    """Expected tokens emitted per speculative verify round with draft
+    depth ``k`` and per-token acceptance probability ``accept_rate``
+    (i.i.d. geometric model): ``1 + p + ... + p^k = (1 - p^{k+1})/(1 - p)``
+    — the confirmed draft prefix plus the correction/bonus token.  Ranges
+    from 1 (p = 0: every round degenerates to plain decode) to ``k + 1``
+    (p = 1).  The measured analogue is ``EngineStats.tokens_per_round()``."""
+    if k <= 0:
+        return 1.0
+    p = min(max(float(accept_rate), 0.0), 1.0)
+    if p >= 1.0:
+        return float(k + 1)
+    return (1.0 - p ** (k + 1)) / (1.0 - p)
+
+
+def decode_kv_stream_time_speculative(
+    cfg, context: int, k: int, accept_rate: float, kv_dtype: str = "fp",
+    chip: ChipSpec = DEFAULT_CHIP,
+) -> float:
+    """Eq. (5) amortized by speculative decoding: one verify round streams
+    the KV cache ONCE and emits ``expected_accept_length(k, accept_rate)``
+    tokens, so the per-token KV-bandwidth bound divides by the expected
+    acceptance length.  This is the bound the DSE coefficients consume
+    (``repro.core.dse.run_dse(spec_k=..., spec_accept_rate=...)``) and the
+    roofline report's verify-bound note prints per kv_dtype — the verify
+    pass reads the same packed bytes decode does, so the quantized-KV and
+    speculative levers multiply."""
+    e = expected_accept_length(k, accept_rate)
+    return decode_kv_stream_time(cfg, context, kv_dtype, chip) / e
+
+
 def decode_arithmetic_intensity(cfg, kv_dtype: str = "fp") -> float:
     """Attention FLOPs per KV byte streamed in decode (flops/byte).
 

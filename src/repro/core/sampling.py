@@ -47,6 +47,47 @@ def filter_logits(logits, temps, top_ks, top_ps):
     return jax.vmap(_filter_row)(scaled, top_ks, top_ps)
 
 
+def sample_block_tokens(logits, seeds, step0s, temps, top_ks, top_ps):
+    """Per-slot target tokens for every position of a speculative verify
+    block: ``logits`` is (B, W, V) — the verify pass's logits at the W =
+    k + 1 block positions — and the returned (B, W) int32 tokens are what
+    sequential decode WOULD have drawn at each position.
+
+    Position ``i`` of slot ``b`` is drawn with
+    ``fold_in(PRNGKey(seeds[b]), step0s[b] + i)`` — exactly the key
+    sequential decode uses for its ``step0s[b] + i``-th token — so the
+    speculative accept rule (below) preserves the non-speculative stream
+    bit-for-bit under sampling as well as greedy, and preemption replay
+    keeps its determinism unchanged.
+    """
+
+    def per_pos(i, row_logits):  # row_logits: (B, V) at block position i
+        return sample_tokens(row_logits, seeds, step0s + i, temps, top_ks, top_ps)
+
+    w = logits.shape[1]
+    return jax.vmap(per_pos, in_axes=(0, 1), out_axes=1)(jnp.arange(w), logits)
+
+
+def accept_length(draft, targets) -> int:
+    """The speculative accept rule: length of the longest draft prefix the
+    verify targets confirm.
+
+    ``draft[i]`` was proposed for the position whose true token (under the
+    slot's SamplingParams) is ``targets[i]`` — the verify logits at block
+    position ``i`` scored against the same PRNG key / greedy argmax plain
+    decode would use.  Accepting exactly the leading run of matches (and
+    emitting ``targets[a]`` as the correction token) therefore reproduces
+    the non-speculative stream token-for-token: every emitted token IS the
+    token sequential decode would have produced at that position.
+    """
+    a = 0
+    for d, t in zip(draft, targets):
+        if int(d) != int(t):
+            break
+        a += 1
+    return a
+
+
 def sample_tokens(logits, seeds, steps, temps, top_ks, top_ps):
     """Draw one token per slot on device.
 

@@ -43,6 +43,14 @@ def main(argv=None) -> int:
                         "bounded chunks with a decode round between each, "
                         "instead of one atomic burst (None = monolithic; "
                         "paged layout needs a multiple of --block-size)")
+    p.add_argument("--spec-decode", type=int, default=0, metavar="K",
+                   help="speculative decoding draft depth: each decode round "
+                        "drafts up to K tokens by prompt lookup (n-gram match "
+                        "against the request's own history) and verifies all "
+                        "K+1 positions in one forward pass (0 = off); greedy "
+                        "streams stay bit-identical to plain decode")
+    p.add_argument("--spec-ngram", type=int, default=3, metavar="N",
+                   help="prompt-lookup n-gram size for --spec-decode drafting")
     p.add_argument("--ragged", action="store_true",
                    help="draw prompt lengths uniformly in [4, prompt_len]")
     p.add_argument("--requests", type=int, default=6)
@@ -77,7 +85,9 @@ def main(argv=None) -> int:
                      cache_layout=args.cache_layout, block_size=args.block_size,
                      num_blocks=args.num_blocks, kv_dtype=args.kv_dtype,
                      overlap=not args.no_overlap, swap_policy=args.swap_policy,
-                     prefill_chunk=args.prefill_chunk)
+                     prefill_chunk=args.prefill_chunk,
+                     spec_decode=args.spec_decode or None,
+                     spec_ngram=args.spec_ngram)
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p, seed=args.seed,
                         stop_tokens=tuple(args.stop_token or ()))
@@ -114,6 +124,12 @@ def main(argv=None) -> int:
     if stats.prefill_chunks:
         print(f"  prefill chunks    : {stats.prefill_chunks}  "
               f"(chunk={args.prefill_chunk} tokens, decode interleaved between chunks)")
+    if stats.verify_rounds:
+        print(f"  speculative decode: k={args.spec_decode} ngram={args.spec_ngram}  "
+              f"{stats.accepted_tokens}/{stats.draft_tokens} drafts accepted "
+              f"({100*stats.acceptance_rate():.0f}%), "
+              f"{stats.tokens_per_round():.2f} tokens/round over "
+              f"{stats.verify_rounds} verify rounds")
     ttfts = [r.first_token_t - r.enqueue_t for r in eng.finished.values()]
     if ttfts:
         print(f"  TTFT              : mean {1e3*float(np.mean(ttfts)):.1f} ms, "

@@ -260,6 +260,112 @@ def attention_prefill_chunk(
     return y, (kt, vt)
 
 
+def attention_verify(
+    params: dict,
+    x: jax.Array,  # (B, W, d) — per slot: [last sampled token, draft_1..draft_k]
+    k_cache: jax.Array,  # (B, Hkv, Cap, D) dense cache view (fp/bf16, already
+    v_cache: jax.Array,  # dequantized/gathered by the caller), valid [0, len)
+    lengths: jax.Array,  # (B,) tokens already installed in the cache
+    cfg: ModelConfig,
+    pctx: PartitionCtx,
+    *,
+    window: Optional[int] = None,
+    positions: Optional[jax.Array] = None,  # (B, W), default lengths + arange(W)
+    store_roundtrip=None,  # fn: fresh K/V -> the values a cache read-back yields
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Speculative-verify attention: score a W = k+1 token block per slot.
+
+    The fourth execution path of the dynamic region — the decode RM run
+    ``k + 1`` positions at a time.  Block position ``i`` of slot ``b`` sits
+    at global position ``lengths[b] + i`` and attends the installed cache
+    prefix (``j < lengths[b]``) plus block positions ``<= i`` — the k-token
+    variant of ``attention_prefill_chunk``'s position-offset causal mask,
+    but batched over slots with per-slot traced prefix lengths.  Rows past
+    a slot's real token count compute garbage that later rows never see
+    (causality runs forward only); the caller drops their logits and
+    routes their KV writes out of bounds.
+
+    Numerics REPLICATE the decode RM step for step, which is what lets
+    greedy speculative streams match plain decode bit-for-bit: sequential
+    decode at position ``lengths + i`` (1) streams the cache — where block
+    rows ``< i`` would by then sit in STORAGE precision, having been
+    written (bf16 cast, or quantize-on-write) and read back — with the
+    storage-dtype dot / f32-accumulate / P-cast-to-V-dtype math of
+    ``_decode_attention_streaming``, then (2) folds its OWN fresh
+    full-precision K/V via ``_merge_new_token``.  So here the streamed
+    part extends the cache view with ``store_roundtrip``-rounded block
+    rows under a strict mask (``j < i``), and each row's own token enters
+    through the same online-softmax merge, elementwise-identical to the
+    decode epilogue.
+
+    Returns (y (B, W, d_model), (k, v)) with the BLOCK's new K/V in
+    (B, Hkv, W, D) cache layout; the caller installs rows ``< n_tokens``
+    at ``[lengths, lengths + n_tokens)`` (quantize-on-write under
+    ``kv_dtype``) and the engine rolls rejected rows back by truncating
+    the slot length / releasing overshoot pages.
+    """
+    b, w, _ = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    cap = k_cache.shape[2]
+    if positions is None:
+        positions = lengths[:, None] + jnp.arange(w)[None, :]
+    q, k, v = _project_qkv(params, x, cfg, positions, training=False,
+                           rope=cfg.rope_theta > 0)
+    qt = q.transpose(0, 2, 1, 3)  # (B, H, W, D)
+    kt = k.transpose(0, 2, 1, 3)  # (B, Hkv, W, D)
+    vt = v.transpose(0, 2, 1, 3)
+
+    if cfg.attn_impl == "stub":
+        out = qt  # kernel-substituted lowering; see kernels/costs.py
+    else:
+        g = h // hkv
+        sm = 1.0 / math.sqrt(hd)
+        # block rows as a LATER cache read would see them: storage-rounded
+        kt_st = store_roundtrip(kt) if store_roundtrip is not None else kt
+        vt_st = store_roundtrip(vt) if store_roundtrip is not None else vt
+        ext_k = jnp.concatenate([k_cache, kt_st.astype(k_cache.dtype)], axis=2)
+        ext_v = jnp.concatenate([v_cache, vt_st.astype(v_cache.dtype)], axis=2)
+        kk = jnp.repeat(ext_k, g, axis=1) if g > 1 else ext_k
+        vv = jnp.repeat(ext_v, g, axis=1) if g > 1 else ext_v
+        # --- stage 1: the streaming pass (_decode_attention_streaming) ---
+        scores = jnp.einsum("bhqd,bhkd->bhqk", qt.astype(kk.dtype), kk,
+                            preferred_element_type=jnp.float32) * sm
+        iq = jnp.arange(w)
+        qpos = lengths[:, None] + iq[None, :]  # (B, W) global query positions
+        kpos_c = jnp.arange(cap)[None, :]  # cache key j holds position j
+        mask_c = jnp.broadcast_to((kpos_c < lengths[:, None])[:, None, :], (b, w, cap))
+        mask_b = jnp.broadcast_to((iq[:, None] > iq[None, :])[None], (b, w, w))  # strict:
+        # a row's own token enters via the merge, exactly as in decode
+        if window is not None:
+            starts = jnp.maximum(0, qpos + 1 - window)  # (B, W), decode's window start
+            mask_c &= kpos_c[:, None, :] >= starts[:, :, None]
+            mask_b &= (lengths[:, None, None] + iq[None, None, :]) >= starts[:, :, None]
+        mask = jnp.concatenate([mask_c, mask_b], axis=-1)[:, None]  # (B,1,W,cap+W)
+        scores = jnp.where(mask, scores, -1e30)
+        m = jnp.max(scores, axis=-1, keepdims=True)  # (B, H, W, 1)
+        p = jnp.where(mask, jnp.exp(scores - m), 0.0)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        out_c = jnp.einsum("bhqk,bhkd->bhqd", p.astype(vv.dtype), vv,
+                           preferred_element_type=jnp.float32)
+        out_c = out_c / jnp.maximum(l, 1e-30)
+        # --- stage 2: fold each row's own fresh K/V (_merge_new_token) ---
+        kn = jnp.repeat(kt, g, axis=1) if g > 1 else kt  # (B, H, W, D), full precision
+        vn = jnp.repeat(vt, g, axis=1) if g > 1 else vt
+        s_new = jnp.sum(qt.astype(jnp.float32) * kn.astype(jnp.float32),
+                        axis=-1, keepdims=True) * sm
+        m2 = jnp.maximum(m, s_new)
+        alpha = jnp.exp(m - m2)
+        p_new = jnp.exp(s_new - m2)
+        l2 = alpha * l + p_new
+        out = (out_c * (alpha * l) + p_new * vn.astype(jnp.float32)) / jnp.maximum(l2, 1e-30)
+        out = out.astype(x.dtype)
+
+    out = pctx.shard(out, "batch", "heads", "seq", "head_dim")
+    y = out.transpose(0, 2, 1, 3).reshape(b, w, h * hd)
+    y = linear_apply(params["wo"], y, quant=cfg.quant, training=False, use_pallas=cfg.use_pallas)
+    return y, (kt, vt)
+
+
 def update_cache(cache: KVCache, k_new: jax.Array, v_new: jax.Array, lengths: jax.Array) -> KVCache:
     """Insert one token's K/V per sequence at its current length."""
     smax = cache.k.shape[2]
@@ -479,6 +585,122 @@ def write_chunk_kv_q(buf, new: jax.Array, slot, start):
     return QuantKV(
         write_chunk_kv(buf.q, payload, slot, start),
         write_chunk_scales(buf.scale, scale, slot, start),
+    )
+
+
+def scatter_verify_tokens(
+    buf: jax.Array, new: jax.Array, lengths: jax.Array, n_tokens: jax.Array
+) -> jax.Array:
+    """Write a speculative verify block's KV into the contiguous cache.
+
+    buf: (B, L, Hkv, Smax, D) batch-leading decode cache; new:
+    (L, B, Hkv, W, D) per-layer block K or V collected as scan ys; row
+    ``i`` of slot ``b`` lands at position ``lengths[b] + i`` iff
+    ``i < n_tokens[b]`` — rows past a slot's real token count (draft
+    padding, parked mid-prefill slots, free slots) route out of bounds and
+    are dropped by the scatter, so they can never corrupt live KV or the
+    chunked-prefill parked-write row ``Smax - 1`` (the engine additionally
+    clamps draft depth so LIVE rows stay ``<= Smax - 2``).  Distinct live
+    (slot, position) pairs never collide.
+    """
+    b, l, hkv, smax, d = buf.shape
+    w = new.shape[3]
+    iq = jnp.arange(w)[None, :]
+    pos = lengths[:, None] + iq  # (B, W)
+    pos = jnp.where(iq < n_tokens[:, None], pos, smax)  # OOB -> dropped
+    bidx = jnp.broadcast_to(jnp.arange(b)[:, None], (b, w))
+    newb = jnp.moveaxis(jnp.moveaxis(new, 1, 0), 3, 1).astype(buf.dtype)  # (B, W, L, Hkv, D)
+    return buf.at[bidx, :, :, pos, :].set(newb, mode="drop")
+
+
+def scatter_verify_scales(
+    buf: jax.Array, new: jax.Array, lengths: jax.Array, n_tokens: jax.Array
+) -> jax.Array:
+    """Scale-plane analogue of ``scatter_verify_tokens``: buf (B, L, Hkv,
+    Smax) fp32, new (L, B, Hkv, W); same out-of-bounds drop routing."""
+    b, l, hkv, smax = buf.shape
+    w = new.shape[3]
+    iq = jnp.arange(w)[None, :]
+    pos = lengths[:, None] + iq
+    pos = jnp.where(iq < n_tokens[:, None], pos, smax)
+    bidx = jnp.broadcast_to(jnp.arange(b)[:, None], (b, w))
+    newb = jnp.moveaxis(jnp.moveaxis(new, 1, 0), 3, 1).astype(buf.dtype)  # (B, W, L, Hkv)
+    return buf.at[bidx, :, :, pos].set(newb, mode="drop")
+
+
+def scatter_verify_tokens_q(buf, new: jax.Array, lengths: jax.Array, n_tokens: jax.Array):
+    """``scatter_verify_tokens`` generalized to a possibly-quantized cache
+    leaf: quantize-on-write of the block rows (payload + per-(layer, head,
+    token) scale), the same granularity every other write path uses — so a
+    verify-round append lands exactly the bytes sequential decode appends
+    would, which is what keeps speculative streams and preemption replay
+    bit-identical under quantization."""
+    if not isinstance(buf, QuantKV):
+        return scatter_verify_tokens(buf, new, lengths, n_tokens)
+    payload, scale = quantize_kv(new, infer_kv_dtype(buf.q))
+    return QuantKV(
+        scatter_verify_tokens(buf.q, payload, lengths, n_tokens),
+        scatter_verify_scales(buf.scale, scale, lengths, n_tokens),
+    )
+
+
+def scatter_verify_tokens_paged(
+    pages: jax.Array, new: jax.Array, block_tables: jax.Array,
+    lengths: jax.Array, n_tokens: jax.Array
+) -> jax.Array:
+    """Paged analogue of ``scatter_verify_tokens``: row ``i`` of slot ``b``
+    lands in page ``tables[b, (lengths[b]+i) // bs]`` at in-page offset
+    ``(lengths[b]+i) % bs``.  Rows with ``i >= n_tokens[b]`` (and inactive
+    slots, ``lengths == 0``) route to the out-of-bounds page id and are
+    dropped — the engine only grows the table to cover a slot's REAL rows,
+    so padding rows must never consult it.  Live slots own distinct pages,
+    so the (page, offset) scatter indices never collide.
+    """
+    n, l, hkv, bs, d = pages.shape
+    w = new.shape[3]
+    iq = jnp.arange(w)[None, :]
+    pos = lengths[:, None] + iq  # (B, W) global positions
+    page_idx = jnp.minimum(pos // bs, block_tables.shape[1] - 1)
+    page = jnp.take_along_axis(block_tables, page_idx, axis=1)  # (B, W)
+    valid = (iq < n_tokens[:, None]) & (lengths[:, None] > 0)
+    page = jnp.where(valid, page, n)  # OOB -> dropped
+    off = pos % bs
+    newb = jnp.moveaxis(jnp.moveaxis(new, 1, 0), 3, 1).astype(pages.dtype)  # (B, W, L, Hkv, D)
+    return pages.at[page, :, :, off, :].set(newb, mode="drop")
+
+
+def scatter_verify_scales_paged(
+    pages: jax.Array, new: jax.Array, block_tables: jax.Array,
+    lengths: jax.Array, n_tokens: jax.Array
+) -> jax.Array:
+    """Scale-plane analogue of ``scatter_verify_tokens_paged``: pages
+    (N, L, Hkv, bs) fp32, new (L, B, Hkv, W)."""
+    n, l, hkv, bs = pages.shape
+    w = new.shape[3]
+    iq = jnp.arange(w)[None, :]
+    pos = lengths[:, None] + iq
+    page_idx = jnp.minimum(pos // bs, block_tables.shape[1] - 1)
+    page = jnp.take_along_axis(block_tables, page_idx, axis=1)
+    valid = (iq < n_tokens[:, None]) & (lengths[:, None] > 0)
+    page = jnp.where(valid, page, n)
+    off = pos % bs
+    newb = jnp.moveaxis(jnp.moveaxis(new, 1, 0), 3, 1).astype(pages.dtype)  # (B, W, L, Hkv)
+    return pages.at[page, :, :, off].set(newb, mode="drop")
+
+
+def scatter_verify_tokens_paged_q(
+    pages, new: jax.Array, block_tables: jax.Array,
+    lengths: jax.Array, n_tokens: jax.Array
+):
+    """``scatter_verify_tokens_paged`` generalized to a possibly-quantized
+    page pool leaf — quantize-on-write of the verify block (see
+    ``scatter_verify_tokens_q`` for the determinism contract)."""
+    if not isinstance(pages, QuantKV):
+        return scatter_verify_tokens_paged(pages, new, block_tables, lengths, n_tokens)
+    payload, scale = quantize_kv(new, infer_kv_dtype(pages.q))
+    return QuantKV(
+        scatter_verify_tokens_paged(pages.q, payload, block_tables, lengths, n_tokens),
+        scatter_verify_scales_paged(pages.scale, scale, block_tables, lengths, n_tokens),
     )
 
 

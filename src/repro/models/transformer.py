@@ -436,6 +436,146 @@ def decode_step(
     return logits[:, 0, :], KVCache(new_k, new_v)
 
 
+def _store_roundtrip(cache_leaf):
+    """How a cache read-back rounds freshly-written K/V — the function
+    ``attention_verify`` applies to block rows so a verify pass sees
+    earlier block tokens EXACTLY as sequential decode would after writing
+    then re-reading them: a quantize/dequantize round trip for quantized
+    caches, None (the concat's storage-dtype cast) for fp."""
+    from repro.quant.kv_quant import QuantKV, dequantize_kv, infer_kv_dtype, quantize_kv
+
+    if not isinstance(cache_leaf, QuantKV):
+        return None
+    dt = infer_kv_dtype(cache_leaf.q)
+
+    def roundtrip(x):
+        payload, scale = quantize_kv(x, dt)
+        return dequantize_kv(payload, scale, dt)
+
+    return roundtrip
+
+
+def verify(
+    params: dict,
+    tokens: jax.Array,  # (B, W) int32 — per slot [last token, draft_1..draft_k]
+    cache: KVCache,  # (B, L, Hkv, Smax, D) decode cache (donated)
+    lengths: jax.Array,  # (B,) tokens already installed per slot
+    n_tokens: jax.Array,  # (B,) real rows per slot (draft_len + 1; 0 = sit out)
+    cfg: ModelConfig,
+    pctx: PartitionCtx = NULL_CTX,
+):
+    """The speculative VERIFY pass over the contiguous cache: score a
+    W = k+1 token block per slot in one forward.  Returns (logits
+    (B, W, Vp), new_cache).
+
+    Structure mirrors ``decode_step``: the cache is READ-ONLY during the
+    layer scan (each layer slices its K/V; ``attention_verify`` applies the
+    position-offset causal mask over prefix + block), and ONE post-scan
+    ``scatter_verify_tokens_q`` writes all layers' block rows in place
+    (quantize-on-write) — per-round cache write traffic O(L*B*Hkv*W*D).
+    Rows past ``n_tokens`` are dropped by the scatter and their logits are
+    garbage the host ignores; the engine truncates slot length / releases
+    overshoot pages to roll back rejected rows.  Quantized caches are
+    dequantized with the same math the decode jnp path uses, so verify
+    reads exactly the fp values plain decode reads.
+    """
+    from repro.layers.attention import attention_verify, scatter_verify_tokens_q
+    from repro.quant.kv_quant import QuantKV, dequantize_kv, infer_kv_dtype
+
+    x = _embed(params, tokens, cfg, pctx)
+    positions = lengths[:, None] + jnp.arange(tokens.shape[1])[None, :]
+    roundtrip = _store_roundtrip(cache.k)
+
+    def dense(leaf):  # (B, Hkv, Smax, D) fp view of one layer's cache slice
+        if isinstance(leaf, QuantKV):
+            return dequantize_kv(leaf.q, leaf.scale, infer_kv_dtype(leaf.q))
+        return leaf
+
+    def body(x, scanned):
+        lp, li = scanned
+        ck = dense(_slice_layer(cache.k, li))
+        cv = dense(_slice_layer(cache.v, li))
+        h = apply_norm(lp["ln1"], x, cfg.norm, cfg.norm_eps)
+        attn_out, (k_new, v_new) = attention_verify(
+            lp["attn"], h, ck, cv, lengths, cfg, pctx,
+            window=cfg.sliding_window, positions=positions,
+            store_roundtrip=roundtrip,
+        )
+        x = x + attn_out
+        h = apply_norm(lp["ln2"], x, cfg.norm, cfg.norm_eps)
+        if cfg.moe:
+            ffn_out, _ = moe_apply(lp["moe"], h, cfg, pctx, training=False)
+        else:
+            ffn_out = mlp_apply(lp["mlp"], h, cfg, pctx, training=False)
+        return x + ffn_out, (k_new, v_new)
+
+    x, (tok_k, tok_v) = jax.lax.scan(body, x, (params["layers"], jnp.arange(cfg.num_layers)))
+    new_k = scatter_verify_tokens_q(cache.k, tok_k, lengths, n_tokens)
+    new_v = scatter_verify_tokens_q(cache.v, tok_v, lengths, n_tokens)
+    logits = _logits(params, x, cfg, pctx)  # ALL W positions — the verify targets
+    return logits, KVCache(new_k, new_v)
+
+
+def verify_paged(
+    params: dict,
+    tokens: jax.Array,  # (B, W) int32
+    pages: KVCache,  # (N, L, Hkv, bs, D) page pool (donated)
+    block_tables: jax.Array,  # (B, P) int32
+    lengths: jax.Array,  # (B,)
+    n_tokens: jax.Array,  # (B,) real rows per slot
+    cfg: ModelConfig,
+    pctx: PartitionCtx = NULL_CTX,
+):
+    """The speculative VERIFY pass over the paged pool — ``verify`` with
+    each layer's K/V gathered dense through the block table first (the
+    paged jnp decode path's move: page ``i`` covers positions ``[i*bs,
+    (i+1)*bs)``, so the gathered view places every token at the index the
+    contiguous cache would, and paged vs contiguous verify cannot drift).
+    The block's KV is scattered into each slot's pages by
+    ``scatter_verify_tokens_paged_q`` (quantize-on-write; rows past
+    ``n_tokens`` route out of bounds).
+    """
+    from repro.kernels.paged_attention.ops import gather_scales
+    from repro.kernels.paged_attention.ref import gather_pages
+    from repro.layers.attention import attention_verify, scatter_verify_tokens_paged_q
+    from repro.quant.kv_quant import QuantKV, dequantize_kv, infer_kv_dtype
+
+    x = _embed(params, tokens, cfg, pctx)
+    positions = lengths[:, None] + jnp.arange(tokens.shape[1])[None, :]
+    roundtrip = _store_roundtrip(pages.k)
+
+    def dense(leaf):  # (B, Hkv, P*bs, D) fp gather of one layer's pages
+        if isinstance(leaf, QuantKV):
+            return dequantize_kv(gather_pages(leaf.q, block_tables),
+                                 gather_scales(leaf.scale, block_tables),
+                                 infer_kv_dtype(leaf.q))
+        return gather_pages(leaf, block_tables)
+
+    def body(x, scanned):
+        lp, li = scanned
+        ck = dense(_slice_layer(pages.k, li))
+        cv = dense(_slice_layer(pages.v, li))
+        h = apply_norm(lp["ln1"], x, cfg.norm, cfg.norm_eps)
+        attn_out, (k_new, v_new) = attention_verify(
+            lp["attn"], h, ck, cv, lengths, cfg, pctx,
+            window=cfg.sliding_window, positions=positions,
+            store_roundtrip=roundtrip,
+        )
+        x = x + attn_out
+        h = apply_norm(lp["ln2"], x, cfg.norm, cfg.norm_eps)
+        if cfg.moe:
+            ffn_out, _ = moe_apply(lp["moe"], h, cfg, pctx, training=False)
+        else:
+            ffn_out = mlp_apply(lp["mlp"], h, cfg, pctx, training=False)
+        return x + ffn_out, (k_new, v_new)
+
+    x, (tok_k, tok_v) = jax.lax.scan(body, x, (params["layers"], jnp.arange(cfg.num_layers)))
+    new_k = scatter_verify_tokens_paged_q(pages.k, tok_k, block_tables, lengths, n_tokens)
+    new_v = scatter_verify_tokens_paged_q(pages.v, tok_v, block_tables, lengths, n_tokens)
+    logits = _logits(params, x, cfg, pctx)
+    return logits, KVCache(new_k, new_v)
+
+
 def decode_step_paged(
     params: dict,
     token: jax.Array,  # (B,) int32 — current input token

@@ -44,6 +44,25 @@ so preemption replay stays bit-identical.
 See ``PrefillProgress``, ``ModelRunner.run_prefill_chunk`` and the chunk
 phase programs in ``core.phase_engine``.
 
+With ``spec_decode=k`` every decode round becomes a speculative VERIFY
+round: each decoding slot proposes up to ``k`` draft tokens by matching its
+recent suffix against its own prompt + output history (host-side prompt
+lookup, ``serving.spec_decode`` — no draft model, nothing extra resident),
+one batched verify program scores all ``k + 1`` positions in a single
+forward pass, the longest confirmed draft prefix plus one correction token
+is emitted (multi-token ``RequestOutput`` deltas), and rejected rows are
+rolled back by truncating the slot length (contiguous) / releasing the
+overshoot pages (paged).  Decode is memory-bandwidth-bound (Eq. 5 — each
+token streams the whole KV cache + weights), so every accepted draft token
+amortizes a stream the round already paid for.  Greedy targets are the
+verify logits' argmax and sampled targets reuse the sequential
+``fold_in(seed, token_index)`` key stream, so emitted streams match the
+non-speculative engine token-for-token and preemption replay is unchanged
+(recorded tokens teacher-force through the decode program; drafts are a
+pure function of the token history, so no speculation state survives a
+restart).  ``EngineStats`` reports ``draft_tokens`` / ``accepted_tokens``
+/ ``acceptance_rate()`` / ``tokens_per_round()``.
+
 Faithful mode (``mode="pdswap"``) and the static baseline, and the
 contiguous vs paged cache layouts, keep their PR-1 semantics — see
 ``repro.serving.engine`` for the original mode/layout notes.  Sampling is
@@ -147,9 +166,27 @@ class EngineStats:
     admission_blocks: int = 0  # prefill attempts deferred on pool pressure
     replayed_tokens: int = 0  # recompute overhead paid by preemption restarts
     t_replay: float = 0.0  # wall time of restart replays (kept out of t_decode)
+    # speculative-decoding counters (spec_decode=k)
+    draft_tokens: int = 0  # prompt-lookup draft tokens proposed to verify
+    accepted_tokens: int = 0  # draft tokens the verify pass confirmed
+    verify_rounds: int = 0  # decode rounds run through the verify program
+    slot_rounds: int = 0  # sum over decode rounds of active slots — the
+    # per-slot normalizer (a plain batched round is batch-many slot-rounds)
 
     def decode_tput(self) -> float:
         return self.decode_tokens / self.t_decode if self.t_decode else 0.0
+
+    def acceptance_rate(self) -> float:
+        """Fraction of proposed draft tokens the verify pass accepted."""
+        return self.accepted_tokens / self.draft_tokens if self.draft_tokens else 0.0
+
+    def tokens_per_round(self) -> float:
+        """Mean tokens emitted per SLOT per decode round — exactly 1.0
+        without speculation regardless of batch size (normalizing by
+        ``slot_rounds``, not rounds, keeps batch width out of the
+        number); every accepted draft raises it (the per-stream Eq. (5)
+        amortization factor)."""
+        return self.decode_tokens / self.slot_rounds if self.slot_rounds else 0.0
 
     def decode_round_cost(self) -> float:
         return self.t_decode / self.decode_rounds if self.decode_rounds else 0.0
@@ -179,6 +216,8 @@ class ModelRunner:
         mesh=None,
         overlap: bool = True,
         prefill_chunk: Optional[int] = None,  # tokens per prefill quantum (None = monolithic)
+        spec_decode: Optional[int] = None,  # draft depth k (None/0 = speculation off)
+        spec_ngram: int = 3,  # prompt-lookup n-gram size
     ):
         from repro.quant.kv_quant import assert_kv_dtype, quantize_kv_tree
 
@@ -194,7 +233,16 @@ class ModelRunner:
                     f"prefill_chunk ({prefill_chunk}) must be a multiple of "
                     f"block_size ({block_size}) so chunk boundaries align with "
                     "page boundaries (each chunk writes whole pages)")
+        if spec_decode is not None and spec_decode < 1:
+            if spec_decode == 0:
+                spec_decode = None  # 0 = off, the CLI's natural spelling
+            else:
+                raise ValueError(f"spec_decode must be >= 1 (or 0/None = off), got {spec_decode}")
+        if spec_ngram < 1:
+            raise ValueError(f"spec_ngram must be >= 1, got {spec_ngram}")
         self.prefill_chunk = prefill_chunk
+        self.spec_decode = spec_decode
+        self.spec_ngram = spec_ngram
         self.cfg = cfg
         self.params = params
         self.api = get_model(cfg)
@@ -247,6 +295,19 @@ class ModelRunner:
             self.decode_prog = self.engine.decode_program(self._pa, n_slots, max_len)
             self.cache = T.init_cache(cfg, n_slots, max_len, kv_dtype=kv_dtype)
         self.last_tokens = jnp.zeros((n_slots,), jnp.int32)
+
+        # Speculative decoding: ONE verify program shape (n_slots, k+1)
+        # serves every round — per-slot draft depth varies at runtime via
+        # the traced n_tokens operand, never by recompilation.
+        self.verify_prog = None
+        if spec_decode is not None:
+            width = spec_decode + 1
+            if cache_layout == "paged":
+                self.verify_prog = self.engine.paged_verify_program(
+                    self._pa, n_slots, self.paged.max_pages, width)
+            else:
+                self.verify_prog = self.engine.verify_program(
+                    self._pa, n_slots, max_len, width)
 
         # Chunked prefill keeps an fp mirror of the in-flight prompt's KV
         # (prefill layout, bounded at the cache capacity) so every chunk
@@ -517,6 +578,88 @@ class ModelRunner:
             )
         return logits
 
+    # -------------------------------------------------- speculative decode --
+
+    def draft_for(self, req: Request, slot: int) -> np.ndarray:
+        """Clamped prompt-lookup draft for one DECODING slot (host-side).
+
+        The proposal depth is ``spec_decode`` clamped to the slot's real
+        headroom, so a verify round can never write live KV where it must
+        not land:
+
+        * budget — at most ``max_new - generated - 1`` drafts are useful
+          (the round's last emitted token never becomes an input, so its
+          KV is never needed — exactly the non-speculative invariant);
+        * cache — live verify rows must stay ``<= max_len - 2``: row
+          ``max_len - 1`` is the chunked-prefill parked-write row, whose
+          whole trick is that live KV NEVER occupies it (a k-token append
+          would otherwise break the invariant silently — satellite fix,
+          asserted again at round build time).
+
+        The paged trajectory bound needs no extra clamp: with the budget
+        clamp the deepest verify write is position ``prompt + max_new - 2``,
+        inside the pages the admission trajectory check already reserved.
+        """
+        s = self.slots.slots[slot]
+        k = min(
+            self.spec_decode,
+            req.max_new - s.generated - 1,
+            self.max_len - 2 - s.length,
+        )
+        if k <= 0:
+            return np.zeros((0,), np.int32)
+        from repro.serving.spec_decode import find_draft
+
+        ctx = np.concatenate(
+            [np.asarray(req.prompt, np.int32),
+             np.asarray(req.out_tokens, np.int32)]) if req.out_tokens else (
+            np.asarray(req.prompt, np.int32))
+        return find_draft(ctx, k, self.spec_ngram)
+
+    def run_verify(self, tokens, lengths, n_tokens) -> jnp.ndarray:
+        """One speculative verify round: score every slot's (last token +
+        draft) block in one forward, install the block KV in place
+        (quantize-on-write; rows past ``n_tokens`` dropped).  Returns the
+        (B, W, V) logits — the per-position verify targets."""
+        if self.cache_layout == "paged":
+            tables = self.paged.block_tables_array()
+            logits, self.paged.kv = self.verify_prog.fn(
+                self.params, tokens, self.paged.kv, tables, lengths, n_tokens
+            )
+        else:
+            logits, self.cache = self.verify_prog.fn(
+                self.params, tokens, self.cache, lengths, n_tokens
+            )
+        return logits
+
+    def rollback_overshoot(self, slot: int, length: int) -> None:
+        """Roll rejected verify rows back.  Contiguous: a no-op — rows past
+        the slot length are garbage the per-slot masking never reads, and
+        any position is rewritten before the length grows past it.  Paged:
+        release the overshoot pages so rejections cannot leak pool
+        capacity (or hold COW forks alive) across rounds."""
+        if self.cache_layout == "paged":
+            self.paged.truncate_slot(slot, length)
+
+    def select_targets(self, logits, inflight: Dict[int, Request]) -> jnp.ndarray:
+        """Per-position verify targets, (B, W) int32 — what sequential
+        decode would have produced at each block position.  All-greedy
+        batches take the direct argmax (the decode hot path); any sampling
+        request routes through the vectorized block sampler, whose PRNG
+        key for (slot, position i) is ``fold_in(seed, generated + i)`` —
+        the sequential stream's exact keys."""
+        if all(r.params.greedy for r in inflight.values()):
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        step0s = np.zeros(self.slots.n_slots, np.int32)
+        for s, r in inflight.items():
+            step0s[s] = len(r.out_tokens)
+        prog = self.engine.block_sampler_program(self.slots.n_slots, logits.shape[1])
+        return prog.fn(
+            logits, jnp.asarray(self._seeds), jnp.asarray(step0s),
+            jnp.asarray(self._temps), jnp.asarray(self._top_ks),
+            jnp.asarray(self._top_ps),
+        )
+
     # ------------------------------------------------------------- sampler --
 
     def set_slot_sampling(self, slot: int, req: Request) -> None:
@@ -736,13 +879,16 @@ class EngineCore:
         overlap: bool = True,
         swap_policy: Union[SwapPolicy, str, None] = None,
         prefill_chunk: Optional[int] = None,  # tokens per prefill quantum (None = monolithic)
+        spec_decode: Optional[int] = None,  # speculative draft depth k (None/0 = off)
+        spec_ngram: int = 3,  # prompt-lookup n-gram size
     ):
         self.cfg = cfg
         self.runner = ModelRunner(
             cfg, params, n_slots=n_slots, max_len=max_len, prompt_len=prompt_len,
             mode=mode, cache_layout=cache_layout, block_size=block_size,
             num_blocks=num_blocks, kv_dtype=kv_dtype, mesh=mesh, overlap=overlap,
-            prefill_chunk=prefill_chunk,
+            prefill_chunk=prefill_chunk, spec_decode=spec_decode,
+            spec_ngram=spec_ngram,
         )
         # slot -> partially-prefilled request state (chunked prefill only);
         # insertion order is admission order, so continuation is FIFO
@@ -774,6 +920,10 @@ class EngineCore:
     @property
     def prefill_chunk(self) -> Optional[int]:
         return self.runner.prefill_chunk
+
+    @property
+    def spec_decode(self) -> Optional[int]:
+        return self.runner.spec_decode
 
     def submit(self, request: Request) -> None:
         self.scheduler.submit(request)
@@ -875,6 +1025,9 @@ class EngineCore:
         first chunk.  Returns ``(ok, outputs)`` with the same blocked-
         admission contract as ``_admit_one``."""
         runner, stats = self.runner, self.stats
+        out = self._finish_resumed_at_budget(req)
+        if out is not None:
+            return True, [out]
         resuming = req.preempted and bool(req.out_tokens)
         restarted = req.preempted  # mid-prefill evictions restart with no tokens
 
@@ -1009,12 +1162,35 @@ class EngineCore:
 
     # ---------------------------------------------------------- admission --
 
+    def _finish_resumed_at_budget(self, req: Request) -> Optional[RequestOutput]:
+        """A replayed request whose recorded trajectory already fills its
+        ``max_new`` budget has nothing left to generate — finish it HERE,
+        before admission burns a slot, a full prompt prefill and a
+        teacher-forced replay just to discard the rebuilt cache state
+        (the finished condition is pure host arithmetic on
+        ``(len(out_tokens), max_new)``).  Returns the terminal zero-delta
+        output, or None when the request really needs a slot."""
+        if not (req.preempted and req.out_tokens
+                and len(req.out_tokens) >= req.max_new):
+            return None
+        req.preempted = False
+        if req.first_token_t == 0.0:
+            # same safety net as the replay path: recorded tokens normally
+            # carry a stamp from their original admission
+            req.first_token_t = time.perf_counter()
+        out = self.out_proc.finalize_resumed(req)
+        self.finished[req.request_id] = req
+        return out
+
     def _admit_one(self, req: Request):
         """Admit one request into a slot (the old ``_prefill_one``).
         Returns ``(ok, output)``: ``ok=False`` means admission is blocked
         (paged pool exhausted) — the request went back to the queue head and
         the engine should decode to drain capacity first."""
         runner, stats = self.runner, self.stats
+        out = self._finish_resumed_at_budget(req)
+        if out is not None:
+            return True, out
         resuming = req.preempted and bool(req.out_tokens)
 
         if runner.cache_layout == "paged" and resuming and not runner.restart_headroom_ok(req):
@@ -1076,6 +1252,16 @@ class EngineCore:
             runner.slots.slots[slot].generated >= req.max_new
         )
         if finished:
+            if out is None:
+                # Backstop for a replayed request finishing with nothing
+                # left to emit (the common resume-exactly-at-budget case is
+                # intercepted before admission by _finish_resumed_at_budget;
+                # this guards any future path reaching here): the old code
+                # finished it with finish_reason None and never emitted a
+                # terminal delta — the stream just went dark.  Reconstruct
+                # the reason from the recorded tail and emit the zero-delta
+                # finished output the client is owed.
+                out = self.out_proc.finalize_resumed(req)
             if req.done_t == 0.0:
                 req.done_t = time.perf_counter()
             self.finished[req.request_id] = req
@@ -1130,6 +1316,18 @@ class EngineCore:
 
     def _decode_round(self) -> List[RequestOutput]:
         runner, stats, sched = self.runner, self.stats, self.scheduler
+        if runner.spec_decode is not None:
+            # host-side prompt lookup first: when at least one slot found a
+            # draft the round goes through the k+1-wide verify program;
+            # with NO drafts anywhere (incompressible streams, or every
+            # slot still too young for its n-gram to repeat) the round
+            # falls back to the plain single-token decode program — the
+            # verify pass would do k+1x the work to emit the same one
+            # token per slot
+            drafts = {slot: runner.draft_for(sched.inflight[slot], slot)
+                      for slot in sorted(sched.inflight)}
+            if any(len(d) for d in drafts.values()):
+                return self._verify_round(drafts)
         if runner.cache_layout == "paged":
             self._ensure_append_pages()
         active = sorted(sched.inflight)
@@ -1158,6 +1356,7 @@ class EngineCore:
         stats.decode_rounds += 1
         stats.decode_tokens += len(active)
 
+        stats.slot_rounds += len(active)
         next_np = np.asarray(next_tokens)
         outs: List[RequestOutput] = []
         for i in active:
@@ -1172,6 +1371,113 @@ class EngineCore:
                 runner.release(i)
             outs.append(out)
         runner.last_tokens = next_tokens
+        return outs
+
+    # -------------------------------------------------- speculative decode --
+
+    def _grow_slot_span(self, slot: int, start: int, count: int) -> None:
+        """Make positions ``[start, start + count)`` writable for one slot
+        before a verify round — page growth + copy-on-write forks, with the
+        same preempt-under-pressure loop the single-token path uses.  Stops
+        early if the slot itself becomes the eviction victim."""
+        for pos in range(start, start + count):
+            self._grow_slot_page(slot, pos)
+            if self.runner.slots.slots[slot].request_id is None:
+                return  # this very slot was evicted mid-growth
+
+    def _verify_round(self, drafts: Dict[int, np.ndarray]) -> List[RequestOutput]:
+        """One decode quantum under speculative decoding: draft (host-side
+        prompt lookup — ``drafts`` arrives from ``_decode_round``, which
+        already fell back to plain decode when every slot came up empty),
+        verify (one batched k+1-position forward), accept (longest
+        confirmed draft prefix + one correction token), roll back
+        (truncate slot length / release overshoot pages).
+
+        Every emitted token is the token sequential decode would have
+        produced at that position — greedy targets are the verify logits'
+        argmax, sampled targets reuse the sequential PRNG key stream — so
+        with greedy sampling the stream is bit-identical to the
+        non-speculative engine for every layout x kv_dtype (pinned by
+        tests/test_spec_decode.py), and preemption replay (which
+        teacher-forces the recorded tokens) needs no speculation-specific
+        state at all.
+        """
+        runner, stats, sched = self.runner, self.stats, self.scheduler
+        n_slots = runner.slots.n_slots
+        w = runner.spec_decode + 1
+        # paged: make each slot's verify span writable (growth + COW;
+        # may preempt victims — including, under pressure, a drafted slot)
+        if runner.cache_layout == "paged":
+            for slot in list(drafts):
+                if slot not in sched.inflight:
+                    continue  # evicted by an earlier slot's growth
+                s = runner.slots.slots[slot]
+                if s.request_id is None:
+                    continue
+                self._grow_slot_span(slot, s.length, len(drafts[slot]) + 1)
+        active = sorted(sched.inflight)
+        if not active:
+            return []
+        last_np = np.array(runner.last_tokens)  # writable copy (np.asarray of
+        # a device array is a read-only view)
+        tokens_np = np.zeros((n_slots, w), np.int32)
+        n_tok_np = np.zeros((n_slots,), np.int32)
+        lengths_np = np.asarray(
+            [s.length for s in runner.slots.slots], np.int32)
+        for slot in active:
+            d = drafts[slot]
+            tokens_np[slot, 0] = last_np[slot]
+            tokens_np[slot, 1 : 1 + len(d)] = d
+            n_tok_np[slot] = 1 + len(d)
+            # satellite invariant: live verify rows stay clear of the
+            # chunked-prefill parked-write row max_len - 1 (draft_for
+            # clamps; this guards any future clamp regression)
+            assert lengths_np[slot] + n_tok_np[slot] - 1 <= runner.max_len - 2, (
+                slot, int(lengths_np[slot]), int(n_tok_np[slot]), runner.max_len)
+        # mid-prefill slots sit the round out: n_tokens 0 routes every one
+        # of their rows (KV writes) out of bounds, and nothing reads their
+        # logits — no parked-write trick needed on this path
+        t0 = time.perf_counter()
+        logits = runner.run_verify(
+            jnp.asarray(tokens_np), jnp.asarray(lengths_np), jnp.asarray(n_tok_np))
+        targets = runner.select_targets(logits, sched.inflight)
+        jax.block_until_ready(targets)
+        stats.t_decode += time.perf_counter() - t0
+        stats.decode_rounds += 1
+        stats.verify_rounds += 1
+        stats.slot_rounds += len(active)
+
+        from repro.core.sampling import accept_length
+
+        targets_np = np.asarray(targets)
+        outs: List[RequestOutput] = []
+        for slot in active:
+            req = sched.inflight[slot]
+            d = drafts[slot]
+            a = accept_length(d, targets_np[slot, : len(d)])
+            stats.draft_tokens += len(d)
+            stats.accepted_tokens += a
+            # emit the confirmed prefix plus the correction/bonus token;
+            # the output processor owns stop/budget truncation, so the
+            # ACTUAL delta (and the state advance below) may be shorter
+            emitted = [int(t) for t in targets_np[slot, : a + 1]]
+            out = self.out_proc.process_tokens(req, emitted)
+            e = len(out.new_token_ids)
+            s = runner.slots.slots[slot]
+            s.length += e
+            s.generated += e
+            stats.decode_tokens += e
+            last_np[slot] = out.new_token_ids[-1]
+            if out.finished:
+                sched.inflight.pop(slot)
+                self.finished[req.request_id] = req
+                runner.release(slot)
+            else:
+                # roll rejected/truncated rows back: overshoot pages go
+                # home, so a failed speculation never leaks pool capacity
+                runner.rollback_overshoot(slot, s.length)
+            outs.append(out)
+        runner.last_tokens = jnp.asarray(last_np)
         return outs
 
     # -------------------------------------------------------------- metrics --

@@ -51,27 +51,73 @@ class OutputProcessor:
     """Turns raw sampled tokens into RequestOutputs; owns finish semantics."""
 
     def process_token(self, req, tok: int) -> RequestOutput:
-        req.out_tokens.append(tok)
+        return self.process_tokens(req, [tok])
+
+    def process_tokens(self, req, toks) -> RequestOutput:
+        """Append a (possibly multi-token) delta and decide finish state.
+
+        One decode round used to produce exactly one token; a speculative
+        verify round produces up to k+1 at once, and a naive per-token loop
+        would happily stream tokens PAST a stop token or past the
+        ``max_new`` budget (the block was scored before either cut was
+        known).  So the delta is truncated here, in one place: first capped
+        at the remaining budget headroom, then cut at the FIRST stop token
+        within the cap (the stop token itself is kept, matching the
+        single-token path).  A stop landing exactly on the budget boundary
+        reports ``"stop"`` — stop takes precedence over ``"length"``,
+        exactly as ``process_token`` always resolved that tie.
+        """
+        headroom = req.max_new - len(req.out_tokens)
+        kept = []
+        reason = None
+        for tok in list(toks)[: max(headroom, 0)]:
+            kept.append(int(tok))
+            if tok in req.params.stop_tokens:
+                reason = "stop"
+                break
+        req.out_tokens.extend(kept)
         now = time.perf_counter()
-        if req.first_token_t == 0.0:
+        if kept and req.first_token_t == 0.0:
             # First token for this request — or a restart whose original
             # admission predates TTFT stamping (the PR-1 bug: resumed
             # requests reported TTFT 0.0).  Never overwrite a real stamp.
             req.first_token_t = now
-        reason = None
-        if tok in req.params.stop_tokens:
-            reason = "stop"
-        elif len(req.out_tokens) >= req.max_new:
+        if reason is None and len(req.out_tokens) >= req.max_new:
             reason = "length"
         if reason is not None:
             req.finish_reason = reason
             req.done_t = now
         return RequestOutput(
             request_id=req.request_id,
-            new_token_ids=[tok],
+            new_token_ids=kept,
             token_ids=req.out_tokens,
             finished=reason is not None,
             finish_reason=reason,
+        )
+
+    @staticmethod
+    def finalize_resumed(req) -> RequestOutput:
+        """Terminal output for a replayed request that resumes EXACTLY at
+        its budget: every token was already streamed before eviction, so
+        there is nothing left to generate — but the stream still owes the
+        client a ``finished=True`` delta and the request a finish reason
+        (the pre-fix path finished it silently with ``finish_reason=None``
+        and the stream simply went dark).  The reason is reconstructed
+        from the recorded tail: ``"stop"`` if the last recorded token is a
+        stop token, else ``"length"`` (the budget ran out)."""
+        if req.finish_reason is None:
+            req.finish_reason = (
+                "stop" if req.out_tokens and req.out_tokens[-1] in req.params.stop_tokens
+                else "length"
+            )
+        if req.done_t == 0.0:
+            req.done_t = time.perf_counter()
+        return RequestOutput(
+            request_id=req.request_id,
+            new_token_ids=[],
+            token_ids=req.out_tokens,
+            finished=True,
+            finish_reason=req.finish_reason,
         )
 
     @staticmethod

@@ -373,6 +373,32 @@ class PagedKVCache:
                 return (new, pid)
         return None
 
+    def truncate_slot(self, slot: int, length: int) -> int:
+        """Speculative rollback: shrink ``slot``'s table to exactly the
+        pages covering positions ``[0, length)``, releasing the overshoot
+        pages a rejected verify block grew.  Returns how many pages were
+        released.
+
+        Only ever drops TRAILING pages, so shared prefix-cache pages (all
+        at the front of the table) and a copy-on-write fork of the page
+        holding the block's first row (always a kept position) are
+        untouched — rollback can neither leak a page (each table entry
+        holds exactly one reference, dropped here) nor corrupt a shared
+        one (rejected rows were only ever written to pages this slot
+        exclusively owns; fully-rejected trailing pages go back to the
+        pool).  The next decode append re-grows via
+        ``ensure_append_page`` as usual.
+        """
+        keep = cdiv(length, self.block_size)
+        table = self.tables[slot]
+        released = 0
+        while len(table) > keep:
+            self.pool.decref(table.pop())
+            released += 1
+        if released:
+            self._tables_dirty = True
+        return released
+
     def release_slot(self, slot: int) -> None:
         for pid in self.tables[slot]:
             self.pool.decref(pid)

@@ -1,0 +1,64 @@
+"""Prompt-lookup (n-gram) drafting for self-speculative decoding.
+
+The paper's decode engine is memory-bandwidth-bound: every decoded token
+streams the whole KV cache and weight set for ONE row of output (Eq. 5),
+while the fabric's compute sits idle.  Speculative decoding is the standard
+algorithm-side answer (AccLLM): draft ``k`` cheap candidate tokens, then
+score all ``k + 1`` positions in ONE verify pass — the KV/weight stream is
+paid once per round instead of once per token, so every accepted draft
+token is a free ride on bandwidth the round already spent.
+
+On an edge deployment there is no room for a separate draft model, so the
+drafter here is *self-speculative prompt lookup*: match the sequence's own
+trailing n-gram against its prompt + generated history and propose the
+tokens that followed the match.  Pure host-side numpy — zero device work,
+zero extra weights — and it shines exactly where decode is most painful:
+long repetitive contexts (summarization, code edits, RAG over the prompt),
+where the continuation of a repeated n-gram is very often the continuation
+the model picks anyway.
+
+The drafter only ever *proposes*; acceptance is decided by the verify
+pass against the slot's own ``SamplingParams`` (``repro.core.sampling``),
+so a bad draft costs one wasted verify column, never a wrong token.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def find_draft(context: np.ndarray, max_k: int, ngram: int) -> np.ndarray:
+    """Propose up to ``max_k`` draft tokens by prompt lookup.
+
+    Tries n-gram sizes from ``ngram`` down to 1: for each size, the
+    context's trailing n-gram is matched against every earlier position.
+    Among the matches, prefer the most recent one whose continuation can
+    supply a full ``max_k`` tokens; with no full continuation available,
+    fall back to the most recent match (recency tracks the local pattern
+    best — a period-p loop's rightmost match predicts the next period).
+
+    Returns an int32 array of length in ``[0, max_k]`` — empty when the
+    trailing n-gram never occurred before (the engine then runs the slot as
+    plain decode: one real verify column, zero drafts).
+
+    Deterministic and a pure function of ``(context, max_k, ngram)``, so a
+    preemption-restart that replays the same history re-derives the same
+    drafts — speculation adds no scheduler state that replay would have to
+    checkpoint.
+    """
+    context = np.asarray(context, np.int32)
+    n = len(context)
+    if max_k <= 0 or n < 2:
+        return np.zeros((0,), np.int32)
+    for size in range(min(ngram, n - 1), 0, -1):
+        suffix = context[n - size:]
+        # candidate starts 0 .. n-1-size: the match must end before the last
+        # position so at least one continuation token exists
+        windows = np.lib.stride_tricks.sliding_window_view(context[: n - 1], size)
+        starts = np.flatnonzero((windows == suffix[None, :]).all(axis=1))
+        if len(starts) == 0:
+            continue
+        full = starts[starts + size + max_k <= n]
+        start = int(full[-1]) if len(full) else int(starts[-1])
+        cont = context[start + size : start + size + max_k]
+        return cont.astype(np.int32)
+    return np.zeros((0,), np.int32)
