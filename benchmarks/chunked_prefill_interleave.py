@@ -31,7 +31,13 @@ import time
 
 import numpy as np
 
-from .common import KV_COLUMNS, kv_cache_columns, markdown_table, save_result
+from .common import (
+    KV_COLUMNS,
+    kv_cache_columns,
+    markdown_table,
+    save_result,
+    stats_block,
+)
 
 
 def _drive(cfg, params, *, prefill_chunk, long_len, short_len, max_len,
@@ -101,8 +107,10 @@ def _drive(cfg, params, *, prefill_chunk, long_len, short_len, max_len,
         "itl_p95_ms": 1e3 * float(np.percentile(itl, 95)),
         "itl_max_ms": 1e3 * float(itl.max()),
         "ttft_long_ms": 1e3 * ttft_long,
+        # engine-side queue wait (arrival-stamped at submit, satellite fix)
+        "queue_wait_p95_ms": 1e3 * eng.stats.queue_wait.p95,
         **kv_cache_columns(cfg, kv_dtype),
-    }, toks
+    }, toks, stats_block(eng)
 
 
 def run(tiny: bool = False) -> dict:
@@ -129,9 +137,10 @@ def run(tiny: bool = False) -> dict:
                      kv_dtype="fp")
         chunks = [None, 32, 64]
 
-    rows, toks = [], {}
+    rows, toks, snaps = [], {}, {}
     for chunk in chunks:
-        row, toks[chunk] = _drive(cfg, params, prefill_chunk=chunk, **knobs)
+        row, toks[chunk], snaps[row["prefill"]] = _drive(
+            cfg, params, prefill_chunk=chunk, **knobs)
         rows.append(row)
 
     mono, chunked = rows[0], rows[1:]
@@ -164,9 +173,10 @@ def run(tiny: bool = False) -> dict:
         ),
         "checks": checks,
         "timing_checks": timing,
+        "stats": snaps,
         "columns": ["prefill", "prefill_chunks", "decode_rounds_between_chunks",
                     "itl_p50_ms", "itl_p95_ms", "itl_max_ms", "ttft_long_ms",
-                    *KV_COLUMNS],
+                    "queue_wait_p95_ms", *KV_COLUMNS],
     }
     save_result(result)
     return result

@@ -34,6 +34,16 @@ def kv_cache_columns(cfg, kv_dtype: str = "fp") -> dict:
     }
 
 
+def stats_block(eng) -> dict:
+    """Uniform JSON-serializable engine-stats block for a benchmark result:
+    ``EngineCore.snapshot()`` / ``AsyncEngine.snapshot()`` — counters,
+    derived rates, swap/speculation aggregates, queue-wait/TTFT/ITL latency
+    summaries, and (paged) KV pool bytes.  Store it under ``result["stats"]``
+    so every serving benchmark persists the same observability surface the
+    ``/stats`` endpoint serves."""
+    return eng.snapshot()
+
+
 def load_dryrun_records() -> list[dict]:
     if not DRYRUN_DIR.exists():
         return []

@@ -36,7 +36,8 @@ def _drive(policy, cfg, params, prompts, sp, *, n_slots=4, max_new=10):
             eng.submit(pending.pop(0))
         eng.step()
     outs = {rid: r.out_tokens for rid, r in eng.finished.items()}
-    ttfts = [r.first_token_t - r.enqueue_t for r in eng.finished.values()]
+    # arrival-stamped TTFT (queue wait included), not the re-stamped enqueue_t
+    ttfts = [r.first_token_t - r.arrival_time_s for r in eng.finished.values()]
     return eng.stats, outs, float(np.mean(ttfts))
 
 

@@ -26,6 +26,7 @@ from . import (
     spec_decode,
     table1_comparison,
     table2_resources,
+    traffic_storm,
 )
 from .common import render
 
@@ -43,6 +44,7 @@ BENCHES = {
     "chunked_prefill_interleave": chunked_prefill_interleave,
     "spec_decode": spec_decode,
     "policy_compare": policy_compare,
+    "traffic_storm": traffic_storm,
     "beyond_paper": beyond_paper,
 }
 

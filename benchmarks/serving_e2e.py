@@ -17,7 +17,7 @@ from repro.configs import reduced_config
 from repro.models import get_model
 from repro.serving import EngineCore, Request
 
-from .common import save_result
+from .common import save_result, stats_block
 
 
 def _drive(mode: str, cfg, params, prompts, *, n_slots=4, max_len=96, prompt_len=24, max_new=16):
@@ -31,7 +31,7 @@ def _drive(mode: str, cfg, params, prompts, *, n_slots=4, max_len=96, prompt_len
             streamed[out.request_id].extend(out.new_token_ids)
     outs = {rid: r.out_tokens for rid, r in eng.finished.items()}
     assert streamed == outs, "streaming deltas must reassemble the outputs"
-    return eng.stats, outs
+    return eng, outs
 
 
 def run() -> dict:
@@ -42,22 +42,29 @@ def run() -> dict:
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab_size, size=24).astype(np.int32) for _ in range(6)]
 
-    stats_pd, outs_pd = _drive("pdswap", cfg, params, prompts)
-    stats_st, outs_st = _drive("static", cfg, params, prompts)
+    eng_pd, outs_pd = _drive("pdswap", cfg, params, prompts)
+    eng_st, outs_st = _drive("static", cfg, params, prompts)
+    stats_pd, stats_st = eng_pd.stats, eng_st.stats
 
     same = all(outs_pd[k] == outs_st[k] for k in outs_pd)
     hidden = [t.hidden_fraction for t in stats_pd.swap_timings if t.t_relayout or t.t_total_overlapped]
-    rows = [
-        {"engine": "pdswap", "decode_tokens": stats_pd.decode_tokens,
-         "decode_tok/s (CPU)": stats_pd.decode_tput(), "swaps": stats_pd.swaps,
-         "prefill_s": stats_pd.t_prefill},
-        {"engine": "static", "decode_tokens": stats_st.decode_tokens,
-         "decode_tok/s (CPU)": stats_st.decode_tput(), "swaps": stats_st.swaps,
-         "prefill_s": stats_st.t_prefill},
-    ]
+
+    def _row(engine, stats):
+        return {"engine": engine, "decode_tokens": stats.decode_tokens,
+                "decode_tok/s (CPU)": stats.decode_tput(), "swaps": stats.swaps,
+                "prefill_s": stats.t_prefill,
+                # client-visible latency aggregates (arrival-stamped)
+                "queue_wait_p95_ms": 1e3 * stats.queue_wait.p95,
+                "ttft_p95_ms": 1e3 * stats.ttft.p95,
+                "itl_p95_ms": 1e3 * stats.itl.p95}
+
+    rows = [_row("pdswap", stats_pd), _row("static", stats_st)]
     checks = {
         "identical greedy tokens across engines": same,
         "all requests finished (both engines)": len(outs_pd) == len(prompts) == len(outs_st),
+        "queue wait + TTFT recorded for every admission": (
+            stats_pd.queue_wait.count == len(prompts)
+            and stats_pd.ttft.count == len(prompts)),
     }
     result = {
         "name": "serving_e2e",
@@ -68,6 +75,7 @@ def run() -> dict:
             + ", ".join(f"{k}={'PASS' if v else 'FAIL'}" for k, v in checks.items())
         ),
         "checks": checks,
+        "stats": {"pdswap": stats_block(eng_pd), "static": stats_block(eng_st)},
     }
     save_result(result)
     return result

@@ -1,0 +1,396 @@
+"""Traffic storm: SLO goodput of the async front-end across swap policies.
+
+The serving question the static benchmarks cannot answer: under *real*
+arrival pressure — a seeded Poisson baseline and a bursty square-wave storm
+(``repro.serving.arrivals``), mixed prompt lengths, two tenants on weighted
+fair queueing — which prefill<->decode swap policy keeps the most requests
+inside their latency SLO?
+
+Each (trace x policy) cell drives the SAME seeded trace through a fresh
+``AsyncEngine`` (bounded admission queue, streaming consumers) and measures
+client-side, off the stream:
+
+* **TTFT** — submit to first streamed token (queue wait included);
+* **per-request ITL p95** — gaps between that request's deltas;
+* **goodput under SLO** — the fraction of *offered* requests that finished
+  AND met both targets (rejected and late requests both count against it);
+* queue-wait distribution (engine aggregates) and the rejection rate.
+
+SLO targets are calibrated from this host's measured decode-round and
+prefill cost (a throwaway warmup engine), so the same benchmark is
+meaningful on any machine: the targets sit between "trivially satisfied"
+and "unreachable" for the policies under test.
+
+Policies compared on identical traces:
+
+* ``drain`` (paper): flip to prefill the moment work is queued — best
+  TTFT, but every storm burst stalls all decode streams (ITL spikes);
+* ``swap-aware``: amortize the modeled swap cost against queue depth —
+  fewer fabric flips, but the TTFT clock keeps running while it defers;
+* ``slo-aware``: steer the flip from *observed* p95 TTFT/ITL against the
+  targets, and shed queue heads that can no longer meet the TTFT deadline
+  (the PR's closed loop — a doomed request counts against goodput served
+  or dropped, but serving it dooms its followers too).
+
+Greedy tokens are slot- and policy-invariant, so every request completed by
+multiple policies must stream identical tokens — checked.  Wall-clock
+checks (the goodput ordering) are reported but never gate CI; structural
+checks do.
+
+Run directly (``python -m benchmarks.traffic_storm [--tiny]``) or via
+``benchmarks.run``.
+"""
+from __future__ import annotations
+
+import asyncio
+import sys
+import time
+
+import numpy as np
+
+from .common import markdown_table, save_result, stats_block
+
+TENANTS = (("interactive", 2.0, 0.5), ("batch", 1.0, 0.5))
+
+
+def _calibrate(cfg, params, knobs, *, max_new, prompt_lens):
+    """Measure this host's steady-state serving costs on throwaway engines:
+    decode-round and prefill-chunk cost from a warm synchronous pass (kernel
+    costs, for the SLO targets), and the end-to-end service rate from an
+    async saturation probe — the storm replays through ``AsyncEngine``, so
+    the rate that decides whether an arrival trace overloads it must include
+    the front-end's own step/streaming overhead, not just kernel time (a
+    sync-measured rate overestimates by ~1.5x and turns every 'moderate'
+    burst into a drowning)."""
+    from repro.serving import AsyncEngine, EngineCore, Request
+
+    eng = EngineCore(cfg, params, swap_policy="drain", **knobs)
+    lo, hi = 8, knobs["prompt_len"]
+
+    def _batch(tag):
+        # fresh identically-seeded rng per pass: the warm pass hits exactly
+        # the shape buckets (page counts) the measured pass will hit
+        rng = np.random.default_rng(99)
+        for i in range(knobs["n_slots"]):
+            n = int(rng.integers(lo, hi + 1))
+            eng.submit(Request(f"{tag}{i}",
+                               rng.integers(0, cfg.vocab_size, n).astype(np.int32),
+                               max_new=max_new))
+        eng.run()
+
+    _batch("warm")  # first pass pays XLA compilation
+    eng.reset_stats()
+    _batch("cal")  # second pass measures steady-state kernel costs
+    stats = eng.stats
+    round_cost = stats.t_decode / max(stats.decode_rounds, 1)
+    # chunked: the prefill quantum is one chunk; monolithic: one burst
+    quanta = stats.prefill_chunks or stats.prefill_bursts
+    prefill_cost = stats.t_prefill / max(quanta, 1)
+
+    async def probe():
+        core = EngineCore(cfg, params, swap_policy="drain", **knobs)
+        bs = knobs["block_size"]
+        wrng = np.random.default_rng(55)
+        for j, pages in enumerate(sorted({-(-p // bs) for p in prompt_lens})):
+            n = min(pages * bs, knobs["prompt_len"])
+            core.submit(Request(
+                f"w{j}", wrng.integers(0, cfg.vocab_size, n).astype(np.int32),
+                max_new=2))
+        core.run()
+        core.reset_stats()
+        rng = np.random.default_rng(99)
+        n_req = 6 * knobs["n_slots"]
+        async with AsyncEngine(core, max_queue=n_req) as aeng:
+            t0 = time.perf_counter()
+            tasks = []
+            for i in range(n_req):
+                plen = prompt_lens[i % len(prompt_lens)]
+                stream = await aeng.submit(
+                    rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+                    request_id=f"p{i}", max_new=max_new)
+                tasks.append(asyncio.create_task(_consume(stream, t0)))
+            gaps = []
+            for t in tasks:
+                gaps.extend((await t)["gaps"])
+            rate = n_req / max(time.perf_counter() - t0, 1e-3)
+            return rate, float(np.median(gaps)) if gaps else round_cost
+
+    # svc: requests/s through the real front-end; gap_p50: the median
+    # CLIENT-visible inter-token gap under a saturated pipeline — the same
+    # layer the goodput check measures, so it already includes step and
+    # streaming overhead kernel costs alone miss
+    svc, gap_p50 = asyncio.run(probe())
+    return round_cost, prefill_cost, svc, gap_p50
+
+
+async def _consume(stream, t_submit):
+    """Drain one request's stream, stamping client-side latencies."""
+    ttft, prev, gaps, toks, reason = None, None, [], [], None
+    async for out in stream:
+        now = time.perf_counter()
+        if out.new_token_ids:
+            if prev is None:
+                ttft = now - t_submit
+            else:
+                gaps.append(now - prev)
+            prev = now
+            toks.extend(out.new_token_ids)
+        if out.finished:
+            reason = out.finish_reason
+    return {"ttft_s": ttft, "gaps": gaps, "tokens": toks, "finish_reason": reason}
+
+
+def _drive(policy, cfg, params, trace, knobs, *, max_new, max_queue, prompt_seed):
+    """One (trace x policy) cell: replay the trace against a fresh engine."""
+    from repro.serving import AdmissionRejected, AsyncEngine, EngineCore, Request
+
+    async def go():
+        core = EngineCore(cfg, params, swap_policy=policy, **knobs)
+        # warm this engine's XLA programs before the trace clock starts, so
+        # the storm measures serving, not compilation: one warmup prompt
+        # per prefill shape bucket (page count) the trace will hit
+        bs = knobs["block_size"]
+        buckets = sorted({-(-a.prompt_len // bs) for a in trace})
+        wrng = np.random.default_rng(55)
+        for j, pages in enumerate(buckets):
+            n = min(pages * bs, knobs["prompt_len"])
+            core.submit(Request(
+                f"warm{j}",
+                wrng.integers(0, cfg.vocab_size, n).astype(np.int32),
+                max_new=2))
+            core.run()  # one at a time: a multi-second first-bucket compile
+            # must not age queued warmups past a shedding policy's deadline
+        core.reset_stats()
+        rng = np.random.default_rng(prompt_seed)  # prompt CONTENT: same per policy
+        prompts = [rng.integers(0, cfg.vocab_size, a.prompt_len).astype(np.int32)
+                   for a in trace]
+        rejected, consumers, results = 0, {}, {}
+        async with AsyncEngine(core, max_queue=max_queue) as eng:
+            t0 = time.perf_counter()
+            for i, a in enumerate(trace):
+                delay = a.t - (time.perf_counter() - t0)
+                if delay > 0:
+                    await asyncio.sleep(delay)
+                t_submit = time.perf_counter()
+                try:
+                    stream = await eng.submit(
+                        prompts[i], request_id=f"r{i}", max_new=max_new,
+                        tenant=a.tenant, weight=a.weight)
+                except AdmissionRejected:
+                    rejected += 1
+                    continue
+                consumers[f"r{i}"] = asyncio.create_task(_consume(stream, t_submit))
+            for rid, task in consumers.items():
+                results[rid] = await task
+            snap = stats_block(eng)
+        return results, rejected, snap
+
+    return asyncio.run(go())
+
+
+def _summarize(trace_name, policy, results, rejected, snap, slo, offered):
+    completed = {rid: r for rid, r in results.items()
+                 if r["finish_reason"] in ("stop", "length")}
+    shed = sum(1 for r in results.values() if r["finish_reason"] == "shed")
+    good = 0
+    for r in completed.values():
+        itl95 = float(np.percentile(r["gaps"], 95)) if r["gaps"] else 0.0
+        if r["ttft_s"] is not None and r["ttft_s"] <= slo.ttft_target_s \
+                and itl95 <= slo.itl_target_s:
+            good += 1
+    ttfts = [r["ttft_s"] for r in completed.values() if r["ttft_s"] is not None]
+    gaps = [g for r in completed.values() for g in r["gaps"]]
+    qw = snap["queue_wait_s"]
+    return {
+        "trace": trace_name,
+        "policy": policy,
+        "offered": offered,
+        "rejected": rejected,
+        "shed": shed,
+        "completed": len(completed),
+        "goodput_slo_pct": 100.0 * good / offered,
+        "reject_pct": 100.0 * rejected / offered,
+        "ttft_p95_ms": 1e3 * float(np.percentile(ttfts, 95)) if ttfts else 0.0,
+        "itl_p95_ms": 1e3 * float(np.percentile(gaps, 95)) if gaps else 0.0,
+        "queue_wait_p50_ms": 1e3 * qw["p50"],
+        "queue_wait_p95_ms": 1e3 * qw["p95"],
+        "swaps": snap["swaps"],
+        "prefill_bursts": snap["prefill_bursts"],
+    }
+
+
+def run(tiny: bool = False) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import reduced_config
+    from repro.models import get_model
+    from repro.serving.arrivals import make_trace
+
+    # tiny (CI smoke) keeps the model minimal; full scale uses a model big
+    # enough that kernel time dominates per-step dispatch overhead — with a
+    # too-small model the calibrated SLO targets describe kernel costs while
+    # the observed gaps are mostly Python/asyncio overhead, and every policy
+    # blurs together
+    if tiny:
+        cfg = reduced_config("bitnet-730m", num_layers=3, d_model=128,
+                             vocab_size=512, num_heads=4, num_kv_heads=2)
+    else:
+        cfg = reduced_config("bitnet-730m", num_layers=4, d_model=256,
+                             vocab_size=512, num_heads=4, num_kv_heads=2)
+    api = get_model(cfg)
+    params = api.init(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+
+    # chunked prefill, PREFILL-HEAVY traffic (long prompts, short
+    # generations — the paper's edge regime: summarization / RAG): the
+    # regime where the policies actually differ.  Per step the engine runs
+    # `quanta` chunk(s) plus one decode round; with long prompts the fixed
+    # decode round is pure queue-aging overhead during a storm, so the
+    # slo-aware policy's widened quanta drain the prefill backlog ~2x
+    # faster than the static policies' one-chunk steps.  (Decode-heavy
+    # traffic is the degenerate case: prefill is a sliver of engine time,
+    # no quanta choice can move TTFT, and every policy converges.)
+    if tiny:
+        knobs = dict(n_slots=4, max_len=96, prompt_len=32, cache_layout="paged",
+                     block_size=16, num_blocks=64, prefill_chunk=16)
+        max_new, n, max_queue = 6, 10, 8
+        prompt_lens = (8, 32)
+    else:
+        knobs = dict(n_slots=4, max_len=128, prompt_len=112, cache_layout="paged",
+                     block_size=16, num_blocks=48, prefill_chunk=16)
+        max_new, n, max_queue = 8, 96, 12
+        prompt_lens = (48, 112)
+
+    from repro.serving.slo import SLOConfig
+
+    round_cost, prefill_cost, svc, gap_p50 = _calibrate(
+        cfg, params, knobs, max_new=max_new, prompt_lens=prompt_lens)
+    # SLO targets between "trivially satisfied" and "unreachable":
+    # * ITL — twice the median client-visible gap of a saturated pipeline:
+    #   a bounded chunk quantum between two deltas passes; a decode
+    #   stalled behind an unbounded prefill run does not (calibrated at
+    #   the client layer, where the goodput check measures);
+    # * TTFT — the prompt's own chunks plus a partial admission queue's
+    #   drain time; violated when a policy lets the queue head age or the
+    #   prefill backlog build.
+    chunks_per_prompt = -(-knobs["prompt_len"] // knobs["prefill_chunk"])
+    slo = SLOConfig(
+        ttft_target_s=max(0.08, 2.0 * chunks_per_prompt * prefill_cost
+                          + 0.4 * max_queue / svc),
+        itl_target_s=max(0.004, 2.0 * gap_p50),
+    )
+
+    # arrival rates relative to this host's measured end-to-end service
+    # rate, so the storm is a storm everywhere: the burst phase offers
+    # ~1.6x what the engine can serve — deep enough that a
+    # run-every-request policy queues each burst's arrivals far past the
+    # TTFT target (serving doomed requests dooms their followers too),
+    # which is exactly the regime deadline shedding converts into goodput;
+    # the base phase leaves recovery room, and the period is chosen so the
+    # trace spans ~3 full storm cycles (not one long base phase the
+    # bursts never interrupt)
+    base_rate = max(0.5, 0.4 * svc)
+    burst_rate = max(2.0, 1.6 * svc)
+    period_s = max(0.2, n / ((base_rate + burst_rate) / 2.0) / 3.0)
+    traces = {
+        "poisson": make_trace(n, kind="poisson", rate=base_rate, seed=7,
+                              prompt_lens=prompt_lens, tenants=TENANTS),
+        "bursty": make_trace(n, kind="bursty", rate=base_rate,
+                             burst_rate=burst_rate, period_s=period_s, seed=7,
+                             prompt_lens=prompt_lens, tenants=TENANTS),
+    }
+
+    # the slo-aware policy must chase the CALIBRATED targets (a policy
+    # steering toward the library defaults on a host 100x faster or slower
+    # is chasing the wrong SLO)
+    def _make_policy(name):
+        if name == "slo-aware":
+            from repro.serving.slo import SLOAwareSwapPolicy
+            return SLOAwareSwapPolicy(slo)
+        return name
+
+    policies = ["drain", "swap-aware", "slo-aware"]
+    rows, tokens = [], {}
+    for tname, trace in traces.items():
+        for policy in policies:
+            results, rejected, snap = _drive(
+                _make_policy(policy), cfg, params, trace, knobs,
+                max_new=max_new, max_queue=max_queue, prompt_seed=3)
+            rows.append(_summarize(tname, policy, results, rejected, snap,
+                                   slo, offered=len(trace)))
+            tokens[(tname, policy)] = {
+                rid: r["tokens"] for rid, r in results.items()
+                if r["finish_reason"] in ("stop", "length")}
+
+    # greedy tokens must agree wherever two policies completed the same
+    # request of the same trace (admission sets may differ under rejection)
+    identical = True
+    for tname in traces:
+        sets = [tokens[(tname, p)] for p in policies]
+        for rid in set(sets[0]) & set(sets[1]) & set(sets[2]):
+            if not (sets[0][rid] == sets[1][rid] == sets[2][rid]):
+                identical = False
+
+    by = {(r["trace"], r["policy"]): r for r in rows}
+    checks = {
+        "greedy tokens identical across policies (common completions)": identical,
+        "every offered request accounted (completed+rejected+shed <= offered)": all(
+            r["completed"] + r["rejected"] + r["shed"] <= r["offered"]
+            for r in rows),
+        "queue wait recorded for admitted requests": all(
+            r["queue_wait_p95_ms"] >= 0.0 for r in rows),
+    }
+    timing = {
+        "slo-aware goodput >= drain on bursty trace (informational)": (
+            by[("bursty", "slo-aware")]["goodput_slo_pct"]
+            >= by[("bursty", "drain")]["goodput_slo_pct"]),
+        "slo-aware goodput >= swap-aware on bursty trace (informational)": (
+            by[("bursty", "slo-aware")]["goodput_slo_pct"]
+            >= by[("bursty", "swap-aware")]["goodput_slo_pct"]),
+    }
+    result = {
+        "name": "traffic_storm" + ("_tiny" if tiny else ""),
+        "rows": rows,
+        "slo": {"ttft_target_ms": 1e3 * slo.ttft_target_s,
+                "itl_target_ms": 1e3 * slo.itl_target_s,
+                "measured_round_cost_ms": 1e3 * round_cost,
+                "measured_prefill_cost_ms": 1e3 * prefill_cost,
+                "measured_service_rate_rps": svc},
+        "notes": (
+            f"Async front-end under seeded Poisson ({base_rate:.1f} req/s) and "
+            f"bursty square-wave (base {base_rate:.1f}, burst {burst_rate:.1f} "
+            f"req/s) arrival traces, two tenants on weighted fair queueing, "
+            f"bounded admission queue ({max_queue}).  SLO calibrated to this "
+            f"host: TTFT <= {1e3*slo.ttft_target_s:.0f} ms, per-request ITL "
+            f"p95 <= {1e3*slo.itl_target_s:.1f} ms.  Goodput = completed "
+            "within SLO / offered (rejections and sheds count against it; "
+            "only the slo-aware policy sheds queue heads already past the "
+            "TTFT deadline, spending their capacity on requests that can "
+            "still meet it).  Claim checks: " + ", ".join(
+                f"{k}={'PASS' if v else 'FAIL'}"
+                for k, v in {**checks, **timing}.items())
+        ),
+        "checks": checks,
+        "timing_checks": timing,
+        "columns": ["trace", "policy", "offered", "rejected", "shed",
+                    "completed",
+                    "goodput_slo_pct", "reject_pct", "ttft_p95_ms", "itl_p95_ms",
+                    "queue_wait_p50_ms", "queue_wait_p95_ms", "swaps",
+                    "prefill_bursts"],
+    }
+    save_result(result)
+    return result
+
+
+if __name__ == "__main__":
+    import argparse
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--tiny", action="store_true",
+                   help="CI smoke mode: short trace, structural checks only")
+    args = p.parse_args()
+    res = run(tiny=args.tiny)
+    print(markdown_table(res["rows"], res.get("columns")))
+    print()
+    print(res["notes"])
+    sys.exit(0 if all(res["checks"].values()) else 1)

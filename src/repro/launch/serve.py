@@ -7,13 +7,27 @@
 Drives ``EngineCore.step()`` (the paper's single-RP temporal logic swap, or
 the static TeLLMe-style baseline with --mode static) with per-request
 ``SamplingParams`` and a pluggable ``SwapPolicy``, and prints per-phase
-stats including the measured overlap of the swap and per-request TTFT.
-Requests arrive staggered (``--arrival-every N`` submits one request every N
-steps) so the swap policy actually has transitions to schedule.
+stats including the measured overlap of the swap and per-request TTFT /
+queue wait.  Requests arrive on a seeded Poisson process
+(``--arrival-rate R`` requests/s, via ``repro.serving.arrivals``) or on the
+legacy step grid (``--arrival-every N`` submits one request every N steps)
+so the swap policy actually has transitions to schedule.
+
+With ``--serve`` the same engine runs behind an HTTP front-end on stdlib
+asyncio streams (no web framework): ``POST /generate`` streams each token
+delta as a server-sent event, ``GET /stats`` returns the engine snapshot as
+JSON, and saturation surfaces as ``429`` with the admission-reject reason.
+
+    python -m repro.launch.serve --arch smollm-135m --reduced --serve --port 8035
+    curl -N -d '{"prompt": [3, 1, 4, 1, 5, 9], "max_new": 8}' \
+        http://127.0.0.1:8035/generate
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
+import json
+import time
 
 import jax
 import jax.numpy as jnp
@@ -21,8 +35,134 @@ import numpy as np
 
 from repro.configs import ALL_ARCHS, get_config, reduced_config
 from repro.models import get_model
-from repro.serving import EngineCore, Request, SamplingParams
+from repro.serving import (
+    AdmissionRejected,
+    AsyncEngine,
+    EngineCore,
+    Request,
+    SamplingParams,
+)
+from repro.serving.arrivals import poisson_times
 from repro.serving.policy import POLICIES
+
+
+def _http_payload(writer, status: str, body: bytes,
+                  ctype: str = "application/json") -> None:
+    writer.write(
+        f"HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\n"
+        f"Content-Length: {len(body)}\r\nConnection: close\r\n\r\n".encode()
+        + body)
+
+
+async def handle_connection(eng: AsyncEngine, default_params: SamplingParams,
+                            reader: asyncio.StreamReader,
+                            writer: asyncio.StreamWriter) -> None:
+    """One HTTP exchange on raw asyncio streams (no web framework).
+
+    ``POST /generate`` takes a JSON body — ``prompt`` (token ids, required),
+    optional ``max_new``, ``tenant``, ``weight``, ``temperature``, ``top_k``,
+    ``top_p``, ``seed``, ``stop_tokens`` — and streams one server-sent event
+    per ``RequestOutput`` delta.  A saturated admission queue answers ``429``
+    with the reject reason instead of hanging the client.  ``GET /stats``
+    returns ``AsyncEngine.snapshot()``.
+    """
+    try:
+        request_line = await reader.readline()
+        parts = request_line.decode("latin-1").split()
+        if len(parts) < 2:
+            return
+        method, path = parts[0], parts[1]
+        headers = {}
+        while True:
+            line = await reader.readline()
+            if line in (b"\r\n", b"\n", b""):
+                break
+            key, _, val = line.decode("latin-1").partition(":")
+            headers[key.strip().lower()] = val.strip()
+        body = b""
+        length = int(headers.get("content-length", "0") or 0)
+        if length:
+            body = await reader.readexactly(length)
+
+        if method == "GET" and path == "/stats":
+            _http_payload(writer, "200 OK", json.dumps(eng.snapshot()).encode())
+        elif method == "POST" and path == "/generate":
+            try:
+                spec = json.loads(body or b"{}")
+                prompt = np.asarray(spec["prompt"], np.int32)
+            except (ValueError, KeyError, TypeError) as e:
+                _http_payload(writer, "400 Bad Request",
+                              json.dumps({"error": f"bad request body: {e}"}).encode())
+                return
+            sp = default_params
+            if any(k in spec for k in
+                   ("temperature", "top_k", "top_p", "seed", "stop_tokens")):
+                sp = SamplingParams(
+                    temperature=float(spec.get("temperature", default_params.temperature)),
+                    top_k=int(spec.get("top_k", default_params.top_k)),
+                    top_p=float(spec.get("top_p", default_params.top_p)),
+                    seed=int(spec.get("seed", default_params.seed or 0)),
+                    stop_tokens=tuple(spec.get("stop_tokens",
+                                               default_params.stop_tokens)),
+                )
+            try:
+                stream = await eng.submit(
+                    prompt, sp,
+                    request_id=spec.get("request_id"),
+                    max_new=spec.get("max_new"),
+                    tenant=str(spec.get("tenant", "default")),
+                    weight=float(spec.get("weight", 1.0)),
+                )
+            except AdmissionRejected as e:
+                _http_payload(writer, "429 Too Many Requests",
+                              json.dumps({"error": e.reason}).encode())
+                return
+            writer.write(b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n"
+                         b"Cache-Control: no-cache\r\nConnection: close\r\n\r\n")
+            await writer.drain()
+            async for out in stream:
+                event = {
+                    "request_id": out.request_id,
+                    "new_token_ids": list(out.new_token_ids),
+                    "finished": out.finished,
+                    "finish_reason": out.finish_reason,
+                }
+                writer.write(b"data: " + json.dumps(event).encode() + b"\n\n")
+                await writer.drain()
+        else:
+            _http_payload(writer, "404 Not Found",
+                          json.dumps({"error": f"no route {method} {path}"}).encode())
+    except (ConnectionResetError, asyncio.IncompleteReadError):
+        pass  # client went away mid-exchange; the engine keeps its own state
+    finally:
+        try:
+            await writer.drain()
+            writer.close()
+            await writer.wait_closed()
+        except (ConnectionResetError, BrokenPipeError):
+            pass
+
+
+async def serve_http(core: EngineCore, default_params: SamplingParams,
+                     host: str, port: int, *, max_queue: int = 64,
+                     ready: "asyncio.Event | None" = None) -> int:
+    """Run the engine behind the asyncio-streams HTTP front-end until
+    cancelled.  ``ready`` (tests) is set once the socket is listening."""
+    async with AsyncEngine(core, max_queue=max_queue) as eng:
+        server = await asyncio.start_server(
+            lambda r, w: handle_connection(eng, default_params, r, w),
+            host, port)
+        bound = server.sockets[0].getsockname()
+        print(f"serving on http://{bound[0]}:{bound[1]}  "
+              f"(POST /generate streams SSE, GET /stats)")
+        if ready is not None:
+            ready.set()
+        try:
+            async with server:
+                await server.serve_forever()
+        except (KeyboardInterrupt, asyncio.CancelledError):
+            pass
+    return 0
 
 
 def main(argv=None) -> int:
@@ -66,7 +206,21 @@ def main(argv=None) -> int:
     p.add_argument("--swap-policy", default="drain", choices=sorted(POLICIES),
                    help="prefill<->decode transition policy (paper: drain)")
     p.add_argument("--arrival-every", type=int, default=0,
-                   help="submit one request every N steps (0 = all up front)")
+                   help="submit one request every N steps (0 = all up front; "
+                        "ignored when --arrival-rate is set)")
+    p.add_argument("--arrival-rate", type=float, default=0.0,
+                   help="seeded Poisson arrivals at R requests/s wall clock "
+                        "(0 = use --arrival-every)")
+    # --- HTTP/SSE server mode ---
+    p.add_argument("--serve", action="store_true",
+                   help="run as an HTTP server instead of a batch drive: "
+                        "POST /generate streams SSE token deltas, GET /stats "
+                        "returns the engine snapshot")
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=int, default=8035)
+    p.add_argument("--max-queue", type=int, default=64,
+                   help="server mode: admission backlog bound before "
+                        "submits are rejected with 429")
     p.add_argument("--temperature", type=float, default=0.0,
                    help="sampling temperature (0 = greedy, the paper setting)")
     p.add_argument("--top-k", type=int, default=0, help="top-k truncation (0 = off)")
@@ -91,6 +245,13 @@ def main(argv=None) -> int:
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p, seed=args.seed,
                         stop_tokens=tuple(args.stop_token or ()))
+    if args.serve:
+        try:
+            return asyncio.run(serve_http(eng, sp, args.host, args.port,
+                                          max_queue=args.max_queue))
+        except KeyboardInterrupt:
+            return 0
+
     rng = np.random.default_rng(args.seed)
     ragged_lo = max(1, min(4, args.prompt_len))  # keep low < high for tiny prompt-len
     pending = []
@@ -99,16 +260,34 @@ def main(argv=None) -> int:
         prompt = rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
         pending.append(Request(f"req-{i}", prompt, max_new=args.max_new, params=sp))
 
-    if args.arrival_every <= 0:
-        for r in pending:
-            eng.submit(r)
+    if args.arrival_rate > 0.0:
+        # seeded Poisson arrivals in wall-clock time: submit each request
+        # once its sampled arrival instant has passed, sleeping only when
+        # the engine is otherwise idle
+        times = poisson_times(args.arrival_rate, len(pending),
+                              np.random.default_rng(args.seed + 1))
+        arrivals = list(zip(times.tolist(), pending))
         pending = []
-    step = 0
-    while eng.has_unfinished() or pending:
-        step += 1
-        if pending and (step - 1) % args.arrival_every == 0:
-            eng.submit(pending.pop(0))
-        eng.step()
+        t0 = time.perf_counter()
+        while eng.has_unfinished() or arrivals:
+            now = time.perf_counter() - t0
+            while arrivals and arrivals[0][0] <= now:
+                eng.submit(arrivals.pop(0)[1])
+            if eng.has_unfinished():
+                eng.step()
+            elif arrivals:
+                time.sleep(max(0.0, arrivals[0][0] - (time.perf_counter() - t0)))
+    else:
+        if args.arrival_every <= 0:
+            for r in pending:
+                eng.submit(r)
+            pending = []
+        step = 0
+        while eng.has_unfinished() or pending:
+            step += 1
+            if pending and (step - 1) % args.arrival_every == 0:
+                eng.submit(pending.pop(0))
+            eng.step()
     stats = eng.stats
 
     sampled = "greedy" if sp.greedy else (
@@ -130,10 +309,19 @@ def main(argv=None) -> int:
               f"({100*stats.acceptance_rate():.0f}%), "
               f"{stats.tokens_per_round():.2f} tokens/round over "
               f"{stats.verify_rounds} verify rounds")
-    ttfts = [r.first_token_t - r.enqueue_t for r in eng.finished.values()]
+    # client-visible TTFT: arrival (submit) to first token, queueing included
+    ttfts = [r.first_token_t - r.arrival_time_s
+             for r in eng.finished.values() if r.first_token_t]
     if ttfts:
         print(f"  TTFT              : mean {1e3*float(np.mean(ttfts)):.1f} ms, "
               f"p max {1e3*float(np.max(ttfts)):.1f} ms")
+    if stats.queue_wait.count:
+        print(f"  queue wait        : p50 {1e3*stats.queue_wait.p50:.1f} ms, "
+              f"p95 {1e3*stats.queue_wait.p95:.1f} ms over "
+              f"{stats.queue_wait.count} admissions")
+    if stats.itl.count:
+        print(f"  ITL               : p50 {1e3*stats.itl.p50:.1f} ms, "
+              f"p95 {1e3*stats.itl.p95:.1f} ms")
     reasons = {}
     for r in eng.finished.values():
         reasons[r.finish_reason] = reasons.get(r.finish_reason, 0) + 1

@@ -1,5 +1,8 @@
+from repro.serving.arrivals import Arrival, bursty_times, make_trace, poisson_times
+from repro.serving.async_engine import AdmissionRejected, AsyncEngine, RequestStream
 from repro.serving.core import EngineCore, EngineStats, Request
 from repro.serving.engine import ServingEngine
+from repro.serving.fair_queue import WeightedFairQueue
 from repro.serving.outputs import OutputProcessor, RequestOutput
 from repro.serving.paging import BlockPool, PagedKVCache, PoolExhausted
 from repro.serving.policy import (
@@ -11,3 +14,4 @@ from repro.serving.policy import (
     make_policy,
 )
 from repro.serving.sampling import SamplingParams
+from repro.serving.slo import LatencyStat, SLOAwareSwapPolicy, SLOConfig

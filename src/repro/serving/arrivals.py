@@ -1,0 +1,107 @@
+"""Seeded arrival-trace generators for serving benchmarks and the launcher.
+
+One small module shared by ``launch.serve`` (``--arrival-rate``) and
+``benchmarks.traffic_storm``: every trace is a list of ``Arrival`` records
+(arrival time in seconds from trace start, tenant id + fair-queue weight,
+prompt length) drawn from a seeded ``numpy`` generator, so a trace is a pure
+function of its knobs and identical across runs, hosts, and the policies
+being compared on it.
+
+Two arrival processes:
+
+* ``poisson_times`` — homogeneous Poisson at ``rate`` req/s (i.i.d.
+  exponential inter-arrivals), the steady-traffic baseline.
+* ``bursty_times`` — a diurnal square wave: the rate alternates between
+  ``base_rate`` and ``burst_rate`` every half ``period_s``.  Sampled by
+  thinning (propose at the max rate, accept with probability
+  ``rate(t)/max_rate``), so it is an exact non-homogeneous Poisson process,
+  not a per-phase approximation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One request arrival in a trace."""
+
+    t: float  # seconds from trace start
+    prompt_len: int
+    tenant: str = "default"
+    weight: float = 1.0
+
+
+def poisson_times(rate: float, n: int, rng: np.random.Generator) -> np.ndarray:
+    """Arrival times of ``n`` events of a Poisson process at ``rate``/s."""
+    if rate <= 0.0:
+        raise ValueError(f"rate must be > 0, got {rate}")
+    return np.cumsum(rng.exponential(1.0 / rate, size=n))
+
+
+def bursty_times(
+    base_rate: float,
+    burst_rate: float,
+    period_s: float,
+    n: int,
+    rng: np.random.Generator,
+) -> np.ndarray:
+    """Arrival times of ``n`` events of a square-wave-rate Poisson process.
+
+    The instantaneous rate is ``base_rate`` during the first half of every
+    ``period_s`` window and ``burst_rate`` during the second half (the
+    "diurnal" storm).  Exact via thinning at ``max(base, burst)``.
+    """
+    if min(base_rate, burst_rate) <= 0.0 or period_s <= 0.0:
+        raise ValueError("rates and period_s must be > 0")
+    rmax = max(base_rate, burst_rate)
+    times = np.empty(n)
+    t, i = 0.0, 0
+    while i < n:
+        t += float(rng.exponential(1.0 / rmax))
+        r = burst_rate if (t % period_s) >= period_s / 2.0 else base_rate
+        if rng.random() <= r / rmax:
+            times[i] = t
+            i += 1
+    return times
+
+
+def make_trace(
+    n: int,
+    *,
+    kind: str = "poisson",  # "poisson" | "bursty"
+    rate: float = 10.0,
+    burst_rate: Optional[float] = None,  # bursty: high-phase rate (default 4x)
+    period_s: float = 2.0,  # bursty: square-wave period
+    seed: int = 0,
+    prompt_lens: Tuple[int, int] = (8, 32),  # uniform [lo, hi] per request
+    tenants: Sequence[Tuple[str, float, float]] = (("default", 1.0, 1.0),),
+    # (tenant id, fair-queue weight, traffic share); shares are normalized
+) -> List[Arrival]:
+    """One seeded multi-tenant trace: arrival process x prompt mix x tenants."""
+    if kind not in ("poisson", "bursty"):
+        raise ValueError(f"unknown trace kind {kind!r}")
+    rng = np.random.default_rng(seed)
+    if kind == "poisson":
+        times = poisson_times(rate, n, rng)
+    else:
+        times = bursty_times(rate, burst_rate or 4.0 * rate, period_s, n, rng)
+    lo, hi = prompt_lens
+    if not 1 <= lo <= hi:
+        raise ValueError(f"prompt_lens must satisfy 1 <= lo <= hi, got {prompt_lens}")
+    lens = rng.integers(lo, hi + 1, size=n)
+    shares = np.asarray([s for _, _, s in tenants], np.float64)
+    shares = shares / shares.sum()
+    picks = rng.choice(len(tenants), size=n, p=shares)
+    return [
+        Arrival(
+            t=float(times[i]),
+            prompt_len=int(lens[i]),
+            tenant=tenants[picks[i]][0],
+            weight=float(tenants[picks[i]][1]),
+        )
+        for i in range(n)
+    ]

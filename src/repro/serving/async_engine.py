@@ -1,0 +1,302 @@
+"""Async multi-tenant serving front-end over ``EngineCore``.
+
+``EngineCore.step()`` is a synchronous scheduling quantum; everything that
+made the repo "serving" so far drove it from a batch script.  ``AsyncEngine``
+turns it into a real front-end:
+
+* a **background step loop** — one task runs ``step()`` (on a single-worker
+  thread executor, so the event loop keeps streaming and accepting
+  connections while a quantum computes) whenever there is work, and parks on
+  an event when idle;
+* **per-request async streams** — ``submit()`` returns a ``RequestStream``;
+  ``async for out in stream`` yields each ``RequestOutput`` delta as the
+  engine produces it, ending at the terminal ``finished`` output.
+  ``generate()`` is the one-call convenience wrapper;
+* **abort** — ``stream.abort()`` / ``AsyncEngine.abort(request_id)`` cancels
+  a request wherever it lives (admission queue, wait queue, mid-prefill,
+  mid-decode, mid-spec-verify).  Aborts are serialized onto the step loop
+  (never concurrent with a running quantum); the stream receives a terminal
+  ``finish_reason="abort"`` delta and the slot + paged KV pages are
+  released;
+* **backpressure** — admission is bounded: once ``max_queue`` requests are
+  waiting (front-end pending + scheduler queue), ``submit()`` raises
+  ``AdmissionRejected`` with a machine-readable reason instead of queueing
+  unboundedly; structurally impossible requests (prompt + budget over
+  ``max_len``, trajectory over the paged pool) are rejected with the
+  scheduler's reason at submit time, before they occupy anything.
+
+Thread-safety model: the event loop owns all front-end state; the executor
+thread only ever runs ``core.step()``.  Submissions land in ``_pending`` and
+are drained into ``core.submit()`` by the loop task *between* quanta, so the
+scheduler's queue is never mutated concurrently with a step.  Because the
+engine itself is the same ``EngineCore`` stepped the same way, greedy
+outputs through ``AsyncEngine`` are bit-identical to the synchronous engine
+(pinned by tests/test_async_serving.py across layouts x kv dtypes, chunked
+prefill and speculative decoding included).
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
+from typing import AsyncIterator, Deque, Dict, Optional
+
+import numpy as np
+
+from repro.serving.core import EngineCore, Request
+from repro.serving.outputs import RequestOutput
+from repro.serving.sampling import SamplingParams
+
+
+class AdmissionRejected(RuntimeError):
+    """A submit was refused outright (backpressure or impossible request).
+
+    ``reason`` is machine-readable-ish: ``"queue_full: ..."`` for
+    backpressure, otherwise the scheduler's validation message.
+    """
+
+    def __init__(self, reason: str):
+        super().__init__(reason)
+        self.reason = reason
+
+
+@dataclasses.dataclass
+class _Stream:
+    queue: "asyncio.Queue[RequestOutput]"
+    request: Request
+
+
+class RequestStream:
+    """One request's async output stream: iterate to the terminal delta."""
+
+    def __init__(self, engine: "AsyncEngine", request_id: str,
+                 queue: "asyncio.Queue[RequestOutput]"):
+        self.engine = engine
+        self.request_id = request_id
+        self._q = queue
+        self._done = False
+
+    def __aiter__(self) -> "RequestStream":
+        return self
+
+    async def __anext__(self) -> RequestOutput:
+        if self._done:
+            raise StopAsyncIteration
+        out = await self._q.get()
+        if out.finished:
+            self._done = True
+        return out
+
+    async def abort(self) -> None:
+        await self.engine.abort(self.request_id)
+
+
+class AsyncEngine:
+    """Async front-end: background step loop + per-request output streams."""
+
+    def __init__(self, core: EngineCore, *, max_queue: int = 64):
+        if max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        self.core = core
+        self.max_queue = max_queue
+        self._pending: Deque[Request] = deque()  # submitted, not yet in core
+        self._streams: Dict[str, _Stream] = {}
+        self._aborts: Deque[str] = deque()
+        self._wake = asyncio.Event()
+        self._task: Optional[asyncio.Task] = None
+        self._closed = False
+        self._exec = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="engine-step")
+        self._seq = 0
+        # backpressure accounting (snapshot()-style counters)
+        self.accepted = 0
+        self.rejected = 0
+        self.reject_reasons: Dict[str, int] = {}
+
+    # ------------------------------------------------------------ lifecycle --
+
+    def start(self) -> "AsyncEngine":
+        """Start the step loop on the running event loop (idempotent)."""
+        if self._task is None or self._task.done():
+            self._task = asyncio.get_running_loop().create_task(self._run())
+        return self
+
+    async def __aenter__(self) -> "AsyncEngine":
+        return self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.shutdown()
+
+    async def shutdown(self) -> None:
+        """Stop the loop.  In-flight requests stop advancing; their streams
+        receive a terminal abort delta so no reader hangs."""
+        self._closed = True
+        self._wake.set()
+        if self._task is not None:
+            await self._task
+            self._task = None
+        for rid in list(self._streams):
+            out = self.core.abort(rid)
+            if out is None:  # still in the front-end pending queue
+                stream = self._streams[rid]
+                out = self.core.out_proc.finalize_aborted(stream.request)
+            self._route(out)
+        self._exec.shutdown(wait=True)
+
+    # ------------------------------------------------------------ admission --
+
+    def _reject(self, reason: str) -> None:
+        self.rejected += 1
+        key = reason.split(":", 1)[0]
+        self.reject_reasons[key] = self.reject_reasons.get(key, 0) + 1
+        raise AdmissionRejected(reason)
+
+    def _backlog(self) -> int:
+        return len(self._pending) + len(self.core.scheduler.queue)
+
+    async def submit(
+        self,
+        prompt,
+        params: Optional[SamplingParams] = None,
+        *,
+        request_id: Optional[str] = None,
+        max_new: Optional[int] = None,
+        tenant: str = "default",
+        weight: float = 1.0,
+        priority: int = 0,
+    ) -> RequestStream:
+        """Admit one request and return its output stream.
+
+        Raises ``AdmissionRejected`` instead of queueing when the wait
+        backlog is at ``max_queue`` (the bounded-queue backpressure that
+        stands in for the saturated paged pool upstream of it) or when the
+        request can never be served (scheduler validation).
+        """
+        if self._closed:
+            raise AdmissionRejected("shutdown: engine is closed")
+        if self._backlog() >= self.max_queue:
+            self._reject(
+                f"queue_full: {self._backlog()} requests already waiting "
+                f"(max_queue={self.max_queue}); retry with backoff")
+        self._seq += 1
+        rid = request_id or f"areq-{self._seq}"
+        if rid in self._streams or rid in self.core.finished:
+            self._reject(f"duplicate_id: request id {rid!r} already in use")
+        prompt = np.asarray(prompt, np.int32)
+        if max_new is None:
+            if params is not None and params.max_tokens is not None:
+                max_new = params.max_tokens  # validate() applies the override
+            else:
+                # same unbudgeted default as EngineCore.generate(): the full
+                # slot headroom, clamped to what the paged pool can hold
+                runner = self.core.runner
+                max_new = runner.max_len - len(prompt)
+                if runner.cache_layout == "paged":
+                    pool_tokens = runner.paged.num_blocks * runner.block_size
+                    max_new = min(max_new, pool_tokens - len(prompt) + 1)
+                max_new = max(1, max_new)
+        req = Request(
+            rid, prompt, max_new=max_new,
+            priority=priority, params=params or SamplingParams(),
+            tenant=tenant, weight=weight,
+        )
+        req.arrival_time_s = time.perf_counter()  # client-visible arrival:
+        # stamped HERE, before any queueing — TTFT includes the wait
+        try:
+            # pure host arithmetic over engine constants: safe while a step
+            # runs, and it rejects impossible requests before they queue
+            self.core.scheduler.validate(req)
+        except ValueError as e:
+            self._reject(f"invalid: {e}")
+        q: asyncio.Queue = asyncio.Queue()
+        self._streams[rid] = _Stream(q, req)
+        self._pending.append(req)  # the loop drains between quanta
+        self._wake.set()
+        return RequestStream(self, rid, q)
+
+    async def generate(
+        self,
+        prompt,
+        params: Optional[SamplingParams] = None,
+        **kwargs,
+    ) -> AsyncIterator[RequestOutput]:
+        """Submit and stream: ``async for out in eng.generate(...)``."""
+        stream = await self.submit(prompt, params, **kwargs)
+        async for out in stream:
+            yield out
+
+    async def abort(self, request_id: str) -> None:
+        """Cancel a request.  Serialized onto the step loop, so it never
+        races a quantum; the stream receives its terminal abort delta from
+        the loop."""
+        self._aborts.append(request_id)
+        self._wake.set()
+
+    # ------------------------------------------------------------ step loop --
+
+    def _route(self, out: RequestOutput) -> None:
+        stream = self._streams.get(out.request_id)
+        if stream is not None:
+            stream.queue.put_nowait(out)
+            if out.finished:
+                del self._streams[out.request_id]
+
+    def _drain_control(self) -> None:
+        """Apply aborts and admissions queued since the last quantum (the
+        loop task runs this between ``step()`` calls, never during one)."""
+        while self._aborts:
+            rid = self._aborts.popleft()
+            stream = self._streams.get(rid)
+            if stream is not None and stream.request in self._pending:
+                # never reached the core: finish it right here
+                self._pending.remove(stream.request)
+                self.core.stats.aborts += 1
+                self._route(self.core.out_proc.finalize_aborted(stream.request))
+                continue
+            out = self.core.abort(rid)
+            if out is not None:
+                self._route(out)
+        while self._pending:
+            req = self._pending.popleft()
+            try:
+                self.core.submit(req)
+                self.accepted += 1
+            except ValueError as e:  # race-window double check; terminal
+                self.core.stats.aborts += 1
+                out = self.core.out_proc.finalize_aborted(req)
+                out.finish_reason = req.finish_reason = f"rejected: {e}"
+                self._route(out)
+
+    async def _run(self) -> None:
+        loop = asyncio.get_running_loop()
+        while not self._closed:
+            self._drain_control()
+            if self.core.has_unfinished():
+                outs = await loop.run_in_executor(self._exec, self.core.step)
+                for out in outs:
+                    self._route(out)
+                # yield so streams/submits/aborts interleave between quanta
+                await asyncio.sleep(0)
+            else:
+                self._wake.clear()
+                if self._aborts or self._pending or self.core.has_unfinished():
+                    continue  # raced in while clearing
+                await self._wake.wait()
+        self._drain_control()  # final aborts so no stream reader hangs
+
+    # -------------------------------------------------------------- metrics --
+
+    def snapshot(self) -> dict:
+        """Engine stats block plus front-end admission counters."""
+        snap = self.core.snapshot()
+        snap["frontend"] = {
+            "accepted": self.accepted,
+            "rejected": self.rejected,
+            "reject_reasons": dict(self.reject_reasons),
+            "pending": len(self._pending),
+            "open_streams": len(self._streams),
+            "max_queue": self.max_queue,
+        }
+        return snap

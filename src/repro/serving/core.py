@@ -87,9 +87,11 @@ from repro.core.kv_cache import KVSlotManager, insert_prefill_kv
 from repro.core.swap import SwapAggregates, SwapController, SwapTiming
 from repro.models import get_model
 from repro.serving.outputs import OutputProcessor, RequestOutput
+from repro.serving.fair_queue import WeightedFairQueue
 from repro.serving.paging import PagedKVCache, PoolExhausted, PrefixMatch, cdiv
 from repro.serving.policy import DrainPolicy, SchedulerView, SwapPolicy, make_policy
 from repro.serving.sampling import SamplingParams
+from repro.serving.slo import LatencyStat
 
 # Raw SwapTiming records kept for inspection; older records collapse into
 # EngineStats.swap_agg (running aggregates the SwapCostAwarePolicy reads).
@@ -103,11 +105,22 @@ class Request:
     max_new: int
     priority: int = 0  # larger = more important; lowest goes first on preemption
     params: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    # multi-tenant fair queueing: requests are drained from per-tenant FIFO
+    # lanes in weighted deficit-round-robin order (serving.fair_queue), so
+    # one tenant's burst cannot starve the others
+    tenant: str = "default"
+    weight: float = 1.0  # fair-queue share relative to other tenants
     out_tokens: List[int] = dataclasses.field(default_factory=list)
-    enqueue_t: float = 0.0
+    # Arrival (client submit) time — stamped at the FIRST submit and never
+    # overwritten, so TTFT = first_token_t - arrival_time_s includes every
+    # queueing delay (front-end admission queue + scheduler wait queue).
+    arrival_time_s: float = 0.0
+    enqueue_t: float = 0.0  # scheduler-queue entry (re-stamped on requeue)
     first_token_t: float = 0.0
+    last_emit_t: float = 0.0  # previous delta's emit time (ITL tracking)
+    queue_wait_s: Optional[float] = None  # arrival -> first successful admission
     done_t: float = 0.0
-    finish_reason: Optional[str] = None  # "stop" | "length" once finished
+    finish_reason: Optional[str] = None  # "stop" | "length" | "abort" once finished
     # Set on preemption.  The restart re-prefills the prompt, then REPLAYS
     # the recorded out_tokens through the decode program (teacher-forcing),
     # reproducing the exact pre-eviction cache state — the same kernels run
@@ -172,6 +185,15 @@ class EngineStats:
     verify_rounds: int = 0  # decode rounds run through the verify program
     slot_rounds: int = 0  # sum over decode rounds of active slots — the
     # per-slot normalizer (a plain batched round is batch-many slot-rounds)
+    # client-visible latency aggregates (bounded windows, see serving.slo):
+    # queue wait (arrival -> first successful admission), TTFT (arrival ->
+    # first token), ITL (gap between consecutive streamed deltas).  The
+    # SLOAwareSwapPolicy binds to these.
+    queue_wait: LatencyStat = dataclasses.field(default_factory=LatencyStat)
+    ttft: LatencyStat = dataclasses.field(default_factory=LatencyStat)
+    itl: LatencyStat = dataclasses.field(default_factory=LatencyStat)
+    aborts: int = 0  # requests cancelled mid-flight or while queued
+    sheds: int = 0  # queued requests dropped by SLO admission control
 
     def decode_tput(self) -> float:
         return self.decode_tokens / self.t_decode if self.t_decode else 0.0
@@ -195,6 +217,37 @@ class EngineStats:
         self.swaps += 1
         self.swap_timings.append(timing)
         self.swap_agg.update(timing)
+
+    def snapshot(self) -> dict:
+        """One JSON-serializable stats block — the consistent surface every
+        benchmark (and the SSE server's /stats endpoint) reports.  Raw
+        counters plus the derived rates and the bounded-window latency
+        aggregates; the raw ``swap_timings`` window is summarized, not
+        dumped."""
+        counters = (
+            "prefill_tokens", "decode_tokens", "decode_rounds", "swaps",
+            "prefill_bursts", "prefill_chunks", "t_prefill", "t_decode",
+            "prefix_hits", "prefix_misses", "prefix_hit_tokens",
+            "preemptions", "admission_blocks", "replayed_tokens", "t_replay",
+            "draft_tokens", "accepted_tokens", "verify_rounds", "slot_rounds",
+            "aborts", "sheds",
+        )
+        snap = {k: getattr(self, k) for k in counters}
+        snap.update(
+            decode_tput=self.decode_tput(),
+            decode_round_cost=self.decode_round_cost(),
+            spec_acceptance_rate=self.acceptance_rate(),
+            spec_tokens_per_round=self.tokens_per_round(),
+            swap_agg={
+                "count": self.swap_agg.count,
+                "mean_exposed_cost_s": self.swap_agg.mean_cost,
+                "mean_hidden_fraction": self.swap_agg.mean_hidden_fraction,
+            },
+            queue_wait_s=self.queue_wait.snapshot(),
+            ttft_s=self.ttft.snapshot(),
+            itl_s=self.itl.snapshot(),
+        )
+        return snap
 
 
 class ModelRunner:
@@ -782,15 +835,21 @@ class ModelRunner:
 
 
 class Scheduler:
-    """Admission, preemption, and the swap decision for one engine."""
+    """Admission, preemption, fair queueing, and the swap decision."""
 
     def __init__(self, runner: ModelRunner, policy: SwapPolicy):
         self.runner = runner
         self.policy = policy
-        self.queue: Deque[Request] = deque()
+        # per-tenant weighted fair queue (deficit round robin); exact FIFO
+        # with a single tenant, so the PR-2 scheduling is unchanged by
+        # default — see serving.fair_queue
+        self.queue = WeightedFairQueue()
         self.inflight: Dict[int, Request] = {}
 
-    def submit(self, request: Request) -> None:
+    def validate(self, request: Request) -> None:
+        """Admission validation, raising ``ValueError`` with the rejection
+        reason.  Pure host arithmetic over engine constants — safe to call
+        from the async front-end while a step runs."""
         if request.params.max_tokens is not None:
             request.max_new = request.params.max_tokens
         n = int(len(request.prompt))
@@ -811,11 +870,24 @@ class Scheduler:
                     "raise num_blocks or lower max_new (a request that can "
                     "never fit would self-preempt forever)"
                 )
-        request.enqueue_t = time.perf_counter()
+
+    def submit(self, request: Request) -> None:
+        self.validate(request)
+        now = time.perf_counter()
+        if request.arrival_time_s == 0.0:
+            # the client-visible arrival: stamped ONCE at first submit, so
+            # TTFT measured downstream includes all queueing delay (the
+            # async front-end stamps even earlier, at its admission queue)
+            request.arrival_time_s = now
+        request.enqueue_t = now
         self.queue.append(request)
 
     def requeue_head(self, request: Request) -> None:
         self.queue.appendleft(request)
+
+    def remove_queued(self, request_id: str) -> Optional[Request]:
+        """Pull a request out of the wait queue (abort path)."""
+        return self.queue.remove(request_id)
 
     def enter_prefill_phase(self, stats: EngineStats, *, pending_chunks: int = 0) -> bool:
         """The swap decision: flip into the prefill phase this step?  Called
@@ -830,6 +902,9 @@ class Scheduler:
         active = len(self.inflight)
         if active == 0:
             return True
+        head = self.queue.peek()
+        oldest = (time.perf_counter() - head.arrival_time_s
+                  if head is not None and head.arrival_time_s else 0.0)
         view = SchedulerView(
             queue_depth=len(self.queue),
             free_slots=len(self.runner.slots.free_slots()),
@@ -837,6 +912,7 @@ class Scheduler:
             swap_cost=stats.swap_agg.mean_cost,
             decode_round_cost=stats.decode_round_cost(),
             pending_chunks=pending_chunks,
+            oldest_wait_s=oldest,
         )
         return self.policy.should_prefill(view)
 
@@ -899,7 +975,11 @@ class EngineCore:
             swap_policy = make_policy(swap_policy)
         self.scheduler = Scheduler(self.runner, swap_policy)
         self.stats = EngineStats()
-        self.out_proc = OutputProcessor()
+        # latency-observing policies (SLOAwareSwapPolicy) read the engine's
+        # own aggregates — bind() closes the control loop
+        if hasattr(swap_policy, "bind"):
+            swap_policy.bind(self.stats)
+        self.out_proc = OutputProcessor(stats=self.stats)
         self.finished: Dict[str, Request] = {}
         self._gen_seq = 0
 
@@ -931,6 +1011,62 @@ class EngineCore:
     def has_unfinished(self) -> bool:
         return bool(self.scheduler.queue or self.runner.slots.active_slots())
 
+    def abort(self, request_id: str) -> Optional[RequestOutput]:
+        """Cancel one request wherever it currently lives — the wait queue,
+        mid-(chunked-)prefill, or decoding (plain or speculative) — and
+        release everything it holds: the slot and, paged, every page its
+        table references (prefix-cache pages it shares merely drop a
+        refcount; pages it wrote exclusively return to the pool/evictable
+        set, so pool accounting returns to its pre-request baseline).
+
+        Returns the terminal zero-delta output (``finish_reason="abort"``)
+        the stream is owed, or ``None`` when the id is unknown or already
+        finished (abort after finish is a harmless no-op).  Call between
+        ``step()`` calls — the async front-end serializes aborts onto the
+        step loop for exactly that reason."""
+        req = self.scheduler.remove_queued(request_id)
+        if req is None:
+            for slot, prog in list(self._prefilling.items()):
+                if prog.req.request_id == request_id:
+                    del self._prefilling[slot]
+                    self.runner.release(slot)
+                    req = prog.req
+                    break
+        if req is None:
+            for slot, r in list(self.scheduler.inflight.items()):
+                if r.request_id == request_id:
+                    self.scheduler.inflight.pop(slot)
+                    self.runner.release(slot)
+                    req = r
+                    break
+        if req is None:
+            return None
+        self.stats.aborts += 1
+        out = self.out_proc.finalize_aborted(req)
+        self.finished[req.request_id] = req
+        return out
+
+    def snapshot(self) -> dict:
+        """``EngineStats.snapshot()`` plus the engine-level KV accounting —
+        the one stats block benchmarks and the /stats endpoint emit."""
+        snap = self.stats.snapshot()
+        snap["kv_bytes"] = self.kv_bytes()
+        return snap
+
+    def reset_stats(self) -> None:
+        """Swap in a fresh ``EngineStats`` — benchmarks call this after a
+        warmup pass so XLA compilation never lands in the measured
+        aggregates.  Everything that holds the stats object is re-bound:
+        the output processor and (when the policy observes, e.g.
+        slo-aware) the swap policy, whose defer state is reset too."""
+        self.stats = EngineStats()
+        self.out_proc = OutputProcessor(stats=self.stats)
+        policy = self.scheduler.policy
+        if hasattr(policy, "bind"):
+            policy.bind(self.stats)
+        if hasattr(policy, "reset"):
+            policy.reset()
+
     # --------------------------------------------------------------- step --
 
     def step(self) -> List[RequestOutput]:
@@ -950,8 +1086,54 @@ class EngineCore:
         produced."""
         outs: List[RequestOutput] = []
         sched, runner = self.scheduler, self.runner
+        # SLO admission control: a policy that knows the TTFT deadline may
+        # shed queue heads that can no longer meet it.  A doomed request
+        # counts against goodput whether it is served late or dropped —
+        # but serving it also queues everyone BEHIND it past their
+        # deadlines, so shedding converts one unavoidable miss into
+        # capacity for requests that can still hit their targets.  Only
+        # policies exposing ``should_shed`` participate; the static
+        # policies serve every admitted request, late or not.
+        shed = getattr(sched.policy, "should_shed", None)
+        if shed is not None:
+            now = time.perf_counter()
+            while sched.queue:
+                head = sched.queue[0]
+                if head.out_tokens or getattr(head, "preempted", False):
+                    # a preempted / partially-served request is in-flight
+                    # state awaiting replay, not a new admission — dropping
+                    # it is not admission control
+                    break
+                wait = (now - head.arrival_time_s) if head.arrival_time_s else 0.0
+                if not shed(wait):
+                    break
+                sched.queue.popleft()
+                self.stats.sheds += 1
+                outs.append(self.out_proc.finalize_dropped(head, "shed"))
+                self.finished[head.request_id] = head
         if runner.prefill_chunk is not None:
-            outs.extend(self._chunked_prefill_quantum())
+            # An SLO-aware policy can widen the EFFECTIVE prefill chunk by
+            # granting several chunk quanta back to back before the decode
+            # round (prefill_quanta > 1 when observed ITL has budget slack,
+            # or TTFT is violating).  Greedy outputs are invariant to
+            # chunking, so this steers latency only.  Default policies run
+            # exactly one quantum — the PR-4 behavior.
+            pq = getattr(sched.policy, "prefill_quanta", None)
+            ran = 0
+            while True:
+                before = self.stats.prefill_chunks
+                outs.extend(self._chunked_prefill_quantum())
+                if self.stats.prefill_chunks == before:
+                    break  # deferred, blocked, or no prefill work pending
+                ran += 1
+                # re-consult AFTER each executed quantum: the policy's view
+                # was refreshed by that quantum's should_prefill, so the
+                # decision tracks the CURRENT decode set — deciding the
+                # whole width up front from last step's state widened into
+                # a set that had just started decoding (a one-step-stale
+                # "empty set" stalls the new stream for the full width)
+                if pq is None or ran >= max(1, int(pq())):
+                    break
         elif sched.queue and runner.slots.free_slots() and sched.enter_prefill_phase(self.stats):
             admitted = 0
             while sched.queue and runner.slots.free_slots():
@@ -1059,6 +1241,7 @@ class EngineCore:
             stats.prefill_tokens += len(req.prompt)
             stats.swaps += 1
 
+        self._record_admission(req)
         # the shared fp prefix mirror (runner.chunk_prefix) supports exactly
         # one in-flight chunked prefill — _chunked_prefill_quantum only
         # admits when none is pending, and this guards the invariant
@@ -1204,8 +1387,17 @@ class EngineCore:
         except PoolExhausted:
             self._block_admission(req, slot)
             return False, None
+        self._record_admission(req)
 
         return self._finish_prefill(req, slot, logits, resuming)
+
+    def _record_admission(self, req: Request) -> None:
+        """Stamp arrival -> first-successful-admission queue wait, exactly
+        once per request (a preemption restart keeps its original stamp —
+        the client waited once, at the front of the stream)."""
+        if req.queue_wait_s is None and req.arrival_time_s:
+            req.queue_wait_s = time.perf_counter() - req.arrival_time_s
+            self.stats.queue_wait.record(req.queue_wait_s)
 
     def _block_admission(self, req: Request, slot: Optional[int] = None) -> None:
         """One admission attempt is blocked on pool pressure: roll the slot

@@ -1,0 +1,147 @@
+"""Per-tenant weighted fair queueing for the Scheduler's wait queue.
+
+The PR-2 scheduler kept one global FIFO deque: a single tenant submitting a
+burst of requests starves every other tenant behind it for the burst's whole
+service time.  ``WeightedFairQueue`` replaces the deque with per-tenant FIFO
+lanes drained in deficit-round-robin (DRR) order: each visit to a tenant adds
+its weight to a deficit counter and the tenant is served while the deficit
+lasts (one unit per request), so over any busy window tenant ``i`` receives
+service proportional to ``weight_i`` regardless of how deep any one lane is.
+
+The interface mirrors the deque the scheduler already used — ``append``,
+``appendleft``, ``popleft``, ``len``, truthiness, ``[0]`` — so every existing
+call site works unchanged:
+
+* With a single tenant (the default), DRR degenerates to exact FIFO, which
+  is what keeps the pre-existing engine tests (and greedy bit-identity
+  against the synchronous reference runs) untouched.
+* ``appendleft`` is the *requeue-at-head* path (blocked admission,
+  preemption): the request goes onto a head lane served before any DRR
+  pick, preserving the "retry this exact request next" contract regardless
+  of tenant.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+
+class WeightedFairQueue:
+    """Deficit-round-robin over per-tenant FIFO lanes (cost 1 per request)."""
+
+    def __init__(self):
+        self._lanes: Dict[str, Deque] = {}
+        self._order: List[str] = []  # tenant visit order (first-seen)
+        self._deficit: Dict[str, float] = {}
+        self._weights: Dict[str, float] = {}
+        self._head: Deque = deque()  # requeued-at-head requests, any tenant
+        self._ptr = 0  # DRR cursor into _order
+        self._len = 0
+
+    # ------------------------------------------------------------ helpers --
+
+    @staticmethod
+    def _tenant(req) -> str:
+        return getattr(req, "tenant", "default") or "default"
+
+    def _lane(self, tenant: str, weight: float) -> Deque:
+        lane = self._lanes.get(tenant)
+        if lane is None:
+            lane = self._lanes[tenant] = deque()
+            self._order.append(tenant)
+            self._deficit[tenant] = 0.0
+        if weight > 0.0:
+            self._weights[tenant] = weight  # latest request's weight wins
+        return lane
+
+    def set_weight(self, tenant: str, weight: float) -> None:
+        if weight <= 0.0:
+            raise ValueError(f"tenant weight must be > 0, got {weight}")
+        self._lane(tenant, weight)
+
+    # ------------------------------------------------------ deque protocol --
+
+    def append(self, req) -> None:
+        self._lane(self._tenant(req), float(getattr(req, "weight", 1.0))).append(req)
+        self._len += 1
+
+    def appendleft(self, req) -> None:
+        """Requeue at the global head: the next ``popleft`` returns it.
+        Used for blocked admissions and preemption restarts, which must be
+        retried before any fair-share pick (they already won arbitration
+        once; fairness was charged then)."""
+        self._head.appendleft(req)
+        self._len += 1
+
+    def popleft(self):
+        if self._head:
+            self._len -= 1
+            return self._head.popleft()
+        if self._len == 0:
+            raise IndexError("pop from an empty WeightedFairQueue")
+        # DRR: visit tenants in fixed order; a visit grants `weight` deficit;
+        # serve while deficit >= 1, then move on.  Empty lanes forfeit their
+        # deficit (a tenant cannot bank credit while idle).
+        while True:
+            if self._ptr >= len(self._order):
+                self._ptr = 0
+            tenant = self._order[self._ptr]
+            lane = self._lanes[tenant]
+            if not lane:
+                self._deficit[tenant] = 0.0
+                self._ptr += 1
+                continue
+            if self._deficit[tenant] < 1.0:
+                self._deficit[tenant] += self._weights.get(tenant, 1.0)
+                if self._deficit[tenant] < 1.0:
+                    self._ptr += 1  # weight < 1: accrues over multiple cycles
+                    continue
+            self._deficit[tenant] -= 1.0
+            self._len -= 1
+            req = lane.popleft()
+            if not lane or self._deficit[tenant] < 1.0:
+                self._ptr += 1  # lane drained or deficit spent: next tenant
+            return req
+
+    def remove(self, request_id: str):
+        """Remove and return a queued request by id (abort path); None if
+        the id is not queued."""
+        for lane in (self._head, *self._lanes.values()):
+            for req in lane:
+                if req.request_id == request_id:
+                    lane.remove(req)
+                    self._len -= 1
+                    return req
+        return None
+
+    def peek(self) -> Optional[object]:
+        """The request the next ``popleft`` would return (no deficit spent)."""
+        if self._head:
+            return self._head[0]
+        if self._len == 0:
+            return None
+        n = len(self._order)
+        for off in range(n):
+            lane = self._lanes[self._order[(self._ptr + off) % n]]
+            if lane:
+                return lane[0]
+        return None
+
+    def __getitem__(self, i: int):
+        if i != 0:
+            raise IndexError("WeightedFairQueue only exposes the head ([0])")
+        head = self.peek()
+        if head is None:
+            raise IndexError("empty WeightedFairQueue")
+        return head
+
+    def __iter__(self):
+        yield from self._head
+        for tenant in self._order:
+            yield from self._lanes[tenant]
+
+    def __len__(self) -> int:
+        return self._len
+
+    def __bool__(self) -> bool:
+        return self._len > 0

@@ -48,7 +48,28 @@ class RequestOutput:
 
 
 class OutputProcessor:
-    """Turns raw sampled tokens into RequestOutputs; owns finish semantics."""
+    """Turns raw sampled tokens into RequestOutputs; owns finish semantics.
+
+    With ``stats`` (an ``EngineStats``), every emission also feeds the
+    engine's client-visible latency aggregates: TTFT (request arrival to
+    first token — queueing delay included) on the first delta, ITL (gap
+    since the previous delta) on every later one.  These are what the
+    SLO-aware swap policy observes.
+    """
+
+    def __init__(self, stats=None):
+        self._stats = stats
+
+    def _observe(self, req, now: float) -> None:
+        if req.first_token_t == 0.0:
+            arrival = getattr(req, "arrival_time_s", 0.0)
+            if self._stats is not None and arrival:
+                self._stats.ttft.record(now - arrival)
+        else:
+            last = getattr(req, "last_emit_t", 0.0)
+            if self._stats is not None and last:
+                self._stats.itl.record(now - last)
+        req.last_emit_t = now
 
     def process_token(self, req, tok: int) -> RequestOutput:
         return self.process_tokens(req, [tok])
@@ -77,6 +98,8 @@ class OutputProcessor:
                 break
         req.out_tokens.extend(kept)
         now = time.perf_counter()
+        if kept:
+            self._observe(req, now)
         if kept and req.first_token_t == 0.0:
             # First token for this request — or a restart whose original
             # admission predates TTFT stamping (the PR-1 bug: resumed
@@ -119,6 +142,29 @@ class OutputProcessor:
             finished=True,
             finish_reason=req.finish_reason,
         )
+
+    @staticmethod
+    def finalize_dropped(req, reason: str) -> RequestOutput:
+        """Terminal output for a request removed without completing (client
+        abort, SLO deadline shed): zero-delta, finished, with the given
+        ``finish_reason``.  Whatever was already streamed stands — the drop
+        ends the stream, it does not un-emit tokens."""
+        req.finish_reason = reason
+        req.preempted = False
+        if req.done_t == 0.0:
+            req.done_t = time.perf_counter()
+        return RequestOutput(
+            request_id=req.request_id,
+            new_token_ids=[],
+            token_ids=req.out_tokens,
+            finished=True,
+            finish_reason=reason,
+        )
+
+    @staticmethod
+    def finalize_aborted(req) -> RequestOutput:
+        """Terminal output for a cancelled request (``finish_reason="abort"``)."""
+        return OutputProcessor.finalize_dropped(req, "abort")
 
     @staticmethod
     def resume_output(req) -> Optional[RequestOutput]:

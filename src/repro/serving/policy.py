@@ -48,6 +48,10 @@ class SchedulerView:
     # (and, paged, its pages), so policies should weigh finishing it against
     # deferring — see SwapCostAwarePolicy.
     pending_chunks: int = 0
+    # Age of the queue head, seconds since its arrival (0.0 when the queue
+    # is empty).  Every defer stretches exactly this wait — it is the term
+    # an SLO-aware policy weighs against the TTFT target.
+    oldest_wait_s: float = 0.0
 
 
 class SwapPolicy:
@@ -138,6 +142,10 @@ POLICIES = {
 
 
 def make_policy(name: str, **kwargs) -> SwapPolicy:
+    if name not in POLICIES:
+        # slo.py registers SLOAwareSwapPolicy on import; import lazily so
+        # the registry is complete without a circular import at load time
+        import repro.serving.slo  # noqa: F401
     if name not in POLICIES:
         raise ValueError(f"unknown swap policy {name!r}; choose from {sorted(POLICIES)}")
     return POLICIES[name](**kwargs)

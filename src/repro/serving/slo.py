@@ -1,0 +1,309 @@
+"""SLO-aware serving: latency targets, per-request tracking, and a swap
+policy steered by observed TTFT/ITL percentiles.
+
+Two client-visible latencies define an interactive serving SLO:
+
+* **TTFT** — time to first token, *arrival* to first emitted token.  The
+  clock starts when the request is submitted to the front-end (satellite
+  fix: ``Request.arrival_time_s`` is stamped at submit, so scheduler
+  queueing delay is inside TTFT, not hidden before it).
+* **ITL** — inter-token latency, the gap between consecutive streamed
+  deltas of one request.
+
+``LatencyStat`` is the aggregate the engine keeps for each of {queue wait,
+TTFT, ITL}: running count/sum plus a bounded sample window for p50/p95 (a
+long serving run must not grow a per-token list without bound).
+
+``SLOAwareSwapPolicy`` closes the loop the static policies leave open: the
+``DrainPolicy`` always swaps (best TTFT, worst ITL under load) and the
+``SwapCostAwarePolicy`` amortizes the swap against a *cost* model — neither
+looks at the latencies clients actually experience.  This policy reads the
+engine's observed p95 TTFT/ITL each step and steers both halves of the
+prefill decision:
+
+* ``should_prefill`` — flip into prefill when the queue head's age
+  threatens the TTFT target (prioritize pending prefill) or when observed
+  ITL has budget slack; defer (bounded) when ITL is violating and TTFT is
+  safe — protect the decode streams first.
+* ``prefill_quanta`` — under chunked prefill, the *effective* prefill chunk
+  per step: with ITL slack (or TTFT already violating) the engine may run
+  several chunk quanta back to back before the next decode round,
+  ``effective_chunk = prefill_chunk x quanta``.  Greedy outputs are
+  invariant to chunking (the PR-4 contract), so this knob moves latency
+  only, never tokens.
+
+The policy observes through ``bind(stats)`` — ``EngineCore`` binds its own
+``EngineStats`` at construction, so the same policy object works under the
+synchronous engine, ``AsyncEngine``, and the benchmarks without extra
+plumbing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Optional
+
+import numpy as np
+
+from repro.serving.policy import SchedulerView, SwapPolicy
+
+LATENCY_WINDOW = 2048  # samples kept for percentile estimates
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOConfig:
+    """Latency targets for one serving deployment (seconds)."""
+
+    ttft_target_s: float = 0.5
+    itl_target_s: float = 0.05
+    # should_prefill knobs: the queue head is "at risk" once it has waited
+    # ttft_risk x target (prefill must start well before the deadline to
+    # leave room for the prefill itself); ITL has "slack" below
+    # itl_slack x target.
+    ttft_risk: float = 0.4
+    itl_slack: float = 0.6
+
+    def __post_init__(self):
+        if self.ttft_target_s <= 0.0 or self.itl_target_s <= 0.0:
+            raise ValueError("SLO targets must be > 0")
+        if not 0.0 < self.ttft_risk <= 1.0 or not 0.0 < self.itl_slack <= 1.0:
+            raise ValueError("ttft_risk and itl_slack must be in (0, 1]")
+
+
+class LatencyStat:
+    """Bounded-window latency aggregate: count/sum forever, percentiles over
+    the last ``LATENCY_WINDOW`` samples."""
+
+    def __init__(self, window: int = LATENCY_WINDOW):
+        self.count = 0
+        self.total = 0.0
+        self._win: Deque[float] = deque(maxlen=window)
+
+    def record(self, v: float) -> None:
+        self.count += 1
+        self.total += v
+        self._win.append(v)
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def percentile(self, q: float, last: Optional[int] = None) -> float:
+        """Percentile over the sample window; ``last`` restricts it to the
+        most recent N samples (a latency *controller* must react to current
+        conditions — a storm spike an hour ago should not pin p95 high for
+        the rest of the run)."""
+        if not self._win:
+            return 0.0
+        data = self._win if last is None else list(self._win)[-last:]
+        return float(np.percentile(np.asarray(data), q))
+
+    @property
+    def p50(self) -> float:
+        return self.percentile(50)
+
+    @property
+    def p95(self) -> float:
+        return self.percentile(95)
+
+    def snapshot(self) -> dict:
+        """JSON-serializable summary (seconds)."""
+        return {"count": self.count, "mean": self.mean,
+                "p50": self.p50, "p95": self.p95}
+
+
+def request_latency(req) -> dict:
+    """Client-visible latency summary of one finished request, from the
+    stamps the engine maintains (seconds; 0.0 where a stamp is missing —
+    e.g. TTFT of a request that never produced a token)."""
+    arrival = getattr(req, "arrival_time_s", 0.0) or getattr(req, "enqueue_t", 0.0)
+    ttft = (req.first_token_t - arrival) if req.first_token_t and arrival else 0.0
+    qw = getattr(req, "queue_wait_s", None)
+    return {
+        "request_id": req.request_id,
+        "ttft_s": ttft,
+        "queue_wait_s": 0.0 if qw is None else qw,
+        "e2e_s": (req.done_t - arrival) if req.done_t and arrival else 0.0,
+        "tokens": len(req.out_tokens),
+        "finish_reason": req.finish_reason,
+    }
+
+
+class SLOAwareSwapPolicy(SwapPolicy):
+    """Steer the prefill<->decode flip (and the effective chunk size) from
+    observed p95 TTFT/ITL against an ``SLOConfig``.
+
+    Decision order (progress-safe: an empty decode set and a defer cap both
+    force admission, like the other policies):
+
+    1. nothing decoding -> prefill (no opportunity cost);
+    2. in-flight chunked prefill -> continue it (its TTFT clock is running
+       and each chunk is a bounded quantum);
+    3. queue head older than ``ttft_risk x ttft_target`` -> prefill (a
+       violated TTFT can never be repaired later; ITL can recover);
+    4. observed p95 ITL over target AND the queue still shallow -> defer,
+       bounded (protect decode; a deep queue is sustained overload, where
+       deferring starves TTFT without recovering ITL);
+    5. observed p95 ITL under ``itl_slack x`` target -> prefill (spend the
+       slack on pending work);
+    6. otherwise (ITL between slack and target): amortize like the
+       swap-cost policy — admit once the queue is at least as deep as the
+       decode rounds one swap costs.  Batching admissions this way is also
+       the paper's phase alternation: a prefill chunk inside a busy decode
+       set stalls every stream and slows the slot turnover that drains the
+       queue, while the same chunks a few rounds later land in a near-empty
+       set and cost almost nothing.
+
+    Progress is guaranteed by the defer bound, the TTFT-risk override, and
+    rule 1.
+    """
+
+    name = "slo-aware"
+
+    def __init__(
+        self,
+        slo: Optional[SLOConfig] = None,
+        *,
+        max_defer_rounds: int = 8,
+        max_quanta: int = 4,
+        recent: int = 64,
+    ):
+        if max_defer_rounds < 1 or max_quanta < 1 or recent < 1:
+            raise ValueError(
+                "max_defer_rounds, max_quanta and recent must be >= 1")
+        self.slo = slo or SLOConfig()
+        self.max_defer_rounds = max_defer_rounds
+        self.max_quanta = max_quanta
+        self.recent = recent  # steer from the last N samples, not all-time
+        self._stats = None  # EngineStats, bound by the engine
+        self._deferred = 0
+        self._last_active = 0  # decode-set size at the last should_prefill
+        self._last_queue = 0  # queue depth at the last should_prefill
+
+    def bind(self, stats) -> None:
+        """Attach the engine's ``EngineStats`` (its ttft/itl ``LatencyStat``
+        aggregates are the policy's observations)."""
+        self._stats = stats
+
+    # ----------------------------------------------------------- decision --
+
+    def _itl_p95(self) -> float:
+        if self._stats is None:
+            return 0.0
+        return self._stats.itl.percentile(95, last=self.recent)
+
+    def should_prefill(self, view: SchedulerView) -> bool:
+        self._last_active = view.active_slots
+        self._last_queue = view.queue_depth
+        if view.active_slots == 0 or view.pending_chunks > 0:
+            self._deferred = 0
+            return True
+        slo = self.slo
+        if view.oldest_wait_s >= slo.ttft_risk * slo.ttft_target_s:
+            self._deferred = 0
+            return True
+        itl = self._itl_p95()
+        if (itl > slo.itl_target_s
+                and view.queue_depth <= max(1, 2 * view.active_slots)
+                and self._deferred < self.max_defer_rounds):
+            # ITL violating under light queue pressure: hold admissions
+            # (bounded) so the active streams decode in clean windows.  A
+            # deep queue means sustained overload — deferring there
+            # starves TTFT without ever recovering ITL, so the depth
+            # guard falls through instead.
+            self._deferred += 1
+            return False
+        if itl <= slo.itl_slack * slo.itl_target_s:
+            self._deferred = 0
+            return True
+        # between slack and target: amortize like the swap-cost policy —
+        # batching admissions until the queue is worth one swap keeps
+        # prefill chunks out of busy decode windows (phase alternation)
+        if view.decode_round_cost > 0.0 and view.swap_cost > 0.0:
+            need = max(1, int(np.ceil(view.swap_cost / view.decode_round_cost)))
+        else:
+            need = 1
+        if view.queue_depth >= need or self._deferred >= self.max_defer_rounds:
+            self._deferred = 0
+            return True
+        self._deferred += 1
+        return False
+
+    def prefill_quanta(self) -> int:
+        """Chunk quanta the engine may run back to back this step (chunked
+        prefill only): 1 when ITL is tight or unobserved; more only while
+        observed p95 ITL sits under the slack line.  The width is budgeted
+        from the OBSERVED median gap plus the engine's measured per-chunk
+        cost — not raw kernel costs, which miss step/streaming overhead
+        and systematically overshoot the target.  There is deliberately no
+        'TTFT crisis' override to the maximum: each step still runs only
+        one decode round, so widening quanta under load slows the slot
+        turnover that actually drains the admission queue — it trades a
+        broken ITL for no TTFT gain.  The one unconditional widening is a
+        near-empty decode set (the admit half of phase alternation):
+        chunks run back to back at full width when there is no stream
+        left to stall."""
+        if self._stats is None:
+            return 1
+        if self._last_active == 0:
+            return self.max_quanta
+        if self._last_queue <= self._last_active:
+            # no real backlog to drain: a widened quantum would spend ITL
+            # headroom (each extra chunk inflates one gap of every active
+            # stream) to accelerate a queue the normal cadence absorbs
+            return 1
+        slo = self.slo
+        itl = self._itl_p95()
+        if itl <= 0.0 or itl > slo.itl_slack * slo.itl_target_s:
+            return 1
+        stats = self._stats
+        chunk_cost = (stats.t_prefill / stats.prefill_chunks
+                      if stats.prefill_chunks else 0.0)
+        if chunk_cost <= 0.0:
+            return 1
+        base_gap = (stats.itl.percentile(50, last=self.recent)
+                    or stats.decode_round_cost())
+        budget = slo.itl_target_s - base_gap
+        return int(max(1, min(self.max_quanta, budget / chunk_cost)))
+
+    def should_shed(self, wait_s: float) -> bool:
+        """Deadline-based admission control: drop a queue head that can no
+        longer meet its TTFT target.  A doomed request counts against
+        goodput whether it is served late or dropped — but *serving* it
+        also spends a swap + prefill on work that is already lost, pushing
+        everyone queued behind it past THEIR deadlines.  Shedding converts
+        one unavoidable miss into capacity for requests that can still be
+        served in time.
+
+        "Doomed" is not ``wait >= target``: admission is only the start —
+        the first token still needs the prompt's chunked prefill,
+        interleaved with everyone else's quanta.  That admission-to-first-
+        token time is observable as the gap between the engine's TTFT and
+        queue-wait medians, so the head is shed once
+        ``wait + observed_serve_time`` crosses the target (falling back to
+        the bare deadline before any observations exist).  Only this
+        policy exposes the hook; the static policies never shed,
+        preserving their run-to-completion semantics (and greedy
+        bit-identity)."""
+        serve = 0.0
+        if self._stats is not None:
+            serve = max(0.0, self._stats.ttft.percentile(50, last=self.recent)
+                        - self._stats.queue_wait.percentile(50, last=self.recent))
+        # the serve estimate is two medians over different request subsets
+        # and can spike under churn; never shed before half the deadline,
+        # so an inflated estimate cannot drop requests with real headroom
+        line = max(0.5 * self.slo.ttft_target_s,
+                   self.slo.ttft_target_s - serve)
+        return wait_s >= line
+
+    def reset(self) -> None:
+        self._deferred = 0
+        self._last_active = 0
+
+
+# register with the name-based factory (POLICIES lives in policy.py;
+# importing this module completes the registry — make_policy() does so
+# lazily to avoid a circular import at load time)
+from repro.serving.policy import POLICIES  # noqa: E402
+
+POLICIES.setdefault(SLOAwareSwapPolicy.name, SLOAwareSwapPolicy)
