@@ -14,6 +14,7 @@ import traceback
 from . import (
     beyond_paper,
     chunked_prefill_interleave,
+    disagg_interference,
     dse_sweep,
     fig5_overlap,
     fig6_decode_throughput,
@@ -45,6 +46,7 @@ BENCHES = {
     "spec_decode": spec_decode,
     "policy_compare": policy_compare,
     "traffic_storm": traffic_storm,
+    "disagg_interference": disagg_interference,
     "beyond_paper": beyond_paper,
 }
 

@@ -51,6 +51,11 @@ class DisaggCostModel:
     cfg: ModelConfig
     chips_per_pod: int
     chip: ChipSpec = DEFAULT_CHIP
+    # storage precision of the serving KV cache ("fp" | "int8" | "int4"):
+    # a quantized cache shrinks the temporal relayout and the spatial DCN
+    # transfer alike (payload + scale planes both move), so the mode
+    # comparison must price the same bytes the engine actually ships
+    kv_dtype: str = "fp"
 
     def kv_bytes(self, batch: int, seq: int) -> float:
         c = self.cfg
@@ -58,7 +63,9 @@ class DisaggCostModel:
             # recurrent state instead of KV
             hd = c.d_model // c.num_heads
             return c.num_layers * batch * c.num_heads * (hd * hd + hd) * 4
-        return 2 * c.num_layers * batch * c.num_kv_heads * seq * c.head_dim * 2
+        from repro.core.roofline import kv_bytes_per_ctx_token
+
+        return kv_bytes_per_ctx_token(c, self.kv_dtype) * batch * seq
 
     def temporal_swap_latency(self, batch: int, seq: int) -> float:
         """KV relayout: one read + one write of the cache over HBM, plus the

@@ -284,6 +284,56 @@ class PhaseEngine:
         self._programs[key] = prog
         return prog
 
+    def prefill_chunk_kv_program(self, chunk: int, prefix_width: int) -> PhaseProgram:
+        """Compute-only chunked prefill — the disaggregated prefill pool's
+        chunk RM: ``fn(params, tokens (1, C), prefix, prefix_len, last_pos)
+        -> (logits, chunk_kv, new_prefix)`` (fp prefix mirror donated).
+        Same body and logits epilogue as the fused chunk programs; the
+        chunk's fp KV is returned for the handoff channel to ship, and the
+        decode pool installs it with the SAME quantize-on-write scatter the
+        colocated engine fuses in (``chunk_write_program`` /
+        ``page_write_program``) — the install split that keeps the two-pool
+        engine bit-identical.  No pinned in_shardings, matching the fused
+        chunk programs (GSPMD propagates from the committed params)."""
+        key = f"prefill_chunk_kv:{chunk}+{prefix_width}"
+        if key in self._programs:
+            return self._programs[key]
+        cfg, pctx = self.cfg, self.prefill_ctx
+        assert cfg.family == "transformer", "chunked prefill implemented for the transformer family"
+        from repro.models import transformer as T
+
+        def fn(params, tokens, prefix, prefix_len, last_pos):
+            return T.prefill_chunk_kv(params, tokens, prefix, prefix_len,
+                                      last_pos, cfg, pctx,
+                                      prefix_width=prefix_width)
+
+        prog = PhaseProgram(key, self._jit(fn, donate=(2,)))
+        self._programs[key] = prog
+        return prog
+
+    def chunk_write_program(self, chunk: int) -> PhaseProgram:
+        """Decode-side install of one shipped prefill chunk into the
+        CONTIGUOUS cache: ``fn(cache, kv, slot, prefix_len) -> new_cache``
+        (cache donated).  The exact ``write_chunk_kv_q`` scatter
+        (quantize-on-write under ``kv_dtype``) the fused
+        ``prefill_chunk_program`` runs — split out so the disaggregated
+        decode pool installs handoff chunks with the colocated engine's
+        bytes.  The paged counterpart is ``page_write_program``."""
+        key = f"chunk_write:{chunk}"
+        if key in self._programs:
+            return self._programs[key]
+        from repro.layers.attention import KVCache, write_chunk_kv_q
+
+        def fn(cache, kv, slot, prefix_len):
+            return KVCache(
+                write_chunk_kv_q(cache.k, kv.k, slot, prefix_len),
+                write_chunk_kv_q(cache.v, kv.v, slot, prefix_len),
+            )
+
+        prog = PhaseProgram(key, self._jit(fn, donate=(0,)))
+        self._programs[key] = prog
+        return prog
+
     def relayout_program(self, batch: int, seq: int, max_len: int) -> PhaseProgram:
         """The swap: prefill-layout KV -> decode-layout cache buffer.
 

@@ -26,7 +26,9 @@ from __future__ import annotations
 
 import argparse
 import asyncio
+import dataclasses
 import json
+import signal
 import time
 
 import jax
@@ -38,9 +40,11 @@ from repro.models import get_model
 from repro.serving import (
     AdmissionRejected,
     AsyncEngine,
+    DisaggEngine,
     EngineCore,
     Request,
     SamplingParams,
+    make_disagg_meshes,
 )
 from repro.serving.arrivals import poisson_times
 from repro.serving.policy import POLICIES
@@ -54,9 +58,19 @@ def _http_payload(writer, status: str, body: bytes,
         + body)
 
 
+@dataclasses.dataclass
+class ServerState:
+    """Shared handler state: once ``draining`` flips, new ``POST /generate``
+    submits answer ``503`` while ``GET /stats`` keeps serving, so a load
+    balancer sees the instance leave rotation without losing observability."""
+
+    draining: bool = False
+
+
 async def handle_connection(eng: AsyncEngine, default_params: SamplingParams,
                             reader: asyncio.StreamReader,
-                            writer: asyncio.StreamWriter) -> None:
+                            writer: asyncio.StreamWriter,
+                            state: "ServerState | None" = None) -> None:
     """One HTTP exchange on raw asyncio streams (no web framework).
 
     ``POST /generate`` takes a JSON body — ``prompt`` (token ids, required),
@@ -87,6 +101,10 @@ async def handle_connection(eng: AsyncEngine, default_params: SamplingParams,
         if method == "GET" and path == "/stats":
             _http_payload(writer, "200 OK", json.dumps(eng.snapshot()).encode())
         elif method == "POST" and path == "/generate":
+            if state is not None and state.draining:
+                _http_payload(writer, "503 Service Unavailable", json.dumps(
+                    {"error": "shutting down: server is draining"}).encode())
+                return
             try:
                 spec = json.loads(body or b"{}")
                 prompt = np.asarray(spec["prompt"], np.int32)
@@ -145,23 +163,60 @@ async def handle_connection(eng: AsyncEngine, default_params: SamplingParams,
 
 async def serve_http(core: EngineCore, default_params: SamplingParams,
                      host: str, port: int, *, max_queue: int = 64,
-                     ready: "asyncio.Event | None" = None) -> int:
-    """Run the engine behind the asyncio-streams HTTP front-end until
-    cancelled.  ``ready`` (tests) is set once the socket is listening."""
-    async with AsyncEngine(core, max_queue=max_queue) as eng:
-        server = await asyncio.start_server(
-            lambda r, w: handle_connection(eng, default_params, r, w),
-            host, port)
-        bound = server.sockets[0].getsockname()
-        print(f"serving on http://{bound[0]}:{bound[1]}  "
-              f"(POST /generate streams SSE, GET /stats)")
-        if ready is not None:
-            ready.set()
+                     ready: "asyncio.Event | None" = None,
+                     stop: "asyncio.Event | None" = None,
+                     grace_s: float = 5.0) -> int:
+    """Run the engine behind the asyncio-streams HTTP front-end until asked
+    to stop, then shut down gracefully.
+
+    ``ready`` (tests) is set once the socket is listening.  SIGINT/SIGTERM —
+    or ``stop`` being set, the test hook — starts the drain: new
+    ``POST /generate`` submits answer ``503`` (``GET /stats`` stays up),
+    in-flight streams get up to ``grace_s`` seconds to finish naturally, and
+    whatever is still running at the deadline is aborted by the engine
+    shutdown with a terminal ``finish_reason="abort"`` delta, so no client
+    reader ever hangs on a half-open stream.
+    """
+    if stop is None:
+        stop = asyncio.Event()
+    loop = asyncio.get_running_loop()
+    state = ServerState()
+    hooked = []
+    for sig in (signal.SIGINT, signal.SIGTERM):
         try:
+            loop.add_signal_handler(sig, stop.set)
+            hooked.append(sig)
+        except (NotImplementedError, RuntimeError, ValueError):
+            pass  # non-main thread or a platform without loop signal support
+    try:
+        async with AsyncEngine(core, max_queue=max_queue) as eng:
+            server = await asyncio.start_server(
+                lambda r, w: handle_connection(eng, default_params, r, w,
+                                               state=state),
+                host, port)
+            bound = server.sockets[0].getsockname()
+            print(f"serving on http://{bound[0]}:{bound[1]}  "
+                  f"(POST /generate streams SSE, GET /stats)")
+            if ready is not None:
+                ready.set()
             async with server:
-                await server.serve_forever()
-        except (KeyboardInterrupt, asyncio.CancelledError):
-            pass
+                try:
+                    await stop.wait()
+                except asyncio.CancelledError:
+                    pass
+                state.draining = True
+                print(f"draining: rejecting new work (503), waiting up to "
+                      f"{grace_s:.1f}s for in-flight streams")
+                deadline = loop.time() + grace_s
+                while loop.time() < deadline and (
+                        core.has_unfinished()
+                        or eng.snapshot()["frontend"]["open_streams"]):
+                    await asyncio.sleep(0.02)
+            # AsyncEngine.__aexit__ now aborts anything still unfinished and
+            # routes each stream its terminal delta before the loop exits
+    finally:
+        for sig in hooked:
+            loop.remove_signal_handler(sig)
     return 0
 
 
@@ -191,6 +246,13 @@ def main(argv=None) -> int:
                         "streams stay bit-identical to plain decode")
     p.add_argument("--spec-ngram", type=int, default=3, metavar="N",
                    help="prompt-lookup n-gram size for --spec-decode drafting")
+    p.add_argument("--disagg", action="store_true",
+                   help="disaggregated serving: prefill and decode run as "
+                        "two phase-specialized pools with KV handoff between "
+                        "them (uses the first two local devices as 1-wide "
+                        "pools when available, else colocates both pools on "
+                        "the default device; greedy outputs stay "
+                        "bit-identical to the single engine)")
     p.add_argument("--ragged", action="store_true",
                    help="draw prompt lengths uniformly in [4, prompt_len]")
     p.add_argument("--requests", type=int, default=6)
@@ -221,6 +283,9 @@ def main(argv=None) -> int:
     p.add_argument("--max-queue", type=int, default=64,
                    help="server mode: admission backlog bound before "
                         "submits are rejected with 429")
+    p.add_argument("--grace", type=float, default=5.0,
+                   help="server mode: seconds to let in-flight streams "
+                        "finish after SIGINT/SIGTERM before aborting them")
     p.add_argument("--temperature", type=float, default=0.0,
                    help="sampling temperature (0 = greedy, the paper setting)")
     p.add_argument("--top-k", type=int, default=0, help="top-k truncation (0 = off)")
@@ -234,21 +299,34 @@ def main(argv=None) -> int:
     api = get_model(cfg)
     params = api.init(cfg, jax.random.PRNGKey(args.seed), dtype=jnp.float32)
 
-    eng = EngineCore(cfg, params, n_slots=args.slots, max_len=args.max_len,
-                     prompt_len=args.prompt_len, mode=args.mode,
-                     cache_layout=args.cache_layout, block_size=args.block_size,
-                     num_blocks=args.num_blocks, kv_dtype=args.kv_dtype,
-                     overlap=not args.no_overlap, swap_policy=args.swap_policy,
-                     prefill_chunk=args.prefill_chunk,
-                     spec_decode=args.spec_decode or None,
-                     spec_ngram=args.spec_ngram)
+    kw = dict(n_slots=args.slots, max_len=args.max_len,
+              prompt_len=args.prompt_len, mode=args.mode,
+              cache_layout=args.cache_layout, block_size=args.block_size,
+              num_blocks=args.num_blocks, kv_dtype=args.kv_dtype,
+              overlap=not args.no_overlap, swap_policy=args.swap_policy,
+              prefill_chunk=args.prefill_chunk,
+              spec_decode=args.spec_decode or None,
+              spec_ngram=args.spec_ngram)
+    if args.disagg:
+        try:
+            pmesh, dmesh = make_disagg_meshes()
+        except ValueError:
+            pmesh = dmesh = None
+            print("disagg: fewer than 2 local devices, colocating both pools "
+                  "(set XLA_FLAGS=--xla_force_host_platform_device_count=2 "
+                  "for real two-pool overlap on CPU)")
+        eng = DisaggEngine(cfg, params, prefill_mesh=pmesh,
+                           decode_mesh=dmesh, **kw)
+    else:
+        eng = EngineCore(cfg, params, **kw)
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p, seed=args.seed,
                         stop_tokens=tuple(args.stop_token or ()))
     if args.serve:
         try:
             return asyncio.run(serve_http(eng, sp, args.host, args.port,
-                                          max_queue=args.max_queue))
+                                          max_queue=args.max_queue,
+                                          grace_s=args.grace))
         except KeyboardInterrupt:
             return 0
 
@@ -335,6 +413,12 @@ def main(argv=None) -> int:
               f"{stats.prefix_misses} misses ({stats.prefix_hit_tokens} tokens reused)")
         print(f"  preemptions       : {stats.preemptions}  "
               f"admission blocks: {stats.admission_blocks}")
+    if args.disagg:
+        ho = eng.snapshot()["disagg"]["handoff"]
+        print(f"  KV handoff        : {ho['segments']} segments "
+              f"({ho['eager_segments']} eager), "
+              f"{ho['bytes_shipped']/2**20:.2f} MiB shipped, "
+              f"{ho['installs']} installs")
     if stats.swap_agg.count:
         print(f"  swap latency hidden by overlap: "
               f"{100*stats.swap_agg.mean_hidden_fraction:.0f}% (paper: ~75%); "

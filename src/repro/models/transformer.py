@@ -344,6 +344,32 @@ def prefill_chunk_paged(
     return logits[:, -1, :], KVCache(new_k, new_v), new_prefix
 
 
+def prefill_chunk_kv(
+    params: dict,
+    tokens: jax.Array,  # (1, C) int32 — one right-padded chunk of the prompt
+    prefix: KVCache,  # (L, 1, Hkv, Cap, D) fp32 running prefix (donated)
+    prefix_len: jax.Array,  # traced scalar — tokens already prefilled
+    last_pos: jax.Array,  # traced scalar, chunk-local
+    cfg: ModelConfig,
+    pctx: PartitionCtx = NULL_CTX,
+    prefix_width=None,  # compile-time attention-visible prefix width
+):
+    """One chunk of prefill computed WITHOUT an install — the disaggregated
+    prefill pool's chunk program.  Identical math to ``prefill_chunk`` /
+    ``prefill_chunk_paged`` (same ``_prefill_chunk_body``, same logits
+    epilogue); the chunk's fp KV is RETURNED instead of written, so the
+    caller can ship it across the pool boundary and install it decode-side
+    with the very same quantize-on-write scatter the colocated engine fuses
+    in here — which is what keeps the two-pool engine bit-identical.
+    Returns (logits (1, Vp) of ``last_pos``, chunk KV (L, 1, Hkv, C, D) fp,
+    new_prefix)."""
+    x, tok_k, tok_v, new_prefix = _prefill_chunk_body(
+        params, tokens, prefix, prefix_len, cfg, pctx, prefix_width=prefix_width)
+    x_last = jax.lax.dynamic_slice_in_dim(x, last_pos, 1, axis=1)
+    logits = _logits(params, x_last, cfg, pctx)
+    return logits[:, -1, :], KVCache(tok_k, tok_v), new_prefix
+
+
 def _kv_buffer(shape, dtype, kv_dtype: str):
     """One K or V cache buffer: a plain fp array, or a QuantKV holding the
     packed payload (int8, or uint8 nibble pairs for int4) plus the fp32

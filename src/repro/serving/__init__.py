@@ -1,6 +1,13 @@
 from repro.serving.arrivals import Arrival, bursty_times, make_trace, poisson_times
 from repro.serving.async_engine import AdmissionRejected, AsyncEngine, RequestStream
 from repro.serving.core import EngineCore, EngineStats, Request
+from repro.serving.disagg import (
+    DisaggEngine,
+    DisaggRunner,
+    KVHandoffChannel,
+    PrefillPool,
+    make_disagg_meshes,
+)
 from repro.serving.engine import ServingEngine
 from repro.serving.fair_queue import WeightedFairQueue
 from repro.serving.outputs import OutputProcessor, RequestOutput

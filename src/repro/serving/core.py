@@ -192,6 +192,10 @@ class EngineStats:
     queue_wait: LatencyStat = dataclasses.field(default_factory=LatencyStat)
     ttft: LatencyStat = dataclasses.field(default_factory=LatencyStat)
     itl: LatencyStat = dataclasses.field(default_factory=LatencyStat)
+    # per-tenant queue-wait aggregates (same bounded windows), keyed by
+    # Request.tenant — pairs with the fair queue's lane depths in
+    # EngineCore.snapshot()["tenants"] so WFQ behavior is observable
+    tenant_queue_wait: Dict[str, LatencyStat] = dataclasses.field(default_factory=dict)
     aborts: int = 0  # requests cancelled mid-flight or while queued
     sheds: int = 0  # queued requests dropped by SLO admission control
 
@@ -368,11 +372,13 @@ class ModelRunner:
         # transformer._prefill_chunk_body.  One buffer suffices: the
         # engine runs at most one chunked prefill at a time.
         self.chunk_prefix = None
+        self.chunk_cap = None  # mirror capacity (valid when prefill_chunk set)
         if prefill_chunk is not None:
             from repro.layers.attention import KVCache as _KVCache
 
-            cap = (cdiv(max_len, block_size) * block_size
-                   if cache_layout == "paged" else max_len)
+            cap = self.chunk_cap = (
+                cdiv(max_len, block_size) * block_size
+                if cache_layout == "paged" else max_len)
             shape = (cfg.num_layers, 1, cfg.num_kv_heads, cap, cfg.head_dim)
             self.chunk_prefix = _KVCache(jnp.zeros(shape, jnp.float32),
                                          jnp.zeros(shape, jnp.float32))
@@ -465,7 +471,7 @@ class ModelRunner:
         >= start, clamped to the mirror capacity — O(log(cap / chunk))
         distinct widths, and a short prompt's chunks never attend over the
         mirror's full max_len capacity."""
-        cap = jax.tree.leaves(self.chunk_prefix)[0].shape[3]
+        cap = self.chunk_cap
         if start == 0:
             return 0
         g = self.prefill_chunk
@@ -938,6 +944,13 @@ class Scheduler:
 class EngineCore:
     """The incremental serving core; one ``step()`` = one scheduling quantum."""
 
+    # The runner to build — the one seam a subclass needs to change what is
+    # compiled and device-resident while inheriting every scheduling,
+    # preemption, chunking, and speculative-decode path unchanged (the
+    # disaggregated engine swaps in a runner whose prefill computes on a
+    # separate pool; see serving.disagg).
+    runner_cls = ModelRunner
+
     def __init__(
         self,
         cfg: ModelConfig,
@@ -959,7 +972,7 @@ class EngineCore:
         spec_ngram: int = 3,  # prompt-lookup n-gram size
     ):
         self.cfg = cfg
-        self.runner = ModelRunner(
+        self.runner = self.runner_cls(
             cfg, params, n_slots=n_slots, max_len=max_len, prompt_len=prompt_len,
             mode=mode, cache_layout=cache_layout, block_size=block_size,
             num_blocks=num_blocks, kv_dtype=kv_dtype, mesh=mesh, overlap=overlap,
@@ -1047,10 +1060,19 @@ class EngineCore:
         return out
 
     def snapshot(self) -> dict:
-        """``EngineStats.snapshot()`` plus the engine-level KV accounting —
+        """``EngineStats.snapshot()`` plus the engine-level KV accounting and
+        the per-tenant fair-queue view (lane depths + queue-wait windows) —
         the one stats block benchmarks and the /stats endpoint emit."""
         snap = self.stats.snapshot()
         snap["kv_bytes"] = self.kv_bytes()
+        depths = self.scheduler.queue.lane_depths()
+        waits = self.stats.tenant_queue_wait
+        snap["tenants"] = {
+            t: {"queued": depths.get(t, 0),
+                "queue_wait_s": waits[t].snapshot() if t in waits
+                else LatencyStat().snapshot()}
+            for t in sorted(set(depths) | set(waits))
+        }
         return snap
 
     def reset_stats(self) -> None:
@@ -1398,6 +1420,8 @@ class EngineCore:
         if req.queue_wait_s is None and req.arrival_time_s:
             req.queue_wait_s = time.perf_counter() - req.arrival_time_s
             self.stats.queue_wait.record(req.queue_wait_s)
+            self.stats.tenant_queue_wait.setdefault(
+                req.tenant, LatencyStat()).record(req.queue_wait_s)
 
     def _block_admission(self, req: Request, slot: Optional[int] = None) -> None:
         """One admission attempt is blocked on pool pressure: roll the slot

@@ -1,0 +1,24 @@
+"""Disaggregated prefill/decode serving: two phase-specialized pools.
+
+The paper time-multiplexes one edge fabric between a compute-bound prefill
+engine and a bandwidth-bound decode engine; at pod scale the same asymmetry
+supports SPATIAL disaggregation (Splitwise-style).  This package is that
+runtime: a ``PrefillPool`` (compute-phase programs on their own mesh), a
+``DisaggRunner``-powered decode pool (the base ``ModelRunner`` machinery on
+the decode mesh), a ``KVHandoffChannel`` streaming finished prefill KV
+across the boundary (eager per-chunk shipping + deferred installs), and
+``DisaggEngine``, the ``EngineCore`` subclass routing requests across the
+pools while keeping greedy outputs bit-identical to the single engine.
+"""
+from repro.serving.disagg.decode_pool import DisaggRunner
+from repro.serving.disagg.engine import DisaggEngine, make_disagg_meshes
+from repro.serving.disagg.handoff import KVHandoffChannel
+from repro.serving.disagg.prefill_pool import PrefillPool
+
+__all__ = [
+    "DisaggEngine",
+    "DisaggRunner",
+    "KVHandoffChannel",
+    "PrefillPool",
+    "make_disagg_meshes",
+]

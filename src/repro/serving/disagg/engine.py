@@ -1,0 +1,106 @@
+"""``DisaggEngine``: the two-pool serving engine / cross-pool router.
+
+Subclasses ``EngineCore`` so admission (WFQ lanes, SLO shedding, swap
+policies), chunked-prefill quanta, speculative decode, preemption, aborts,
+and the async/HTTP front-ends all work unchanged — the engine IS the router:
+``step()`` admits from the same fair queue, drives prefill on the prefill
+pool through ``DisaggRunner``, and tracks each request across the pool
+boundary (mid-prefill it holds a decode-pool slot + preallocated pages but
+sits out decode rounds; its KV streams over the ``KVHandoffChannel``; once
+the final segment lands it joins the decode set).
+
+Meshes: pass an explicit ``prefill_mesh`` + ``decode_mesh`` pair, or a
+single mesh with a leading ``"pod"`` axis to split via
+``core.disagg.split_pod_meshes``, or neither — both pools then share the
+default device, which keeps the full engine (channel included) runnable on
+one CPU for tests.  Forced host platforms
+(``XLA_FLAGS=--xla_force_host_platform_device_count=N``) give real
+multi-device pools in CI; ``make_disagg_meshes`` builds the standard
+two-pod split from the local devices.
+
+Greedy outputs are bit-identical to the colocated ``EngineCore`` across
+{contiguous, paged} x {fp, int8, int4}, chunked prefill included — pinned
+by tests/test_disagg_serving.py; ``benchmarks/disagg_interference.py``
+shows the payoff (decode ITL under concurrent long-prompt prefill).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.disagg import split_pod_meshes
+from repro.serving.core import EngineCore
+from repro.serving.disagg.decode_pool import DisaggRunner
+from repro.serving.disagg.handoff import KVHandoffChannel
+from repro.serving.disagg.prefill_pool import PrefillPool
+
+
+def make_disagg_meshes(devices=None, *, tp: int = 1):
+    """(prefill_mesh, decode_mesh): the first ``2 * tp`` local devices split
+    pod-major into two ``tp``-wide tensor-parallel pools."""
+    if devices is None:
+        devices = jax.devices()
+    need = 2 * tp
+    if len(devices) < need:
+        raise ValueError(
+            f"need {need} devices for two {tp}-wide pools, have {len(devices)} "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count on CPU)")
+    devs = np.array(devices[:need]).reshape(2, tp)
+    return split_pod_meshes(Mesh(devs, ("pod", "model")))
+
+
+def _mesh_info(mesh: Optional[Mesh]) -> dict:
+    if mesh is None:
+        return {"devices": 1, "axes": None}  # default-device pool
+    return {"devices": int(mesh.devices.size),
+            "axes": {n: int(s) for n, s in
+                     zip(mesh.axis_names, mesh.devices.shape)}}
+
+
+class DisaggEngine(EngineCore):
+    """EngineCore over a prefill pool + decode pool + handoff channel."""
+
+    runner_cls = DisaggRunner
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        prefill_mesh: Optional[Mesh] = None,
+        decode_mesh: Optional[Mesh] = None,
+        mesh: Optional[Mesh] = None,  # a ("pod", ...) mesh to split instead
+        handoff_spec: Optional[P] = None,  # decode-pool sharding of shipped KV
+        **engine_kwargs,
+    ):
+        if mesh is not None:
+            if prefill_mesh is not None or decode_mesh is not None:
+                raise ValueError(
+                    "pass either mesh (a pod mesh to split) or an explicit "
+                    "prefill_mesh/decode_mesh pair, not both")
+            prefill_mesh, decode_mesh = split_pod_meshes(mesh)
+        if (prefill_mesh is None) != (decode_mesh is None):
+            raise ValueError("prefill_mesh and decode_mesh go together")
+        # the base engine IS the decode pool: runner caches, decode/verify
+        # programs, slots, replay all land on decode_mesh
+        super().__init__(cfg, params, mesh=decode_mesh, **engine_kwargs)
+        r = self.runner
+        self.handoff = KVHandoffChannel(decode_mesh, spec=handoff_spec)
+        self.prefill_pool = PrefillPool(
+            cfg, params, mesh=prefill_mesh, max_len=r.max_len, mode=r.mode,
+            cache_layout=r.cache_layout, block_size=r.block_size,
+            kv_dtype=r.kv_dtype, prefill_chunk=r.prefill_chunk)
+        r.attach(self.prefill_pool, self.handoff)
+
+    def snapshot(self) -> dict:
+        snap = super().snapshot()
+        snap["disagg"] = {
+            "handoff": self.handoff.snapshot(),
+            "prefill_pool": _mesh_info(self.prefill_pool.mesh),
+            "decode_pool": _mesh_info(self.runner.engine.mesh),
+        }
+        return snap

@@ -114,6 +114,17 @@ class WeightedFairQueue:
                     return req
         return None
 
+    def lane_depths(self) -> Dict[str, int]:
+        """Queued depth per tenant — DRR lane lengths, with head-lane
+        requeues (blocked admissions / preemption restarts) counted under
+        their own tenant.  Feeds ``EngineCore.snapshot()["tenants"]`` so
+        per-tenant queueing is observable from ``GET /stats``."""
+        depths = {t: len(lane) for t, lane in self._lanes.items() if lane}
+        for req in self._head:
+            t = self._tenant(req)
+            depths[t] = depths.get(t, 0) + 1
+        return depths
+
     def peek(self) -> Optional[object]:
         """The request the next ``popleft`` would return (no deficit spent)."""
         if self._head:

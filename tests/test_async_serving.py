@@ -1,7 +1,9 @@
 """Async serving front-end: AsyncEngine bit-identity against the sync core,
-backpressure, aborts (with pool accounting), weighted fair queueing, and the
-SLO-aware policy's deadline shedding."""
+backpressure, aborts (with pool accounting), weighted fair queueing, the
+SLO-aware policy's deadline shedding, and HTTP graceful shutdown."""
 import asyncio
+import json
+import socket
 
 import jax
 import jax.numpy as jnp
@@ -9,8 +11,15 @@ import numpy as np
 import pytest
 
 from repro.configs import reduced_config
+from repro.launch.serve import serve_http
 from repro.models import get_model
-from repro.serving import AdmissionRejected, AsyncEngine, EngineCore, Request
+from repro.serving import (
+    AdmissionRejected,
+    AsyncEngine,
+    EngineCore,
+    Request,
+    SamplingParams,
+)
 from repro.serving.fair_queue import WeightedFairQueue
 from repro.serving.slo import SLOAwareSwapPolicy, SLOConfig
 
@@ -315,6 +324,108 @@ def test_slo_policy_sheds_doomed_head(tiny):
                for o in outs)
     assert eng.stats.sheds == 1
     assert eng.finished["ok"].finish_reason in ("stop", "length")
+
+
+# ------------------------------------------------------- graceful shutdown --
+
+
+def _free_port():
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+async def _request(port, method, path, body=b""):
+    """One full HTTP exchange on a fresh connection (server closes it)."""
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    writer.write(f"{method} {path} HTTP/1.1\r\nHost: t\r\n"
+                 f"Content-Length: {len(body)}\r\n\r\n".encode() + body)
+    await writer.drain()
+    data = await reader.read()
+    writer.close()
+    try:
+        await writer.wait_closed()
+    except (ConnectionResetError, BrokenPipeError):
+        pass
+    head, _, payload = data.partition(b"\r\n\r\n")
+    return head.split(b"\r\n", 1)[0].decode(), payload
+
+
+async def _open_stream(port, max_new):
+    """Start a generate stream and block until its first SSE delta, so the
+    caller knows the request is live inside the engine."""
+    body = json.dumps({"prompt": list(range(3, 9)), "max_new": max_new}).encode()
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    writer.write(f"POST /generate HTTP/1.1\r\nHost: t\r\n"
+                 f"Content-Length: {len(body)}\r\n\r\n".encode() + body)
+    await writer.drain()
+    while True:  # skip the response headers; keep from the first delta on
+        line = await asyncio.wait_for(reader.readline(), 30)
+        if line.startswith(b"data: "):
+            return reader, writer, line
+
+
+def _sse_events(raw):
+    return [json.loads(chunk[len(b"data: "):])
+            for chunk in raw.split(b"\n\n") if chunk.startswith(b"data: ")]
+
+
+def test_graceful_shutdown_drains_inflight_and_rejects_new(tiny):
+    """stop -> draining: new generates answer 503, /stats stays up, and the
+    in-flight stream runs to natural completion inside the grace window."""
+    cfg, params = tiny
+
+    async def go():
+        core = EngineCore(cfg, params, n_slots=2, max_len=256, prompt_len=8)
+        ready, stop = asyncio.Event(), asyncio.Event()
+        port = _free_port()
+        task = asyncio.create_task(serve_http(
+            core, SamplingParams(), "127.0.0.1", port,
+            ready=ready, stop=stop, grace_s=60.0))
+        await asyncio.wait_for(ready.wait(), 30)
+        reader, writer, head = await _open_stream(port, max_new=200)
+        stop.set()
+        await asyncio.sleep(0.05)  # let the server flip into draining
+        status, payload = await _request(port, "POST", "/generate",
+                                         json.dumps({"prompt": [1, 2]}).encode())
+        assert status.startswith("HTTP/1.1 503"), status
+        assert b"draining" in payload
+        status, payload = await _request(port, "GET", "/stats")
+        assert status.startswith("HTTP/1.1 200"), status
+        assert json.loads(payload)["frontend"]["open_streams"] >= 1
+        events = _sse_events(head + await asyncio.wait_for(reader.read(), 60))
+        assert events[-1]["finished"]
+        assert events[-1]["finish_reason"] == "length"
+        assert sum(len(e["new_token_ids"]) for e in events) == 200
+        writer.close()
+        assert await asyncio.wait_for(task, 60) == 0
+
+    asyncio.run(go())
+
+
+def test_graceful_shutdown_aborts_at_grace_deadline(tiny):
+    """grace exhausted: the engine shutdown cuts the in-flight stream with a
+    terminal ``finish_reason="abort"`` delta instead of hanging the reader."""
+    cfg, params = tiny
+
+    async def go():
+        core = EngineCore(cfg, params, n_slots=2, max_len=256, prompt_len=8)
+        ready, stop = asyncio.Event(), asyncio.Event()
+        port = _free_port()
+        task = asyncio.create_task(serve_http(
+            core, SamplingParams(), "127.0.0.1", port,
+            ready=ready, stop=stop, grace_s=0.0))
+        await asyncio.wait_for(ready.wait(), 30)
+        reader, writer, head = await _open_stream(port, max_new=240)
+        stop.set()
+        events = _sse_events(head + await asyncio.wait_for(reader.read(), 60))
+        assert events[-1]["finished"]
+        assert events[-1]["finish_reason"] == "abort"
+        assert sum(len(e["new_token_ids"]) for e in events) < 240
+        writer.close()
+        assert await asyncio.wait_for(task, 60) == 0
+
+    asyncio.run(go())
 
 
 def test_static_policies_never_shed(tiny):
