@@ -44,6 +44,56 @@ def stats_block(eng) -> dict:
     return eng.snapshot()
 
 
+LATENCY_COLUMNS = ("engine", "metric", "count", "mean_ms", "p50_ms", "p95_ms")
+
+
+def latency_rows(eng, label: str = "engine") -> list[dict]:
+    """Per-engine latency table rows from the typed metrics registry — the
+    SAME histogram summaries ``/metrics`` serves, so a benchmark's printed
+    latency table cannot drift from the scrape surface.  One row per
+    engine-latency histogram (queue wait, TTFT, ITL)."""
+    rows = []
+    snap = eng.metrics_registry().snapshot()
+    for name, h in sorted(snap["histograms"].items()):
+        # labeled histograms (per-tenant) nest one summary per label set
+        series = h.items() if "count" not in h else [("", h)]
+        for labels, s in series:
+            rows.append({
+                "engine": label,
+                "metric": f"{name}{{{labels}}}" if labels else name,
+                "count": s["count"],
+                "mean_ms": 1e3 * s["mean"],
+                "p50_ms": 1e3 * s["p50"],
+                "p95_ms": 1e3 * s["p95"],
+            })
+    return rows
+
+
+def add_trace_arg(parser) -> None:
+    """The shared ``--trace-out PATH`` benchmark flag (Chrome trace JSON)."""
+    parser.add_argument("--trace-out", default=None, metavar="PATH",
+                        help="record engine spans during the measurement and "
+                             "write a Chrome trace-event JSON here "
+                             "(chrome://tracing / ui.perfetto.dev)")
+
+
+def start_trace(path) -> None:
+    if path:
+        from repro.obs.trace import TRACER
+
+        TRACER.enable()
+
+
+def finish_trace(path) -> None:
+    if path:
+        from repro.obs.trace import TRACER
+
+        trace = TRACER.export_chrome_trace(path)
+        TRACER.disable()
+        print(f"trace: {len(trace['traceEvents'])} events -> {path} "
+              f"({TRACER.dropped} dropped)")
+
+
 def load_dryrun_records() -> list[dict]:
     if not DRYRUN_DIR.exists():
         return []

@@ -46,7 +46,8 @@ from pathlib import Path
 
 import numpy as np
 
-from .common import markdown_table, save_result
+from .common import (LATENCY_COLUMNS, add_trace_arg, finish_trace,
+                     latency_rows, markdown_table, save_result, start_trace)
 
 REPO = Path(__file__).resolve().parent.parent
 MARKER = "DISAGG_INTERFERENCE_JSON:"
@@ -146,8 +147,16 @@ def _measure(tiny: bool) -> dict:
                                decode_mesh=dmesh, **knobs),
     }
 
-    rows, itl, handoff = [], {}, None
+    from repro.obs.trace import TRACER
+
+    rows, lat_rows, itl, handoff = [], [], {}, None
     for mode, eng in engines.items():
+        if TRACER.enabled:
+            # one engine per trace window: warmup ids repeat across engines
+            # and the tracer's exactly-once finish assertion is per-process,
+            # so each mode starts a fresh buffer (the export keeps the LAST
+            # mode — disagg, the one whose lane overlap the trace is for)
+            TRACER.clear()
         # warmup hits every shape bucket the measured phases use (decoder
         # prompt, full + final chunk, decode round), on THIS engine's
         # program caches
@@ -177,6 +186,7 @@ def _measure(tiny: bool) -> dict:
                 "itl_p95_ms": 1e3 * float(np.percentile(gaps, 95)),
                 "itl_max_ms": 1e3 * float(np.max(gaps)),
             })
+        lat_rows.extend(latency_rows(eng, label=mode))
         if mode == "disagg":
             handoff = eng.snapshot()["disagg"]["handoff"]
 
@@ -211,6 +221,7 @@ def _measure(tiny: bool) -> dict:
     return {
         "name": "disagg_interference" + ("_tiny" if tiny else ""),
         "rows": rows,
+        "latency_rows": lat_rows,
         "handoff": handoff,
         "ratios": ratios,
         "notes": (
@@ -264,11 +275,17 @@ def main(argv=None) -> int:
                    help="CI smoke: small model/workload, structural checks only")
     p.add_argument("--emit-json", action="store_true",
                    help="print the machine-readable result marker (harness)")
+    add_trace_arg(p)
     args = p.parse_args(argv)
     _ensure_devices(2)
+    start_trace(args.trace_out)
     result = _measure(tiny=args.tiny)
+    finish_trace(args.trace_out)
     save_result(result)
     print(markdown_table(result["rows"], result.get("columns")))
+    print()
+    print("engine latency (metrics registry — the /metrics summaries):")
+    print(markdown_table(result["latency_rows"], list(LATENCY_COLUMNS)))
     print()
     print(result["notes"])
     if args.emit_json:

@@ -27,6 +27,7 @@ from . import (
     spec_decode,
     table1_comparison,
     table2_resources,
+    tracing_overhead,
     traffic_storm,
 )
 from .common import render
@@ -46,6 +47,7 @@ BENCHES = {
     "spec_decode": spec_decode,
     "policy_compare": policy_compare,
     "traffic_storm": traffic_storm,
+    "tracing_overhead": tracing_overhead,
     "disagg_interference": disagg_interference,
     "beyond_paper": beyond_paper,
 }

@@ -48,7 +48,9 @@ import time
 
 import numpy as np
 
-from .common import markdown_table, save_result, stats_block
+from .common import (LATENCY_COLUMNS, add_trace_arg, finish_trace,
+                     latency_rows, markdown_table, save_result, start_trace,
+                     stats_block)
 
 TENANTS = (("interactive", 2.0, 0.5), ("batch", 1.0, 0.5))
 
@@ -140,11 +142,19 @@ async def _consume(stream, t_submit):
     return {"ttft_s": ttft, "gaps": gaps, "tokens": toks, "finish_reason": reason}
 
 
-def _drive(policy, cfg, params, trace, knobs, *, max_new, max_queue, prompt_seed):
+def _drive(policy, cfg, params, trace, knobs, *, max_new, max_queue,
+           prompt_seed, label="engine"):
     """One (trace x policy) cell: replay the trace against a fresh engine."""
     from repro.serving import AdmissionRejected, AsyncEngine, EngineCore, Request
 
     async def go():
+        from repro.obs.trace import TRACER
+
+        if TRACER.enabled:
+            # fresh buffer per cell: request ids repeat across cells and the
+            # tracer's exactly-once finish assertion is process-wide, so the
+            # exported trace covers the LAST (trace x policy) cell
+            TRACER.clear()
         core = EngineCore(cfg, params, swap_policy=policy, **knobs)
         # warm this engine's XLA programs before the trace clock starts, so
         # the storm measures serving, not compilation: one warmup prompt
@@ -183,7 +193,8 @@ def _drive(policy, cfg, params, trace, knobs, *, max_new, max_queue, prompt_seed
             for rid, task in consumers.items():
                 results[rid] = await task
             snap = stats_block(eng)
-        return results, rejected, snap
+            lat = latency_rows(eng, label=label)
+        return results, rejected, snap, lat
 
     return asyncio.run(go())
 
@@ -310,12 +321,14 @@ def run(tiny: bool = False) -> dict:
         return name
 
     policies = ["drain", "swap-aware", "slo-aware"]
-    rows, tokens = [], {}
+    rows, lat_rows, tokens = [], [], {}
     for tname, trace in traces.items():
         for policy in policies:
-            results, rejected, snap = _drive(
+            results, rejected, snap, lat = _drive(
                 _make_policy(policy), cfg, params, trace, knobs,
-                max_new=max_new, max_queue=max_queue, prompt_seed=3)
+                max_new=max_new, max_queue=max_queue, prompt_seed=3,
+                label=f"{tname}/{policy}")
+            lat_rows.extend(lat)
             rows.append(_summarize(tname, policy, results, rejected, snap,
                                    slo, offered=len(trace)))
             tokens[(tname, policy)] = {
@@ -351,6 +364,7 @@ def run(tiny: bool = False) -> dict:
     result = {
         "name": "traffic_storm" + ("_tiny" if tiny else ""),
         "rows": rows,
+        "latency_rows": lat_rows,
         "slo": {"ttft_target_ms": 1e3 * slo.ttft_target_s,
                 "itl_target_ms": 1e3 * slo.itl_target_s,
                 "measured_round_cost_ms": 1e3 * round_cost,
@@ -388,9 +402,15 @@ if __name__ == "__main__":
     p = argparse.ArgumentParser()
     p.add_argument("--tiny", action="store_true",
                    help="CI smoke mode: short trace, structural checks only")
+    add_trace_arg(p)
     args = p.parse_args()
+    start_trace(args.trace_out)
     res = run(tiny=args.tiny)
+    finish_trace(args.trace_out)
     print(markdown_table(res["rows"], res.get("columns")))
+    print()
+    print("engine latency (metrics registry — the /metrics summaries):")
+    print(markdown_table(res["latency_rows"], list(LATENCY_COLUMNS)))
     print()
     print(res["notes"])
     sys.exit(0 if all(res["checks"].values()) else 1)

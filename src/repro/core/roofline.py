@@ -92,6 +92,24 @@ def decode_kv_stream_time_speculative(
     return decode_kv_stream_time(cfg, context, kv_dtype, chip) / e
 
 
+def prefill_compute_time(n_params: float, chip: ChipSpec = DEFAULT_CHIP) -> float:
+    """Compute-roofline seconds per PREFILL token: the forward pass does
+    ~2 FLOPs per parameter per token (6N counts the backward pass too), so
+    a compute-bound prefill streams tokens no faster than
+    ``2 N_params / peak``.  The measured analogue is
+    ``EngineStats.t_prefill / prefill_tokens``."""
+    return 2.0 * float(n_params) / chip.peak_flops_bf16
+
+
+def roofline_residency(bound_s: float, measured_s: float) -> float:
+    """bound / measured — the fraction of the phase's roofline the engine
+    actually achieves (1.0 = at the bound; small = drifted far above it).
+    0.0 when nothing was measured, so exporters can emit it unconditionally."""
+    if measured_s <= 0.0:
+        return 0.0
+    return float(bound_s) / float(measured_s)
+
+
 def decode_arithmetic_intensity(cfg, kv_dtype: str = "fp") -> float:
     """Attention FLOPs per KV byte streamed in decode (flops/byte).
 

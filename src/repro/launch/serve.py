@@ -16,7 +16,11 @@ so the swap policy actually has transitions to schedule.
 With ``--serve`` the same engine runs behind an HTTP front-end on stdlib
 asyncio streams (no web framework): ``POST /generate`` streams each token
 delta as a server-sent event, ``GET /stats`` returns the engine snapshot as
-JSON, and saturation surfaces as ``429`` with the admission-reject reason.
+JSON (``GET /stats/v2`` the typed registry form), ``GET /metrics`` serves
+the Prometheus text exposition, and saturation surfaces as ``429`` with the
+admission-reject reason.  ``--trace-out trace.json`` records the run's
+lifecycle/engine spans and writes a Chrome trace (chrome://tracing,
+https://ui.perfetto.dev) on exit — batch and server modes both.
 
     python -m repro.launch.serve --arch smollm-135m --reduced --serve --port 8035
     curl -N -d '{"prompt": [3, 1, 4, 1, 5, 9], "max_new": 8}' \
@@ -100,6 +104,15 @@ async def handle_connection(eng: AsyncEngine, default_params: SamplingParams,
 
         if method == "GET" and path == "/stats":
             _http_payload(writer, "200 OK", json.dumps(eng.snapshot()).encode())
+        elif method == "GET" and path == "/stats/v2":
+            _http_payload(writer, "200 OK",
+                          json.dumps(eng.snapshot_v2()).encode())
+        elif method == "GET" and path == "/metrics":
+            from repro.obs.metrics import PROMETHEUS_CONTENT_TYPE
+
+            _http_payload(writer, "200 OK",
+                          eng.metrics_registry().prometheus_text().encode(),
+                          ctype=PROMETHEUS_CONTENT_TYPE)
         elif method == "POST" and path == "/generate":
             if state is not None and state.draining:
                 _http_payload(writer, "503 Service Unavailable", json.dumps(
@@ -196,7 +209,7 @@ async def serve_http(core: EngineCore, default_params: SamplingParams,
                 host, port)
             bound = server.sockets[0].getsockname()
             print(f"serving on http://{bound[0]}:{bound[1]}  "
-                  f"(POST /generate streams SSE, GET /stats)")
+                  f"(POST /generate streams SSE, GET /stats, GET /metrics)")
             if ready is not None:
                 ready.set()
             async with server:
@@ -286,6 +299,10 @@ def main(argv=None) -> int:
     p.add_argument("--grace", type=float, default=5.0,
                    help="server mode: seconds to let in-flight streams "
                         "finish after SIGINT/SIGTERM before aborting them")
+    p.add_argument("--trace-out", default=None, metavar="PATH",
+                   help="record per-request lifecycle + engine spans and "
+                        "write a Chrome trace-event JSON here on exit "
+                        "(open in chrome://tracing or ui.perfetto.dev)")
     p.add_argument("--temperature", type=float, default=0.0,
                    help="sampling temperature (0 = greedy, the paper setting)")
     p.add_argument("--top-k", type=int, default=0, help="top-k truncation (0 = off)")
@@ -322,6 +339,10 @@ def main(argv=None) -> int:
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p, seed=args.seed,
                         stop_tokens=tuple(args.stop_token or ()))
+    if args.trace_out:
+        from repro.obs.trace import TRACER
+
+        TRACER.enable()
     if args.serve:
         try:
             return asyncio.run(serve_http(eng, sp, args.host, args.port,
@@ -329,6 +350,11 @@ def main(argv=None) -> int:
                                           grace_s=args.grace))
         except KeyboardInterrupt:
             return 0
+        finally:
+            if args.trace_out:
+                trace = TRACER.export_chrome_trace(args.trace_out)
+                print(f"trace: {len(trace['traceEvents'])} events -> "
+                      f"{args.trace_out} ({TRACER.dropped} dropped)")
 
     rng = np.random.default_rng(args.seed)
     ragged_lo = max(1, min(4, args.prompt_len))  # keep low < high for tiny prompt-len
@@ -423,8 +449,18 @@ def main(argv=None) -> int:
         print(f"  swap latency hidden by overlap: "
               f"{100*stats.swap_agg.mean_hidden_fraction:.0f}% (paper: ~75%); "
               f"mean exposed cost {1e3*stats.swap_agg.mean_cost:.2f} ms")
+    drift = eng.snapshot().get("roofline_drift", {})
+    for phase, d in drift.items():
+        print(f"  roofline [{phase:>11}]: measured "
+              f"{1e6*d['measured_s_per_token']:.2f} us/tok vs bound "
+              f"{1e6*d['bound_s_per_token']:.3f} us/tok "
+              f"(residency {d['residency_ratio']:.4f})")
     for rid in sorted(eng.finished)[:3]:
         print(f"  {rid}: {eng.finished[rid].out_tokens[:8]}...")
+    if args.trace_out:
+        trace = TRACER.export_chrome_trace(args.trace_out)
+        print(f"  trace             : {len(trace['traceEvents'])} events -> "
+              f"{args.trace_out} ({TRACER.dropped} dropped)")
     return 0
 
 

@@ -1,0 +1,10 @@
+from repro.obs.drift import PHASES, roofline_drift
+from repro.obs.engine import engine_registry, engine_snapshot, snapshot_v2
+from repro.obs.metrics import (
+    PROMETHEUS_CONTENT_TYPE,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
+from repro.obs.trace import TRACER, Tracer

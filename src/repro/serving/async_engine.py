@@ -45,6 +45,7 @@ from typing import AsyncIterator, Deque, Dict, Optional
 
 import numpy as np
 
+from repro.obs.trace import TRACER
 from repro.serving.core import EngineCore, Request
 from repro.serving.outputs import RequestOutput
 from repro.serving.sampling import SamplingParams
@@ -213,6 +214,8 @@ class AsyncEngine:
         q: asyncio.Queue = asyncio.Queue()
         self._streams[rid] = _Stream(q, req)
         self._pending.append(req)  # the loop drains between quanta
+        if TRACER.enabled:
+            TRACER.instant("req.enqueue", request_id=rid, tenant=tenant)
         self._wake.set()
         return RequestStream(self, rid, q)
 
@@ -289,14 +292,30 @@ class AsyncEngine:
     # -------------------------------------------------------------- metrics --
 
     def snapshot(self) -> dict:
-        """Engine stats block plus front-end admission counters."""
-        snap = self.core.snapshot()
-        snap["frontend"] = {
+        """Engine stats block plus front-end admission counters — the same
+        shared builder ``EngineCore.snapshot()`` uses (obs.engine), with the
+        front-end section passed as the one extra."""
+        from repro.obs.engine import engine_snapshot
+
+        return engine_snapshot(self.core, extra={"frontend": {
             "accepted": self.accepted,
             "rejected": self.rejected,
             "reject_reasons": dict(self.reject_reasons),
             "pending": len(self._pending),
             "open_streams": len(self._streams),
             "max_queue": self.max_queue,
-        }
-        return snap
+        }})
+
+    def metrics_registry(self):
+        """The engine registry extended with front-end admission metrics
+        (built once; callback views stay live across scrapes)."""
+        if getattr(self, "_metrics_registry", None) is None:
+            from repro.obs.engine import engine_registry
+
+            self._metrics_registry = engine_registry(self.core, frontend=self)
+        return self._metrics_registry
+
+    def snapshot_v2(self) -> dict:
+        from repro.obs.engine import snapshot_v2
+
+        return snapshot_v2(self.core, registry=self.metrics_registry())

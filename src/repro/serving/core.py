@@ -86,6 +86,7 @@ from repro.configs.base import ModelConfig
 from repro.core.kv_cache import KVSlotManager, insert_prefill_kv
 from repro.core.swap import SwapAggregates, SwapController, SwapTiming
 from repro.models import get_model
+from repro.obs.trace import TRACER
 from repro.serving.outputs import OutputProcessor, RequestOutput
 from repro.serving.fair_queue import WeightedFairQueue
 from repro.serving.paging import PagedKVCache, PoolExhausted, PrefixMatch, cdiv
@@ -185,6 +186,9 @@ class EngineStats:
     verify_rounds: int = 0  # decode rounds run through the verify program
     slot_rounds: int = 0  # sum over decode rounds of active slots — the
     # per-slot normalizer (a plain batched round is batch-many slot-rounds)
+    decode_ctx_tokens: int = 0  # context tokens streamed per decode pass,
+    # summed over slot-rounds — decode_ctx_tokens / slot_rounds is the mean
+    # context the Eq. (5) KV-stream bound is evaluated at (obs.drift)
     # client-visible latency aggregates (bounded windows, see serving.slo):
     # queue wait (arrival -> first successful admission), TTFT (arrival ->
     # first token), ITL (gap between consecutive streamed deltas).  The
@@ -234,7 +238,7 @@ class EngineStats:
             "prefix_hits", "prefix_misses", "prefix_hit_tokens",
             "preemptions", "admission_blocks", "replayed_tokens", "t_replay",
             "draft_tokens", "accepted_tokens", "verify_rounds", "slot_rounds",
-            "aborts", "sheds",
+            "decode_ctx_tokens", "aborts", "sheds",
         )
         snap = {k: getattr(self, k) for k in counters}
         snap.update(
@@ -530,11 +534,15 @@ class ModelRunner:
                 self.params, tokens, self.cache, self.chunk_prefix, slot,
                 start, size - 1)
         jax.block_until_ready(logits)
+        t1 = time.perf_counter()
         if restarted:  # restart re-prefill is recompute overhead, not load
-            stats.t_replay += time.perf_counter() - t0
+            stats.t_replay += t1 - t0
         else:
-            stats.t_prefill += time.perf_counter() - t0
+            stats.t_prefill += t1 - t0
         stats.prefill_chunks += 1
+        if TRACER.enabled:
+            TRACER.complete("prefill.chunk", t0, t1,
+                            request_id=req.request_id, start=start, size=size)
         return logits
 
     # ------------------------------------------------------------- prefill --
@@ -606,16 +614,24 @@ class ModelRunner:
             )
             if not resuming:
                 stats.record_swap(timing)
+            if TRACER.enabled:
+                TRACER.instant("swap", request_id=req.request_id,
+                               t_relayout=timing.t_relayout,
+                               hidden_fraction=timing.hidden_fraction)
         else:
             logits, kv = progs["full"].fn(self.params, tokens, last_pos)
             swap_write(kv)
         # restarts are recompute overhead, not offered load: their prefill
         # time joins t_replay and they never re-count prefill_tokens/swaps
+        t1 = time.perf_counter()
         if resuming:
-            stats.t_replay += time.perf_counter() - t0
+            stats.t_replay += t1 - t0
         else:
-            stats.t_prefill += time.perf_counter() - t0
+            stats.t_prefill += t1 - t0
             stats.prefill_tokens += n
+        if TRACER.enabled:
+            TRACER.complete("prefill", t0, t1, request_id=req.request_id,
+                            tokens=n, resuming=resuming)
 
         if self.cache_layout == "paged":
             self.paged.register_prompt_pages(match)
@@ -810,7 +826,11 @@ class ModelRunner:
             )
             stats.replayed_tokens += 1
         jax.block_until_ready(jax.tree.leaves(self.paged.kv))
-        stats.t_replay += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        stats.t_replay += t1 - t0
+        if TRACER.enabled:
+            TRACER.complete("replay", t0, t1, request_id=req.request_id,
+                            tokens=max(len(req.out_tokens) - 1, 0))
         return True
 
     def release(self, slot: int) -> None:
@@ -887,6 +907,9 @@ class Scheduler:
             request.arrival_time_s = now
         request.enqueue_t = now
         self.queue.append(request)
+        if TRACER.enabled:
+            TRACER.instant("req.submit", request_id=request.request_id,
+                           tenant=request.tenant)
 
     def requeue_head(self, request: Request) -> None:
         self.queue.appendleft(request)
@@ -939,6 +962,8 @@ class Scheduler:
         self.runner.release(slot)
         stats.preemptions += 1
         self.queue.appendleft(req)
+        if TRACER.enabled:
+            TRACER.instant("req.preempt", request_id=req.request_id, slot=slot)
 
 
 class EngineCore:
@@ -1055,25 +1080,44 @@ class EngineCore:
         if req is None:
             return None
         self.stats.aborts += 1
+        if TRACER.enabled:
+            TRACER.instant("req.abort", request_id=request_id)
         out = self.out_proc.finalize_aborted(req)
         self.finished[req.request_id] = req
         return out
 
     def snapshot(self) -> dict:
-        """``EngineStats.snapshot()`` plus the engine-level KV accounting and
-        the per-tenant fair-queue view (lane depths + queue-wait windows) —
-        the one stats block benchmarks and the /stats endpoint emit."""
-        snap = self.stats.snapshot()
-        snap["kv_bytes"] = self.kv_bytes()
-        depths = self.scheduler.queue.lane_depths()
-        waits = self.stats.tenant_queue_wait
-        snap["tenants"] = {
-            t: {"queued": depths.get(t, 0),
-                "queue_wait_s": waits[t].snapshot() if t in waits
-                else LatencyStat().snapshot()}
-            for t in sorted(set(depths) | set(waits))
-        }
-        return snap
+        """The one stats block benchmarks and the /stats endpoint emit —
+        built by ``obs.engine.engine_snapshot`` (the single builder every
+        front-end shares): ``EngineStats.snapshot()`` plus KV accounting,
+        the per-tenant fair-queue view, roofline drift, and any subclass
+        sections (``snapshot_sections``)."""
+        from repro.obs.engine import engine_snapshot
+
+        return engine_snapshot(self)
+
+    def snapshot_sections(self) -> dict:
+        """Subclass hook: extra top-level sections for ``snapshot()``
+        (the disagg engine adds its pool/handoff view here) — override
+        THIS, not ``snapshot()``, so the block shape can't drift."""
+        return {}
+
+    def metrics_registry(self):
+        """The typed metrics registry over this engine (built once; every
+        metric is a live callback view, so one registry serves all
+        scrapes — see ``obs.engine.engine_registry``)."""
+        if getattr(self, "_metrics_registry", None) is None:
+            from repro.obs.engine import engine_registry
+
+            self._metrics_registry = engine_registry(self)
+        return self._metrics_registry
+
+    def snapshot_v2(self) -> dict:
+        """Structured typed export (``{"schema": "v2", counters/gauges/
+        histograms}``) of the same numbers ``/metrics`` serves."""
+        from repro.obs.engine import snapshot_v2
+
+        return snapshot_v2(self, registry=self.metrics_registry())
 
     def reset_stats(self) -> None:
         """Swap in a fresh ``EngineStats`` — benchmarks call this after a
@@ -1106,6 +1150,7 @@ class EngineCore:
         get a token between every pair of chunks instead of stalling for
         the whole burst.  Returns every streaming output the quantum
         produced."""
+        t_step0 = time.perf_counter() if TRACER.enabled else 0.0
         outs: List[RequestOutput] = []
         sched, runner = self.scheduler, self.runner
         # SLO admission control: a policy that knows the TTFT deadline may
@@ -1131,6 +1176,9 @@ class EngineCore:
                     break
                 sched.queue.popleft()
                 self.stats.sheds += 1
+                if TRACER.enabled:
+                    TRACER.instant("req.shed", request_id=head.request_id,
+                                   wait_s=wait)
                 outs.append(self.out_proc.finalize_dropped(head, "shed"))
                 self.finished[head.request_id] = head
         if runner.prefill_chunk is not None:
@@ -1173,6 +1221,9 @@ class EngineCore:
             outs.extend(self._decode_round())
         if not self.has_unfinished():
             sched.policy.reset()
+        if TRACER.enabled and t_step0:
+            TRACER.complete("engine.step", t_step0, time.perf_counter(),
+                            outputs=len(outs))
         return outs
 
     def _unblock_admission_or_raise(self) -> None:
@@ -1307,6 +1358,9 @@ class EngineCore:
         self.runner.release(slot)
         self.stats.preemptions += 1
         self.scheduler.queue.appendleft(prog.req)
+        if TRACER.enabled:
+            TRACER.instant("req.preempt", request_id=prog.req.request_id,
+                           slot=slot, mid_prefill=True)
 
     def run(self, max_rounds: int = 10_000) -> EngineStats:
         """Compatibility loop: the PR-1 ``ServingEngine.run()`` drain-then-
@@ -1422,6 +1476,9 @@ class EngineCore:
             self.stats.queue_wait.record(req.queue_wait_s)
             self.stats.tenant_queue_wait.setdefault(
                 req.tenant, LatencyStat()).record(req.queue_wait_s)
+            if TRACER.enabled:
+                TRACER.instant("req.admit", request_id=req.request_id,
+                               queue_wait_s=req.queue_wait_s)
 
     def _block_admission(self, req: Request, slot: Optional[int] = None) -> None:
         """One admission attempt is blocked on pool pressure: roll the slot
@@ -1568,11 +1625,16 @@ class EngineCore:
         logits = runner.decode_logits(lengths)
         next_tokens = runner.sample_batch(logits, sched.inflight)
         jax.block_until_ready(next_tokens)
-        stats.t_decode += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        stats.t_decode += t1 - t0
         stats.decode_rounds += 1
         stats.decode_tokens += len(active)
 
         stats.slot_rounds += len(active)
+        stats.decode_ctx_tokens += int(
+            sum(runner.slots.slots[i].length for i in active))
+        if TRACER.enabled:
+            TRACER.complete("decode.round", t0, t1, batch=len(active))
         next_np = np.asarray(next_tokens)
         outs: List[RequestOutput] = []
         for i in active:
@@ -1658,10 +1720,15 @@ class EngineCore:
             jnp.asarray(tokens_np), jnp.asarray(lengths_np), jnp.asarray(n_tok_np))
         targets = runner.select_targets(logits, sched.inflight)
         jax.block_until_ready(targets)
-        stats.t_decode += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        stats.t_decode += t1 - t0
         stats.decode_rounds += 1
         stats.verify_rounds += 1
         stats.slot_rounds += len(active)
+        stats.decode_ctx_tokens += int(sum(lengths_np[i] for i in active))
+        if TRACER.enabled:
+            TRACER.complete("decode.verify", t0, t1, batch=len(active),
+                            drafted=int(sum(len(drafts[s]) for s in active)))
 
         from repro.core.sampling import accept_length
 

@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.core.kv_cache import insert_prefill_kv
 from repro.core.swap import SwapController
+from repro.obs.trace import TRACER
 from repro.serving.core import EngineStats, ModelRunner, Request
 from repro.serving.disagg.handoff import KVHandoffChannel
 from repro.serving.disagg.prefill_pool import PrefillPool
@@ -135,11 +136,15 @@ class DisaggRunner(ModelRunner):
         # any program mixing them with decode-resident operands) must never
         # see prefill-mesh arrays
         logits = handoff.ship_aux(logits)
+        t1 = time.perf_counter()
         if resuming:
-            stats.t_replay += time.perf_counter() - t0
+            stats.t_replay += t1 - t0
         else:
-            stats.t_prefill += time.perf_counter() - t0
+            stats.t_prefill += t1 - t0
             stats.prefill_tokens += n
+        if TRACER.enabled:
+            TRACER.complete("prefill", t0, t1, request_id=req.request_id,
+                            tokens=n, resuming=resuming)
 
         if self.cache_layout == "paged":
             self.paged.register_prompt_pages(match)
@@ -168,15 +173,24 @@ class DisaggRunner(ModelRunner):
         final = start + size == len(req.prompt)
         t0 = time.perf_counter()
 
-        def compute(buf=buf, prog=prog, start=start, size=size):
+        def compute(buf=buf, prog=prog, start=start, size=size,
+                    rid=req.request_id):
             """Runs on the pool's dispatch thread (see PrefillPool.submit):
             the engine thread never dispatches chunk work itself — not even
             the token upload — so its next decode dispatch is not queued
             behind any piece of the chunk."""
+            tc0 = time.perf_counter()
             tokens = jnp.asarray(buf[None])
             logits, chunk_kv, pool.chunk_prefix = prog.fn(
                 pool.params, tokens, pool.chunk_prefix, start, size - 1)
-            return logits, handoff.ship(chunk_kv, eager=not final)
+            shipped = handoff.ship(chunk_kv, eager=not final)
+            if TRACER.enabled:
+                # recorded from the pool thread: this is the lane whose
+                # overlap with decode quanta the trace is meant to show
+                TRACER.complete("prefill.chunk.compute", tc0,
+                                time.perf_counter(), request_id=rid,
+                                start=start, size=size)
+            return logits, shipped
 
         fut = pool.submit(compute)
         if self.cache_layout == "paged":
@@ -202,11 +216,18 @@ class DisaggRunner(ModelRunner):
             handoff.drain(slot)
             logits = handoff.ship_aux(fut.result()[0])
             jax.block_until_ready(logits)
+        t1 = time.perf_counter()
         if restarted:  # restart re-prefill is recompute overhead, not load
-            stats.t_replay += time.perf_counter() - t0
+            stats.t_replay += t1 - t0
         else:
-            stats.t_prefill += time.perf_counter() - t0
+            stats.t_prefill += t1 - t0
         stats.prefill_chunks += 1
+        if TRACER.enabled:
+            # the ENGINE-side window (dispatch + final-chunk drain/sync),
+            # distinct from the pool thread's prefill.chunk.compute span
+            TRACER.complete("prefill.chunk.dispatch", t0, t1,
+                            request_id=req.request_id, start=start,
+                            size=size, final=final)
         return logits
 
     # ------------------------------------------------------------- release --

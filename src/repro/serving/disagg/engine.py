@@ -96,11 +96,12 @@ class DisaggEngine(EngineCore):
             kv_dtype=r.kv_dtype, prefill_chunk=r.prefill_chunk)
         r.attach(self.prefill_pool, self.handoff)
 
-    def snapshot(self) -> dict:
-        snap = super().snapshot()
-        snap["disagg"] = {
+    def snapshot_sections(self) -> dict:
+        # the shared snapshot builder (obs.engine.engine_snapshot) merges
+        # this in — the disagg engine never overrides snapshot() itself,
+        # so the block shape cannot drift from the other front-ends
+        return {"disagg": {
             "handoff": self.handoff.snapshot(),
             "prefill_pool": _mesh_info(self.prefill_pool.mesh),
             "decode_pool": _mesh_info(self.runner.engine.mesh),
-        }
-        return snap
+        }}

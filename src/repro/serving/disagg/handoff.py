@@ -32,6 +32,14 @@ import jax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.disagg import kv_transfer_program
+from repro.obs.trace import TRACER
+
+# Trace lane for cross-pool transfers: ship dispatches happen on whichever
+# thread runs the prefill (the pool's dispatch thread for chunks, the
+# engine thread for monolithic swaps), but they are one logical resource —
+# pinning the lane renders every transfer on a single track, visually
+# interleaved with the engine-step and prefill-pool thread lanes.
+TRACE_LANE = "kv-handoff"
 
 
 class KVHandoffChannel:
@@ -68,11 +76,16 @@ class KVHandoffChannel:
         t0 = time.perf_counter()
         if self._transfer is not None:
             kv = self._transfer(kv)
-        self.t_dispatch += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self.t_dispatch += t1 - t0
         self.segments += 1
         if eager:
             self.eager_segments += 1
-        self.bytes_shipped += sum(x.nbytes for x in jax.tree.leaves(kv))
+        nbytes = sum(x.nbytes for x in jax.tree.leaves(kv))
+        self.bytes_shipped += nbytes
+        if TRACER.enabled:
+            TRACER.complete("handoff.ship", t0, t1, lane=TRACE_LANE,
+                            bytes=nbytes, eager=eager)
         return kv
 
     def ship_aux(self, tree):
@@ -98,8 +111,12 @@ class KVHandoffChannel:
         else:
             run = [(s, f) for s, f in self._pending if s == slot]
             self._pending = [(s, f) for s, f in self._pending if s != slot]
-        for _, install in run:
-            install()
+        # installs record on the CALLER's lane (the engine thread), not the
+        # transfer lane: an install blocks on its segment's future, so it
+        # can overlap a still-dispatching ship — same-lane events must nest
+        with TRACER.span("handoff.install", slot=slot, segments=len(run)):
+            for _, install in run:
+                install()
         self.installs += len(run)
         return len(run)
 

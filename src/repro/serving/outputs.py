@@ -21,6 +21,21 @@ import dataclasses
 import time
 from typing import List, Optional
 
+from repro.obs.trace import TRACER
+
+
+def _finish(req, reason: str, now: Optional[float] = None) -> None:
+    """The ONE terminal-stamp path: set the finish reason, stamp ``done_t``
+    idempotently (a request reaching a second finish path — e.g. the
+    chunked-prefill handoff after ``process_tokens`` already finished it —
+    must keep its first stamp, or e2e latency silently inflates), and emit
+    the tracer's finish event, which asserts it fires exactly once per
+    request while tracing."""
+    req.finish_reason = reason
+    if req.done_t == 0.0:
+        req.done_t = time.perf_counter() if now is None else now
+    TRACER.finish(req.request_id, reason)
+
 
 @dataclasses.dataclass
 class RequestOutput:
@@ -108,8 +123,7 @@ class OutputProcessor:
         if reason is None and len(req.out_tokens) >= req.max_new:
             reason = "length"
         if reason is not None:
-            req.finish_reason = reason
-            req.done_t = now
+            _finish(req, reason, now)
         return RequestOutput(
             request_id=req.request_id,
             new_token_ids=kept,
@@ -128,13 +142,11 @@ class OutputProcessor:
         and the stream simply went dark).  The reason is reconstructed
         from the recorded tail: ``"stop"`` if the last recorded token is a
         stop token, else ``"length"`` (the budget ran out)."""
-        if req.finish_reason is None:
-            req.finish_reason = (
-                "stop" if req.out_tokens and req.out_tokens[-1] in req.params.stop_tokens
-                else "length"
-            )
-        if req.done_t == 0.0:
-            req.done_t = time.perf_counter()
+        reason = req.finish_reason or (
+            "stop" if req.out_tokens and req.out_tokens[-1] in req.params.stop_tokens
+            else "length"
+        )
+        _finish(req, reason)
         return RequestOutput(
             request_id=req.request_id,
             new_token_ids=[],
@@ -149,10 +161,8 @@ class OutputProcessor:
         abort, SLO deadline shed): zero-delta, finished, with the given
         ``finish_reason``.  Whatever was already streamed stands — the drop
         ends the stream, it does not un-emit tokens."""
-        req.finish_reason = reason
         req.preempted = False
-        if req.done_t == 0.0:
-            req.done_t = time.perf_counter()
+        _finish(req, reason)
         return RequestOutput(
             request_id=req.request_id,
             new_token_ids=[],
