@@ -1,0 +1,58 @@
+#!/usr/bin/env python
+"""Per-pass finding counts for `repro.analysis` — informational, exits 0.
+
+The enforcing gate is ``python -m repro.analysis --all``; this script is the
+human-facing summary (CI logs, local triage): per-pass totals, how many are
+baselined vs active, and the rule histogram.
+
+    PYTHONPATH=src python scripts/analysis_report.py [--root DIR] [--baseline FILE]
+"""
+import argparse
+import sys
+from collections import Counter
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.analysis import (  # noqa: E402
+    PASSES, default_baseline, default_root, run_passes)
+from repro.analysis.common import load_baseline, split_baselined  # noqa: E402
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", type=Path, default=None,
+                    help="tree to analyze (default: src/repro)")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help="baseline file (default: analysis_baseline.txt)")
+    args = ap.parse_args()
+
+    root = args.root or default_root()
+    baseline_path = args.baseline or default_baseline()
+    fps, errors = load_baseline(baseline_path)
+    results = run_passes(list(PASSES), root=root)
+
+    print(f"repro.analysis report — root={root}")
+    print(f"baseline: {baseline_path} "
+          f"({len(fps)} entr{'y' if len(fps) == 1 else 'ies'})")
+    total_active = 0
+    for name in PASSES:
+        found = results[name]
+        active, suppressed = split_baselined(found, fps)
+        total_active += len(active)
+        print(f"\n[{name}] {len(found)} finding(s)"
+              f" — {len(active)} active, {len(suppressed)} baselined")
+        hist = Counter(f.rule for f in found)
+        for rule, n in sorted(hist.items()):
+            print(f"    {rule:<28} {n}")
+        for f in active:
+            print(f"    {f.render()}")
+    for e in errors:
+        print(f"\nbaseline error: {e}")
+    print(f"\ntotal active findings: {total_active}"
+          + (" (gate would FAIL)" if total_active or errors else ""))
+    return 0  # informational by contract; the gate is `-m repro.analysis`
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,61 @@
+"""In-repo static analysis: lock discipline, kernel invariants, determinism.
+
+Run as ``python -m repro.analysis [--all | --pass NAME] [--baseline FILE]``.
+See ``README.md`` ("Static analysis") for the annotation grammar and the
+pragma/baseline workflow.  Programmatic use::
+
+    from repro.analysis import run_passes
+    findings = run_passes(["lock", "determinism"], root=Path("src/repro"))
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis.common import (  # noqa: F401  (public API)
+    Finding, load_baseline, split_baselined)
+
+PASSES = ("lock", "kernel", "determinism")
+
+
+def repo_root() -> Path:
+    """The repository root (two levels above ``src/repro/analysis``)."""
+    return Path(__file__).resolve().parents[3]
+
+
+def default_root() -> Path:
+    """The analyzed tree: ``src/repro``."""
+    return Path(__file__).resolve().parents[1]
+
+
+def default_baseline() -> Path:
+    return repo_root() / "analysis_baseline.txt"
+
+
+def run_passes(names: Sequence[str],
+               root: Optional[Path] = None) -> Dict[str, List[Finding]]:
+    """Run the named passes; returns ``{pass_name: [findings...]}`` with
+    duplicate findings (same fingerprint + line) collapsed."""
+    root = root or default_root()
+    out: Dict[str, List[Finding]] = {}
+    for name in names:
+        if name == "lock":
+            from repro.analysis import locklint
+            found = locklint.run(root)
+        elif name == "determinism":
+            from repro.analysis import determinism
+            found = determinism.run(root)
+        elif name == "kernel":
+            from repro.analysis import kernel_check
+            found = kernel_check.run(root)
+        else:
+            raise ValueError(f"unknown pass {name!r}; choose from {PASSES}")
+        seen = set()
+        deduped = []
+        for f in found:
+            key = (f.fingerprint, f.line)
+            if key not in seen:
+                seen.add(key)
+                deduped.append(f)
+        out[name] = deduped
+    return out

@@ -39,8 +39,11 @@ class CheckpointManager:
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
-        self._thread: Optional[threading.Thread] = None
-        self._last_error: Optional[BaseException] = None
+        # one outstanding background write; handle owned by the training
+        # loop ("ckpt-caller"), error slot written by the writer thread and
+        # only read back across the join() in wait()
+        self._thread: Optional[threading.Thread] = None  # owned-by: ckpt-caller
+        self._last_error: Optional[BaseException] = None  # owned-by: ckpt-writer
 
     # ------------------------------------------------------------- saving --
 
@@ -48,12 +51,12 @@ class CheckpointManager:
         arrays = _flatten_named(jax.device_get(tree))
         return self._write(step, arrays, extra or {})
 
-    def save_async(self, step: int, tree: Any, extra: Optional[dict] = None) -> None:
+    def save_async(self, step: int, tree: Any, extra: Optional[dict] = None) -> None:  # thread: ckpt-caller
         """Snapshot to host synchronously, write in the background."""
         self.wait()  # one outstanding write max
         arrays = _flatten_named(jax.device_get(tree))
 
-        def work():
+        def work():  # thread: ckpt-writer
             try:
                 self._write(step, arrays, extra or {})
             except BaseException as e:  # surfaced on next wait()
@@ -62,12 +65,14 @@ class CheckpointManager:
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
 
-    def wait(self) -> None:
+    def wait(self) -> None:  # thread: ckpt-caller
         if self._thread is not None:
             self._thread.join()
             self._thread = None
-        if self._last_error is not None:
-            err, self._last_error = self._last_error, None
+        # _last_error crosses back to the caller strictly after join() —
+        # the join is the happens-before edge, so these reads are safe:
+        if self._last_error is not None:  # analysis: allow(lock:thread) — read after join()
+            err, self._last_error = self._last_error, None  # analysis: allow(lock:thread) — read after join()
             raise err
 
     def _write(self, step: int, arrays: dict, extra: dict) -> Path:

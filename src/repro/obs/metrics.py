@@ -12,6 +12,12 @@ Two binding styles:
   deref through the engine each collect, so ``reset_stats()`` rebinding the
   stats object is observed automatically.
 
+Threading: owned metric state belongs to the instrumented subsystem (the
+``metrics-owner`` role in the lock-discipline annotations — the engine
+thread for engine metrics); the scrape side only ever takes GIL-atomic,
+staleness-tolerant reads through ``value``/``samples``/``summary``.  The
+discipline is machine-checked by ``repro.analysis`` (pass ``lock``).
+
 Histograms render in Prometheus *summary* form (quantile labels + _sum +
 _count): the serving latencies already live in bounded percentile windows
 (``LatencyStat``), and quantiles-over-a-window is the honest export of that
@@ -62,9 +68,9 @@ class Counter:
         self.help = help
         self.labels = dict(labels) if labels else None
         self._fn = fn
-        self._value = 0.0
+        self._value = 0.0  # owned-by: metrics-owner
 
-    def inc(self, n: float = 1.0) -> None:
+    def inc(self, n: float = 1.0) -> None:  # thread: metrics-owner
         if self._fn is not None:
             raise TypeError(f"counter {self.name} is a callback view")
         if n < 0:
@@ -72,6 +78,8 @@ class Counter:
         self._value += n
 
     @property
+    # analysis: allow(lock:thread) — scrape-side read: a float load is
+    # GIL-atomic and scrapes tolerate one-sample staleness
     def value(self) -> float:
         return float(self._fn()) if self._fn is not None else self._value
 
@@ -91,14 +99,16 @@ class Gauge:
         self.help = help
         self.labels = dict(labels) if labels else None
         self._fn = fn
-        self._value = 0.0
+        self._value = 0.0  # owned-by: metrics-owner
 
-    def set(self, v: float) -> None:
+    def set(self, v: float) -> None:  # thread: metrics-owner
         if self._fn is not None:
             raise TypeError(f"gauge {self.name} is a callback view")
         self._value = float(v)
 
     @property
+    # analysis: allow(lock:thread) — scrape-side read: a float load is
+    # GIL-atomic and scrapes tolerate one-sample staleness
     def value(self) -> float:
         return float(self._fn()) if self._fn is not None else self._value
 
@@ -111,15 +121,17 @@ class _WindowStat:
     (the ``LatencyStat`` shape, kept import-free so obs stays a leaf)."""
 
     def __init__(self, window: int):
-        self.count = 0
-        self.total = 0.0
-        self._win: deque = deque(maxlen=window)
+        self.count = 0  # owned-by: metrics-owner
+        self.total = 0.0  # owned-by: metrics-owner
+        self._win: deque = deque(maxlen=window)  # owned-by: metrics-owner
 
-    def record(self, v: float) -> None:
+    def record(self, v: float) -> None:  # thread: metrics-owner
         self.count += 1
         self.total += float(v)
         self._win.append(float(v))
 
+    # analysis: allow(lock:thread) — scrape-side read: np.asarray(deque)
+    # snapshots under the GIL; quantiles tolerate window staleness
     def percentile(self, q: float) -> float:
         if not self._win:
             return 0.0

@@ -84,14 +84,16 @@ class Tracer:
         self._lock = threading.Lock()
         self._configure(capacity)
 
+    # analysis: allow(lock:unguarded) — callers hold self._lock (enable/clear);
+    # __init__ calls it on a not-yet-shared object
     def _configure(self, capacity: int) -> None:
         if capacity < 1:
             raise ValueError("tracer capacity must be >= 1")
-        self.capacity = capacity
-        self._events: deque = deque(maxlen=capacity)
-        self._emitted = 0
-        self._finished: set = set()
-        self._t0 = time.perf_counter()
+        self.capacity = capacity  # guarded-by: self._lock
+        self._events: deque = deque(maxlen=capacity)  # guarded-by: self._lock
+        self._emitted = 0  # guarded-by: self._lock
+        self._finished: set = set()  # guarded-by: self._lock
+        self._t0 = time.perf_counter()  # guarded-by: self._lock
 
     # ------------------------------------------------------------ control --
 
@@ -110,15 +112,22 @@ class Tracer:
             self._configure(self.capacity)
 
     @property
+    # analysis: allow(lock:unguarded) — monitoring read; a torn
+    # emitted/len pair can misreport dropped by one scrape, never corrupt
     def dropped(self) -> int:
         """Events evicted by the ring bound (emitted minus retained)."""
         return self._emitted - len(self._events)
 
+    # analysis: allow(lock:unguarded) — list(deque) snapshots atomically
+    # under the GIL; used by tests/benchmarks, not the export path
     def events(self) -> List[tuple]:
         return list(self._events)
 
     # ---------------------------------------------------------- recording --
 
+    # analysis: allow(lock:unguarded) — lock-free hot path by design (class
+    # docstring): deque.append and int += are GIL-atomic enough for metering,
+    # and a lock here would serialize the engine and pool threads per event
     def complete(self, name: str, t0: float, t1: float,
                  lane: Optional[str] = None, **args) -> None:
         """Record a complete span from ``perf_counter`` stamps the caller
@@ -138,6 +147,8 @@ class Tracer:
             return _NULL_SPAN
         return _Span(self, name, lane, args)
 
+    # analysis: allow(lock:unguarded) — lock-free hot path, same contract
+    # as complete()
     def instant(self, name: str, lane: Optional[str] = None, **args) -> None:
         if not self.enabled:
             return
@@ -146,6 +157,9 @@ class Tracer:
             ("i", name, time.perf_counter(),
              lane or threading.current_thread().name, args or None))
 
+    # analysis: allow(lock:unguarded) — _finished is only touched by finish
+    # paths, which all run on the engine-step thread (the funnel property
+    # this method asserts); set.add is GIL-atomic besides
     def finish(self, request_id: str, reason: Optional[str]) -> None:
         """Terminal lifecycle event — must fire exactly once per request.
 
@@ -217,4 +231,7 @@ class Tracer:
 # single engine per process is the deployment shape (the disagg pools are
 # threads of one engine); tests that run several engines call ``clear()``
 # between them so the exactly-once finish set does not span runs.
+# Rebinding it would silently split the singleton (sites hold direct
+# references) — declared shared so repro.analysis flags any rebind.
+# analysis: shared-global(TRACER)
 TRACER = Tracer()

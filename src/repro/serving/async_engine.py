@@ -28,7 +28,15 @@ turns it into a real front-end:
 Thread-safety model: the event loop owns all front-end state; the executor
 thread only ever runs ``core.step()``.  Submissions land in ``_pending`` and
 are drained into ``core.submit()`` by the loop task *between* quanta, so the
-scheduler's queue is never mutated concurrently with a step.  Because the
+scheduler's queue is never mutated concurrently with a step.  The loop also
+never READS core state while a quantum runs: admission decisions consult
+loop-owned mirrors (``_core_backlog``, the scheduler-queue length snapshot
+refreshed between quanta; ``_ids``, every id ever admitted) instead of
+reaching into ``core.scheduler.queue`` / ``core.finished`` mid-step.  This
+discipline is not just prose — the ownership annotations below
+(``# owned-by: event-loop`` / ``# thread: event-loop``) are enforced by the
+lock-discipline pass in ``repro.analysis`` (run ``python -m repro.analysis
+--pass lock``), so an access from the wrong thread fails CI.  Because the
 engine itself is the same ``EngineCore`` stepped the same way, greedy
 outputs through ``AsyncEngine`` are bit-identical to the synchronous engine
 (pinned by tests/test_async_serving.py across layouts x kv dtypes, chunked
@@ -102,19 +110,26 @@ class AsyncEngine:
             raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         self.core = core
         self.max_queue = max_queue
-        self._pending: Deque[Request] = deque()  # submitted, not yet in core
-        self._streams: Dict[str, _Stream] = {}
-        self._aborts: Deque[str] = deque()
+        self._pending: Deque[Request] = deque()  # owned-by: event-loop
+        self._streams: Dict[str, _Stream] = {}  # owned-by: event-loop
+        self._aborts: Deque[str] = deque()  # owned-by: event-loop
         self._wake = asyncio.Event()
         self._task: Optional[asyncio.Task] = None
-        self._closed = False
+        self._closed = False  # owned-by: event-loop
         self._exec = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="engine-step")
-        self._seq = 0
+        self._seq = 0  # owned-by: event-loop
+        # loop-owned mirrors of core state, so admission never reads the
+        # core while a quantum mutates it on the executor thread:
+        # scheduler-queue length, refreshed between quanta ...
+        self._core_backlog = 0  # owned-by: event-loop
+        # ... and every id ever admitted (duplicate suppression without
+        # touching core.finished mid-step)
+        self._ids: set = set()  # owned-by: event-loop
         # backpressure accounting (snapshot()-style counters)
-        self.accepted = 0
-        self.rejected = 0
-        self.reject_reasons: Dict[str, int] = {}
+        self.accepted = 0  # owned-by: event-loop
+        self.rejected = 0  # owned-by: event-loop
+        self.reject_reasons: Dict[str, int] = {}  # owned-by: event-loop
 
     # ------------------------------------------------------------ lifecycle --
 
@@ -130,7 +145,7 @@ class AsyncEngine:
     async def __aexit__(self, *exc) -> None:
         await self.shutdown()
 
-    async def shutdown(self) -> None:
+    async def shutdown(self) -> None:  # thread: event-loop
         """Stop the loop.  In-flight requests stop advancing; their streams
         receive a terminal abort delta so no reader hangs."""
         self._closed = True
@@ -148,14 +163,17 @@ class AsyncEngine:
 
     # ------------------------------------------------------------ admission --
 
-    def _reject(self, reason: str) -> None:
+    def _reject(self, reason: str) -> None:  # thread: event-loop
         self.rejected += 1
         key = reason.split(":", 1)[0]
         self.reject_reasons[key] = self.reject_reasons.get(key, 0) + 1
         raise AdmissionRejected(reason)
 
-    def _backlog(self) -> int:
-        return len(self._pending) + len(self.core.scheduler.queue)
+    def _backlog(self) -> int:  # thread: event-loop
+        # _core_backlog is the between-quanta snapshot of the scheduler
+        # queue: at most one quantum stale, and never a racy read of a
+        # deque the executor thread is popping
+        return len(self._pending) + self._core_backlog
 
     async def submit(
         self,
@@ -167,7 +185,7 @@ class AsyncEngine:
         tenant: str = "default",
         weight: float = 1.0,
         priority: int = 0,
-    ) -> RequestStream:
+    ) -> RequestStream:  # thread: event-loop
         """Admit one request and return its output stream.
 
         Raises ``AdmissionRejected`` instead of queueing when the wait
@@ -183,7 +201,9 @@ class AsyncEngine:
                 f"(max_queue={self.max_queue}); retry with backoff")
         self._seq += 1
         rid = request_id or f"areq-{self._seq}"
-        if rid in self._streams or rid in self.core.finished:
+        if rid in self._ids:  # loop-owned set of every id ever admitted —
+            # covers open streams AND finished requests without reading
+            # core.finished concurrently with a running quantum
             self._reject(f"duplicate_id: request id {rid!r} already in use")
         prompt = np.asarray(prompt, np.int32)
         if max_new is None:
@@ -212,6 +232,7 @@ class AsyncEngine:
         except ValueError as e:
             self._reject(f"invalid: {e}")
         q: asyncio.Queue = asyncio.Queue()
+        self._ids.add(rid)
         self._streams[rid] = _Stream(q, req)
         self._pending.append(req)  # the loop drains between quanta
         if TRACER.enabled:
@@ -230,7 +251,7 @@ class AsyncEngine:
         async for out in stream:
             yield out
 
-    async def abort(self, request_id: str) -> None:
+    async def abort(self, request_id: str) -> None:  # thread: event-loop
         """Cancel a request.  Serialized onto the step loop, so it never
         races a quantum; the stream receives its terminal abort delta from
         the loop."""
@@ -239,14 +260,14 @@ class AsyncEngine:
 
     # ------------------------------------------------------------ step loop --
 
-    def _route(self, out: RequestOutput) -> None:
+    def _route(self, out: RequestOutput) -> None:  # thread: event-loop
         stream = self._streams.get(out.request_id)
         if stream is not None:
             stream.queue.put_nowait(out)
             if out.finished:
                 del self._streams[out.request_id]
 
-    def _drain_control(self) -> None:
+    def _drain_control(self) -> None:  # thread: event-loop
         """Apply aborts and admissions queued since the last quantum (the
         loop task runs this between ``step()`` calls, never during one)."""
         while self._aborts:
@@ -271,8 +292,11 @@ class AsyncEngine:
                 out = self.core.out_proc.finalize_aborted(req)
                 out.finish_reason = req.finish_reason = f"rejected: {e}"
                 self._route(out)
+        # between-quanta: no step in flight, so this read cannot race the
+        # executor — it is the ONLY place admission state touches the core
+        self._core_backlog = len(self.core.scheduler.queue)
 
-    async def _run(self) -> None:
+    async def _run(self) -> None:  # thread: event-loop
         loop = asyncio.get_running_loop()
         while not self._closed:
             self._drain_control()
@@ -280,6 +304,8 @@ class AsyncEngine:
                 outs = await loop.run_in_executor(self._exec, self.core.step)
                 for out in outs:
                     self._route(out)
+                # quantum done: refresh the admission-visible queue snapshot
+                self._core_backlog = len(self.core.scheduler.queue)
                 # yield so streams/submits/aborts interleave between quanta
                 await asyncio.sleep(0)
             else:
@@ -291,7 +317,7 @@ class AsyncEngine:
 
     # -------------------------------------------------------------- metrics --
 
-    def snapshot(self) -> dict:
+    def snapshot(self) -> dict:  # thread: event-loop
         """Engine stats block plus front-end admission counters — the same
         shared builder ``EngineCore.snapshot()`` uses (obs.engine), with the
         front-end section passed as the one extra."""

@@ -519,7 +519,7 @@ class ModelRunner:
         buf = np.zeros((padded,), np.int32)
         buf[:size] = np.asarray(req.prompt[start : start + size], np.int32)
         tokens = jnp.asarray(buf[None])
-        t0 = time.perf_counter()
+        t0 = time.perf_counter()  # analysis: allow(det:wallclock) — chunk wall time feeds t_prefill/t_replay stats and a trace span only
         if self.cache_layout == "paged":
             bs = self.block_size
             # start is page-aligned (chunk % bs == 0); prefix-cache hits and
@@ -534,7 +534,7 @@ class ModelRunner:
                 self.params, tokens, self.cache, self.chunk_prefix, slot,
                 start, size - 1)
         jax.block_until_ready(logits)
-        t1 = time.perf_counter()
+        t1 = time.perf_counter()  # analysis: allow(det:wallclock) — chunk wall time feeds t_prefill/t_replay stats and a trace span only
         if restarted:  # restart re-prefill is recompute overhead, not load
             stats.t_replay += t1 - t0
         else:
@@ -599,7 +599,7 @@ class ModelRunner:
             self.cache = insert_prefill_kv(self.cache, relayed, slot, n)
             return self.cache
 
-        t0 = time.perf_counter()
+        t0 = time.perf_counter()  # analysis: allow(det:wallclock) — prefill wall time feeds t_prefill/t_replay stats only
         if self.mode == "pdswap":
             # SwapController owns the overlap protocol (dispatch the swap
             # first, decode waits for both — paper §3.4); swap_write is this
@@ -623,7 +623,7 @@ class ModelRunner:
             swap_write(kv)
         # restarts are recompute overhead, not offered load: their prefill
         # time joins t_replay and they never re-count prefill_tokens/swaps
-        t1 = time.perf_counter()
+        t1 = time.perf_counter()  # analysis: allow(det:wallclock) — prefill wall time feeds t_prefill/t_replay stats only
         if resuming:
             stats.t_replay += t1 - t0
         else:
@@ -807,7 +807,7 @@ class ModelRunner:
         decode round's ``t_decode`` (it would skew decode_tput)."""
         p = len(req.prompt)
         n_slots = self.slots.n_slots
-        t0 = time.perf_counter()
+        t0 = time.perf_counter()  # analysis: allow(det:wallclock) — replay wall time feeds t_replay stats and a trace span only
         for j, tok in enumerate(req.out_tokens[:-1]):
             pos = p + j
             try:
@@ -826,7 +826,7 @@ class ModelRunner:
             )
             stats.replayed_tokens += 1
         jax.block_until_ready(jax.tree.leaves(self.paged.kv))
-        t1 = time.perf_counter()
+        t1 = time.perf_counter()  # analysis: allow(det:wallclock) — replay wall time feeds t_replay stats and a trace span only
         stats.t_replay += t1 - t0
         if TRACER.enabled:
             TRACER.complete("replay", t0, t1, request_id=req.request_id,
@@ -899,7 +899,7 @@ class Scheduler:
 
     def submit(self, request: Request) -> None:
         self.validate(request)
-        now = time.perf_counter()
+        now = time.perf_counter()  # analysis: allow(det:wallclock) — arrival stamp meters queue wait / TTFT and feeds SLO pacing, never token values
         if request.arrival_time_s == 0.0:
             # the client-visible arrival: stamped ONCE at first submit, so
             # TTFT measured downstream includes all queueing delay (the
@@ -932,7 +932,7 @@ class Scheduler:
         if active == 0:
             return True
         head = self.queue.peek()
-        oldest = (time.perf_counter() - head.arrival_time_s
+        oldest = (time.perf_counter() - head.arrival_time_s  # analysis: allow(det:wallclock) — queue-age feeds the swap policy's pacing view, not any stream's token values
                   if head is not None and head.arrival_time_s else 0.0)
         view = SchedulerView(
             queue_depth=len(self.queue),
@@ -1150,7 +1150,7 @@ class EngineCore:
         get a token between every pair of chunks instead of stalling for
         the whole burst.  Returns every streaming output the quantum
         produced."""
-        t_step0 = time.perf_counter() if TRACER.enabled else 0.0
+        t_step0 = time.perf_counter() if TRACER.enabled else 0.0  # analysis: allow(det:wallclock) — trace-span stamp, recorded only while tracing
         outs: List[RequestOutput] = []
         sched, runner = self.scheduler, self.runner
         # SLO admission control: a policy that knows the TTFT deadline may
@@ -1163,7 +1163,7 @@ class EngineCore:
         # policies serve every admitted request, late or not.
         shed = getattr(sched.policy, "should_shed", None)
         if shed is not None:
-            now = time.perf_counter()
+            now = time.perf_counter()  # analysis: allow(det:wallclock) — shed deadline check paces admission (drop-or-serve), never token values
             while sched.queue:
                 head = sched.queue[0]
                 if head.out_tokens or getattr(head, "preempted", False):
@@ -1222,7 +1222,7 @@ class EngineCore:
         if not self.has_unfinished():
             sched.policy.reset()
         if TRACER.enabled and t_step0:
-            TRACER.complete("engine.step", t_step0, time.perf_counter(),
+            TRACER.complete("engine.step", t_step0, time.perf_counter(),  # analysis: allow(det:wallclock) — trace-span stamp, recorded only while tracing
                             outputs=len(outs))
         return outs
 
@@ -1436,7 +1436,7 @@ class EngineCore:
         if req.first_token_t == 0.0:
             # same safety net as the replay path: recorded tokens normally
             # carry a stamp from their original admission
-            req.first_token_t = time.perf_counter()
+            req.first_token_t = time.perf_counter()  # analysis: allow(det:wallclock) — TTFT safety-net stamp for pre-seeded resumes; stats only
         out = self.out_proc.finalize_resumed(req)
         self.finished[req.request_id] = req
         return out
@@ -1472,7 +1472,7 @@ class EngineCore:
         once per request (a preemption restart keeps its original stamp —
         the client waited once, at the front of the stream)."""
         if req.queue_wait_s is None and req.arrival_time_s:
-            req.queue_wait_s = time.perf_counter() - req.arrival_time_s
+            req.queue_wait_s = time.perf_counter() - req.arrival_time_s  # analysis: allow(det:wallclock) — queue-wait metering stamp; stats only
             self.stats.queue_wait.record(req.queue_wait_s)
             self.stats.tenant_queue_wait.setdefault(
                 req.tenant, LatencyStat()).record(req.queue_wait_s)
@@ -1510,7 +1510,7 @@ class EngineCore:
                 # OutputProcessor at original admission — but a request
                 # submitted with pre-seeded out_tokens (external replay,
                 # checkpoint restore) would otherwise report TTFT 0.0.
-                req.first_token_t = time.perf_counter()
+                req.first_token_t = time.perf_counter()  # analysis: allow(det:wallclock) — TTFT safety-net stamp for pre-seeded resumes; stats only
             tok = req.out_tokens[-1]
             runner.slots.slots[slot].length = len(req.prompt) + len(req.out_tokens) - 1
             runner.slots.slots[slot].generated = len(req.out_tokens)
@@ -1536,7 +1536,7 @@ class EngineCore:
                 # finished output the client is owed.
                 out = self.out_proc.finalize_resumed(req)
             if req.done_t == 0.0:
-                req.done_t = time.perf_counter()
+                req.done_t = time.perf_counter()  # analysis: allow(det:wallclock) — completion stamp for latency stats only
             self.finished[req.request_id] = req
             runner.release(slot)
             return True, out
@@ -1621,11 +1621,11 @@ class EngineCore:
             lengths = jnp.asarray(lengths_np)
         else:
             lengths = runner.slots.lengths_array()
-        t0 = time.perf_counter()
+        t0 = time.perf_counter()  # analysis: allow(det:wallclock) — decode-round wall time feeds t_decode stats only
         logits = runner.decode_logits(lengths)
         next_tokens = runner.sample_batch(logits, sched.inflight)
         jax.block_until_ready(next_tokens)
-        t1 = time.perf_counter()
+        t1 = time.perf_counter()  # analysis: allow(det:wallclock) — decode-round wall time feeds t_decode stats only
         stats.t_decode += t1 - t0
         stats.decode_rounds += 1
         stats.decode_tokens += len(active)
@@ -1715,12 +1715,12 @@ class EngineCore:
         # mid-prefill slots sit the round out: n_tokens 0 routes every one
         # of their rows (KV writes) out of bounds, and nothing reads their
         # logits — no parked-write trick needed on this path
-        t0 = time.perf_counter()
+        t0 = time.perf_counter()  # analysis: allow(det:wallclock) — verify-round wall time feeds t_decode stats only
         logits = runner.run_verify(
             jnp.asarray(tokens_np), jnp.asarray(lengths_np), jnp.asarray(n_tok_np))
         targets = runner.select_targets(logits, sched.inflight)
         jax.block_until_ready(targets)
-        t1 = time.perf_counter()
+        t1 = time.perf_counter()  # analysis: allow(det:wallclock) — verify-round wall time feeds t_decode stats only
         stats.t_decode += t1 - t0
         stats.decode_rounds += 1
         stats.verify_rounds += 1

@@ -49,6 +49,11 @@ from repro.serving.disagg.handoff import KVHandoffChannel
 from repro.serving.disagg.prefill_pool import PrefillPool
 from repro.serving.paging import PrefixMatch
 
+# Cross-object lock discipline (checked by repro.analysis): accesses
+# through a local named `pool` are held to PrefillPool's annotations — in
+# particular chunk_prefix, which only the pool's dispatch thread may touch.
+# analysis: bind(pool=PrefillPool)
+
 
 class DisaggRunner(ModelRunner):
     """ModelRunner with prefill outsourced to an attached PrefillPool."""
@@ -174,7 +179,7 @@ class DisaggRunner(ModelRunner):
         t0 = time.perf_counter()
 
         def compute(buf=buf, prog=prog, start=start, size=size,
-                    rid=req.request_id):
+                    rid=req.request_id):  # thread: prefill-pool
             """Runs on the pool's dispatch thread (see PrefillPool.submit):
             the engine thread never dispatches chunk work itself — not even
             the token upload — so its next decode dispatch is not queued

@@ -25,6 +25,7 @@ decode writes.
 """
 from __future__ import annotations
 
+import threading
 import time
 from typing import Callable, List, Optional, Tuple
 
@@ -43,8 +44,15 @@ TRACE_LANE = "kv-handoff"
 
 
 class KVHandoffChannel:
-    """Cross-pool KV transfer + deferred decode-side installs (one engine's
-    channel; not thread-safe — the engine's step loop is single-threaded)."""
+    """Cross-pool KV transfer + deferred decode-side installs.
+
+    Threading: ``ship()`` runs on BOTH the engine-step thread (monolithic
+    swaps) and the prefill pool's dispatch thread (eager chunks), so its
+    metering counters are lock-protected.  The install queue is engine-step
+    state only — ``defer_install``/``drain``/``discard`` all run between
+    quanta on the engine thread — and is annotated (and statically checked,
+    see ``repro.analysis``) as such.
+    """
 
     def __init__(self, decode_mesh: Optional[Mesh] = None,
                  spec: Optional[P] = None):
@@ -58,13 +66,17 @@ class KVHandoffChannel:
         # (slot, install thunk) queue — install order is ship order, and a
         # preempted/aborted slot's segments are discarded before its pages
         # can be reused (DisaggRunner.release)
-        self._pending: List[Tuple[int, Callable[[], None]]] = []
-        self.segments = 0  # KV segments shipped (prompts + chunks)
-        self.eager_segments = 0  # chunks shipped before their prompt finished
-        self.bytes_shipped = 0
-        self.installs = 0
-        self.discarded = 0
-        self.t_dispatch = 0.0  # host-visible transfer dispatch time (async)
+        self._pending: List[Tuple[int, Callable[[], None]]] = []  # owned-by: engine-step
+        # ship() metering: incremented from the engine thread (monolithic
+        # swaps) AND the prefill-pool dispatch thread (eager chunks) — the
+        # unsynchronized += these started as dropped increments under load
+        self._lock = threading.Lock()
+        self.segments = 0  # guarded-by: self._lock
+        self.eager_segments = 0  # guarded-by: self._lock
+        self.bytes_shipped = 0  # guarded-by: self._lock
+        self.installs = 0  # guarded-by: self._lock
+        self.discarded = 0  # guarded-by: self._lock
+        self.t_dispatch = 0.0  # guarded-by: self._lock
 
     # ------------------------------------------------------------ transfer --
 
@@ -77,12 +89,13 @@ class KVHandoffChannel:
         if self._transfer is not None:
             kv = self._transfer(kv)
         t1 = time.perf_counter()
-        self.t_dispatch += t1 - t0
-        self.segments += 1
-        if eager:
-            self.eager_segments += 1
         nbytes = sum(x.nbytes for x in jax.tree.leaves(kv))
-        self.bytes_shipped += nbytes
+        with self._lock:
+            self.t_dispatch += t1 - t0
+            self.segments += 1
+            if eager:
+                self.eager_segments += 1
+            self.bytes_shipped += nbytes
         if TRACER.enabled:
             TRACER.complete("handoff.ship", t0, t1, lane=TRACE_LANE,
                             bytes=nbytes, eager=eager)
@@ -97,12 +110,12 @@ class KVHandoffChannel:
 
     # ------------------------------------------------------------ installs --
 
-    def defer_install(self, slot: int, install: Callable[[], None]) -> None:
+    def defer_install(self, slot: int, install: Callable[[], None]) -> None:  # thread: engine-step
         """Queue one shipped segment's decode-side install (a cache-scatter
         thunk reading the runner's CURRENT cache when run)."""
         self._pending.append((slot, install))
 
-    def drain(self, slot: Optional[int] = None) -> int:
+    def drain(self, slot: Optional[int] = None) -> int:  # thread: engine-step
         """Run queued installs (one slot's, or all) in ship order — called
         when a request's prefill completes, before its first token is
         sampled.  Returns the number installed."""
@@ -117,32 +130,35 @@ class KVHandoffChannel:
         with TRACER.span("handoff.install", slot=slot, segments=len(run)):
             for _, install in run:
                 install()
-        self.installs += len(run)
+        with self._lock:
+            self.installs += len(run)
         return len(run)
 
-    def discard(self, slot: int) -> int:
+    def discard(self, slot: int) -> int:  # thread: engine-step
         """Drop a slot's queued installs (preemption/abort: its pages are
         about to be released and may be reallocated — a late install would
         corrupt the new owner)."""
         keep = [(s, f) for s, f in self._pending if s != slot]
         n = len(self._pending) - len(keep)
         self._pending = keep
-        self.discarded += n
+        with self._lock:
+            self.discarded += n
         return n
 
     @property
-    def pending(self) -> int:
+    def pending(self) -> int:  # thread: engine-step
         return len(self._pending)
 
     # ------------------------------------------------------------- metrics --
 
-    def snapshot(self) -> dict:
-        return {
-            "segments": self.segments,
-            "eager_segments": self.eager_segments,
-            "bytes_shipped": self.bytes_shipped,
-            "installs": self.installs,
-            "discarded": self.discarded,
-            "pending": self.pending,
-            "t_dispatch_s": self.t_dispatch,
-        }
+    def snapshot(self) -> dict:  # thread: engine-step
+        with self._lock:
+            return {
+                "segments": self.segments,
+                "eager_segments": self.eager_segments,
+                "bytes_shipped": self.bytes_shipped,
+                "installs": self.installs,
+                "discarded": self.discarded,
+                "pending": self.pending,
+                "t_dispatch_s": self.t_dispatch,
+            }

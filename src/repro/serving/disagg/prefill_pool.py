@@ -46,15 +46,29 @@ def _deprioritize() -> None:
     core for a wakeup-granularity slice (~ms) after a decode thread
     unblocks, which is exactly the tail this pool must not add, while an
     idle-class thread is preempted immediately by any normal-class wakeup.
+
+    Best-effort by construction: this runs as the pool executor's
+    *initializer*, and an initializer that raises poisons the executor —
+    every later ``submit()`` fails with BrokenThreadPool and the pool is
+    dead.  So every path degrades silently: missing APIs (non-Linux,
+    no ``os.sched_setscheduler`` / ``os.setpriority`` /
+    ``threading.get_native_id``), ``PermissionError`` (RLIMIT_NICE,
+    containers dropping CAP_SYS_NICE), or any other host quirk just leaves
+    the thread at normal priority — strictly a performance matter.
     """
     try:
         os.sched_setscheduler(0, os.SCHED_IDLE, os.sched_param(0))
         return
-    except (AttributeError, OSError):  # non-Linux / policy forbidden
+    except (AttributeError, OSError, ValueError):  # non-Linux / forbidden
         pass
     try:
-        os.setpriority(os.PRIO_PROCESS, threading.get_native_id(), 19)
-    except (AttributeError, OSError):
+        # PermissionError (an OSError) covers RLIMIT_NICE denials; the
+        # getattr covers platforms where get_native_id does not exist at
+        # all (threading exposes it only where the OS can name threads)
+        get_native_id = getattr(threading, "get_native_id", None)
+        if get_native_id is not None:
+            os.setpriority(os.PRIO_PROCESS, get_native_id(), 19)
+    except (AttributeError, OSError, ValueError):
         pass
 
 
@@ -122,8 +136,10 @@ class PrefillPool:
 
         # fp chunk-prefix mirror, prefill-pool-resident: chunked prefill's
         # attention context lives where the chunks compute, and the decode
-        # pool never holds it (DisaggRunner frees its own)
-        self.chunk_prefix = None
+        # pool never holds it (DisaggRunner frees its own); only the
+        # dispatch thread may touch it after construction (the single
+        # worker serializes chunk order through the donated buffer)
+        self.chunk_prefix = None  # owned-by: prefill-pool
         if prefill_chunk is not None:
             from repro.layers.attention import KVCache
 

@@ -1,0 +1,555 @@
+"""Tests for the in-repo static analysis (`repro.analysis`).
+
+Three layers:
+
+1. fixture trees — one deliberately-violating snippet per rule, asserting
+   the pass reports exactly that rule at that site (and that the pragma /
+   baseline escape hatches behave);
+2. the clean-tree gate — all three passes over the real ``src/repro`` with
+   the checked-in baseline must report zero active findings (the same
+   invariant CI enforces via ``python -m repro.analysis --all``);
+3. regression tests for the concurrency fixes the lock pass drove
+   (handoff counter atomicity, AsyncEngine loop-owned mirrors, prefill
+   pool thread deprioritization hardening).
+"""
+import asyncio
+import os
+import textwrap
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis import default_baseline, default_root, run_passes
+from repro.analysis.common import (
+    Finding, load_baseline, parse_pragmas, split_baselined)
+from repro.analysis import determinism, locklint
+
+REPO_SRC = Path(__file__).resolve().parents[1] / "src" / "repro"
+
+
+def _tree(tmp_path: Path, files: dict) -> Path:
+    root = tmp_path / "fixture"
+    for rel, text in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(text))
+    return root
+
+
+def _rules(findings):
+    return sorted(f.rule for f in findings)
+
+
+# ---------------------------------------------------------------- lock pass --
+
+LOCK_FIXTURE = """\
+    import threading
+
+    class Chan:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.count = 0  # guarded-by: self._lock
+            self.items = []  # owned-by: worker
+
+        def bad_unguarded(self):
+            self.count += 1
+
+        def good_guarded(self):
+            with self._lock:
+                self.count += 1
+
+        def good_thread(self):  # thread: worker
+            self.items.append(1)
+
+        def good_nested(self):  # thread: worker
+            def inner():
+                self.items.append(2)
+            return inner
+
+        def bad_thread(self):
+            self.items.append(3)
+"""
+
+
+def test_lock_unguarded_and_wrong_thread(tmp_path):
+    root = _tree(tmp_path, {"mod.py": LOCK_FIXTURE})
+    found = locklint.run(root)
+    assert _rules(found) == ["lock:thread", "lock:unguarded"]
+    by_rule = {f.rule: f for f in found}
+    assert "bad_unguarded" in by_rule["lock:unguarded"].message
+    assert "bad_thread" in by_rule["lock:thread"].message
+    # findings carry a usable location
+    assert by_rule["lock:unguarded"].path == "mod.py"
+    assert by_rule["lock:unguarded"].line > 0
+
+
+def test_lock_init_exempt_and_annotation_collection(tmp_path):
+    root = _tree(tmp_path, {"mod.py": """\
+        import threading
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.n = 0  # guarded-by: self._lock
+                self.n = 1  # __init__ writes are exempt: not shared yet
+    """})
+    assert locklint.run(root) == []
+
+
+def test_lock_pragma_waives_line_and_def(tmp_path):
+    root = _tree(tmp_path, {"mod.py": """\
+        import threading
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.n = 0  # guarded-by: self._lock
+
+            def waived_line(self):
+                return self.n  # analysis: allow(lock:unguarded) — torn read tolerated
+
+            def waived_def(self):  # analysis: allow(lock:unguarded) — whole body audited
+                self.n += 1
+                return self.n
+
+            def still_bad(self):
+                return self.n
+    """})
+    found = locklint.run(root)
+    assert _rules(found) == ["lock:unguarded"]
+    assert "still_bad" in found[0].message
+
+
+def test_lock_cross_object_bind(tmp_path):
+    root = _tree(tmp_path, {
+        "pool.py": """\
+            class Pool:
+                def __init__(self):
+                    self.state = None  # owned-by: pool-thread
+        """,
+        "user.py": """\
+            # analysis: bind(pool=Pool)
+
+            def misuse(pool):
+                pool.state = 3
+
+            def fine(pool):  # thread: pool-thread
+                pool.state = 4
+        """,
+    })
+    found = locklint.run(root)
+    assert _rules(found) == ["lock:thread"]
+    assert found[0].path == "user.py"
+    assert "Pool.state" in found[0].message
+
+
+def test_lock_shared_global_rebind(tmp_path):
+    root = _tree(tmp_path, {
+        "sing.py": """\
+            class T:
+                pass
+
+            # analysis: shared-global(TRACER)
+            TRACER = T()
+        """,
+        "evil.py": """\
+            from fixture import sing
+
+            def swap():
+                sing.TRACER = None
+        """,
+    })
+    found = locklint.run(root)
+    assert _rules(found) == ["lock:global-rebind"]
+    assert found[0].path == "evil.py"
+
+
+def test_pragma_without_reason_is_a_finding(tmp_path):
+    root = _tree(tmp_path, {"mod.py": """\
+        import threading
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.n = 0  # guarded-by: self._lock
+
+            def f(self):
+                return self.n  # analysis: allow(lock:unguarded)
+    """})
+    found = locklint.run(root)
+    # the reasonless pragma is itself flagged AND does not waive the rule
+    assert _rules(found) == ["analysis:pragma-no-reason", "lock:unguarded"]
+
+
+def test_comment_block_pragma_covers_following_def():
+    waivers_line, waivers_def, findings = parse_pragmas(textwrap.dedent("""\
+        # analysis: allow(lock:unguarded) — two-line justification that
+        # wraps onto a continuation comment line
+        def target(self):
+            return self.n
+    """), "mod.py")
+    assert findings == []
+    assert waivers_def == {3: {"lock:unguarded"}}
+
+
+# -------------------------------------------------------- determinism pass --
+
+def test_det_wallclock_flagged_and_pragma_waived(tmp_path):
+    root = _tree(tmp_path, {"sched.py": """\
+        import time
+
+        def decide(queue):
+            return time.time() < queue[0].deadline
+
+        def metered(stats):
+            stats.t = time.perf_counter()  # analysis: allow(det:wallclock) — stats only
+    """})
+    found = determinism.run(root)
+    assert _rules(found) == ["det:wallclock"]
+    assert "decide" in found[0].message
+
+
+def test_det_bare_set_iteration(tmp_path):
+    root = _tree(tmp_path, {"sched.py": """\
+        def order(slots):
+            live = {s for s in slots if s.busy}
+            out = []
+            for s in live:
+                out.append(s)
+            return out
+
+        def fine(slots):
+            live = {s for s in slots if s.busy}
+            return [s for s in sorted(live)]
+    """})
+    found = determinism.run(root)
+    assert _rules(found) == ["det:bare-set-iter"]
+    assert "order" in found[0].message
+
+
+def test_det_unkeyed_prng(tmp_path):
+    root = _tree(tmp_path, {"samp.py": """\
+        import jax
+
+        def bad(logits, seed):
+            return jax.random.categorical(jax.random.PRNGKey(seed), logits)
+
+        def good(logits, key, step):
+            k = jax.random.fold_in(key, step)
+            return jax.random.categorical(k, logits)
+
+        def also_good(logits, key):
+            return jax.random.categorical(jax.random.split(key)[0], logits)
+    """})
+    found = determinism.run(root)
+    assert _rules(found) == ["det:unkeyed-prng"]
+    assert "bad" in found[0].message
+
+
+# ------------------------------------------------------------- kernel pass --
+
+def _bad_kernel_ops():
+    """Deliberately-broken fake ops exercised through check_op: the checker
+    must catch each invariant violation with no real kernel executing."""
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def oob_index_map(x):  # index map walks past the operand
+        n = x.shape[0]
+        return pl.pallas_call(
+            lambda x_ref, o_ref: None,
+            grid=(n // 8,),
+            in_specs=[pl.BlockSpec((8,), lambda i: (i + 1,))],
+            out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+            out_shape=jnp.zeros((n,), jnp.float32),
+        )(x)
+
+    def bad_divisibility(x):  # block does not divide the (unpadded) dim
+        n = x.shape[0]
+        return pl.pallas_call(
+            lambda x_ref, o_ref: None,
+            grid=(1,),
+            in_specs=[pl.BlockSpec((7,), lambda i: (0,))],
+            out_specs=pl.BlockSpec((n,), lambda i: (0,)),
+            out_shape=jnp.zeros((n,), jnp.float32),
+        )(x)
+
+    def fp_materializing_quant(k_q, k_scale):  # dequantizes the WHOLE cache
+        deq = k_q.astype(jnp.float32) * k_scale[..., None]
+        return pl.pallas_call(
+            lambda k_ref, o_ref: None,
+            grid=(1,),
+            in_specs=[pl.BlockSpec(deq.shape, lambda i: (0,) * deq.ndim)],
+            out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+            out_shape=jnp.zeros((1,), jnp.float32),
+        )(deq)
+
+    def clean(x):
+        n = x.shape[0]
+        return pl.pallas_call(
+            lambda x_ref, o_ref: None,
+            grid=(n // 8,),
+            in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+            out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+            out_shape=jnp.zeros((n,), jnp.float32),
+        )(x)
+
+    return oob_index_map, bad_divisibility, fp_materializing_quant, clean
+
+
+def test_kernel_checker_catches_oob_index_map():
+    import jax.numpy as jnp
+    from repro.analysis.kernel_check import KernelCase, check_op
+
+    oob, _, _, _ = _bad_kernel_ops()
+    found = check_op(oob, [KernelCase("oob", (jnp.zeros(64, jnp.float32),), {})])
+    assert "kernel:index-oob" in _rules(found)
+
+
+def test_kernel_checker_catches_block_divisibility():
+    import jax.numpy as jnp
+    from repro.analysis.kernel_check import KernelCase, check_op
+
+    _, baddiv, _, _ = _bad_kernel_ops()
+    found = check_op(
+        baddiv, [KernelCase("div", (jnp.zeros(64, jnp.float32),), {})])
+    assert "kernel:block-divisibility" in _rules(found)
+
+
+def test_kernel_checker_catches_fp_cache_materialization():
+    import jax.numpy as jnp
+    from repro.analysis.kernel_check import KernelCase, check_op
+
+    _, _, fpmat, _ = _bad_kernel_ops()
+    k_q = jnp.zeros((4, 2, 128, 16), jnp.int8)
+    k_scale = jnp.ones((4, 2, 128), jnp.float32)
+    found = check_op(fpmat, [KernelCase(
+        "quant", (k_q, k_scale), {}, fp_elems=int(np.prod(k_q.shape)))])
+    assert "kernel:fp-cache-alloc" in _rules(found)
+
+
+def test_kernel_checker_clean_op_passes():
+    import jax.numpy as jnp
+    from repro.analysis.kernel_check import KernelCase, check_op
+
+    _, _, _, clean = _bad_kernel_ops()
+    found = check_op(
+        clean,
+        [KernelCase("ok", (jnp.zeros(64, jnp.float32),), {}, fp_elems=10**9)])
+    assert found == []
+
+
+# ---------------------------------------------------------------- baseline --
+
+def test_baseline_format_and_suppression(tmp_path):
+    f = Finding("lock", "lock:unguarded", "mod.py", 10, "msg")
+    bl = tmp_path / "baseline.txt"
+    bl.write_text(
+        "# comment\n"
+        f"{f.fingerprint} lock:unguarded mod.py — tracked debt, see #42\n")
+    fps, errors = load_baseline(bl)
+    assert errors == [] and fps == {f.fingerprint}
+    active, suppressed = split_baselined([f], fps)
+    assert active == [] and suppressed == [f]
+
+
+def test_baseline_rejects_missing_reason_and_bad_fingerprint(tmp_path):
+    bl = tmp_path / "baseline.txt"
+    bl.write_text(
+        "deadbeefcafe lock:unguarded mod.py\n"  # no reason
+        "nothex lock:unguarded mod.py — why\n")  # malformed fingerprint
+    fps, errors = load_baseline(bl)
+    assert fps == set()
+    assert len(errors) == 2
+    assert "no reason" in errors[0]
+    assert "malformed" in errors[1]
+
+
+def test_fingerprint_is_line_number_independent():
+    a = Finding("lock", "lock:unguarded", "mod.py", 10, "msg")
+    b = Finding("lock", "lock:unguarded", "mod.py", 99, "msg")
+    assert a.fingerprint == b.fingerprint
+    assert a.fingerprint != Finding(
+        "lock", "lock:unguarded", "mod.py", 10, "other").fingerprint
+
+
+# -------------------------------------------------------------- clean tree --
+
+def test_real_tree_has_no_unbaselined_findings():
+    """The CI gate, as a test: every pass over the real src/repro must be
+    clean modulo the checked-in baseline."""
+    results = run_passes(["lock", "kernel", "determinism"],
+                         root=default_root())
+    fps, errors = load_baseline(default_baseline())
+    assert errors == []
+    offenders = []
+    for name, found in results.items():
+        active, _ = split_baselined(found, fps)
+        offenders += [f"[{name}] {f.render()}" for f in active]
+    assert offenders == [], "\n".join(offenders)
+
+
+def test_default_root_is_the_source_tree():
+    assert default_root() == REPO_SRC
+
+
+# --------------------------------------------- satellite: handoff counters --
+
+def test_handoff_ship_counters_exact_under_contention():
+    """ship() meters from the engine thread AND the pool thread; the lock
+    the lint demanded must make the counters exact, not approximate."""
+    from repro.serving.disagg.handoff import KVHandoffChannel
+
+    chan = KVHandoffChannel()  # no mesh: passthrough, still metered
+    payload = np.zeros(32, np.float32)
+    per_thread, threads = 300, 4
+
+    def hammer(eager):
+        for _ in range(per_thread):
+            chan.ship(payload, eager=eager)
+
+    ts = [threading.Thread(target=hammer, args=(i % 2 == 1,))
+          for i in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    total = per_thread * threads
+    assert chan.segments == total
+    assert chan.eager_segments == total // 2
+    assert chan.bytes_shipped == total * payload.nbytes
+    snap = chan.snapshot()
+    assert snap["segments"] == total
+    assert snap["pending"] == 0
+
+
+# ------------------------------------- satellite: _deprioritize hardening --
+
+def test_deprioritize_survives_permission_error(monkeypatch):
+    from repro.serving.disagg import prefill_pool as pp
+
+    def deny(*a, **k):
+        raise PermissionError("RLIMIT_NICE")
+
+    monkeypatch.setattr(os, "sched_setscheduler", deny, raising=False)
+    monkeypatch.setattr(os, "setpriority", deny, raising=False)
+    pp._deprioritize()  # must not raise
+
+
+def test_deprioritize_survives_missing_apis(monkeypatch):
+    from repro.serving.disagg import prefill_pool as pp
+
+    monkeypatch.delattr(os, "sched_setscheduler", raising=False)
+    monkeypatch.delattr(threading, "get_native_id", raising=False)
+    pp._deprioritize()  # must not raise
+
+
+def test_deprioritize_as_initializer_does_not_poison_executor(monkeypatch):
+    """The failure mode the guard exists for: a raising initializer breaks
+    the executor and every later submit dies with BrokenThreadPool."""
+    from repro.serving.disagg import prefill_pool as pp
+
+    def deny(*a, **k):
+        raise PermissionError("denied")
+
+    monkeypatch.setattr(os, "sched_setscheduler", deny, raising=False)
+    monkeypatch.setattr(os, "setpriority", deny, raising=False)
+    ex = ThreadPoolExecutor(max_workers=1, initializer=pp._deprioritize)
+    try:
+        assert ex.submit(lambda: 41 + 1).result(timeout=30) == 42
+    finally:
+        ex.shutdown(wait=True)
+
+
+# ------------------------------- satellite: AsyncEngine loop-owned mirrors --
+
+class _StubRunner:
+    max_len = 128
+    cache_layout = "contiguous"
+
+
+class _StubScheduler:
+    def __init__(self):
+        self.queue = []
+
+    def validate(self, req):
+        pass
+
+
+class _StubCore:
+    """Just enough EngineCore surface for AsyncEngine admission paths."""
+
+    def __init__(self):
+        self.scheduler = _StubScheduler()
+        self.runner = _StubRunner()
+
+
+def _stub_engine(max_queue=4):
+    from repro.serving.async_engine import AsyncEngine
+
+    return AsyncEngine(_StubCore(), max_queue=max_queue)
+
+
+def test_duplicate_id_rejected_even_after_stream_closed():
+    """_ids (the loop-owned ever-admitted set) must keep rejecting a reused
+    id after the stream is gone — the old code read core.finished, which
+    the lint now forbids mid-step."""
+    from repro.serving.async_engine import AdmissionRejected
+
+    async def go():
+        eng = _stub_engine()
+        await eng.submit([1, 2, 3], request_id="r1", max_new=4)
+        # simulate the stream finishing: _route deletes the stream entry,
+        # but the id stays admitted forever
+        del eng._streams["r1"]
+        eng._pending.clear()
+        with pytest.raises(AdmissionRejected) as exc:
+            await eng.submit([1, 2, 3], request_id="r1", max_new=4)
+        assert exc.value.reason.startswith("duplicate_id")
+        assert eng.reject_reasons == {"duplicate_id": 1}
+
+    asyncio.run(go())
+
+
+def test_backlog_uses_between_quanta_snapshot_not_live_core():
+    """Backpressure must consult _core_backlog (the mirror refreshed
+    between quanta), never len(core.scheduler.queue) live."""
+    from repro.serving.async_engine import AdmissionRejected
+
+    async def go():
+        eng = _stub_engine(max_queue=4)
+        # live core queue says "full" but the snapshot says empty: admission
+        # must trust the snapshot (the live read would race a quantum)
+        eng.core.scheduler.queue = [object()] * 10
+        await eng.submit([1], request_id="a", max_new=1)  # not rejected
+        # snapshot says full -> rejected, even though we just emptied core
+        eng.core.scheduler.queue = []
+        eng._pending.clear()
+        eng._core_backlog = eng.max_queue
+        with pytest.raises(AdmissionRejected) as exc:
+            await eng.submit([1], request_id="b", max_new=1)
+        assert exc.value.reason.startswith("queue_full")
+
+    asyncio.run(go())
+
+
+def test_drain_control_refreshes_backlog_mirror():
+    """_drain_control is the one place admission state touches the core:
+    it must leave _core_backlog equal to the scheduler queue length."""
+
+    async def go():
+        eng = _stub_engine()
+        submitted = []
+        eng.core.submit = lambda req: (
+            submitted.append(req), eng.core.scheduler.queue.append(req))
+        await eng.submit([1], request_id="a", max_new=1)
+        await eng.submit([2], request_id="b", max_new=1)
+        eng._drain_control()
+        assert [r.request_id for r in submitted] == ["a", "b"]
+        assert eng._core_backlog == 2
+        assert eng._backlog() == 2  # pending drained, mirror fresh
+
+    asyncio.run(go())
