@@ -3,11 +3,14 @@
 
 The enforcing gate is ``python -m repro.analysis --all``; this script is the
 human-facing summary (CI logs, local triage): per-pass totals, how many are
-baselined vs active, and the rule histogram.
+baselined vs active, the rule histogram, and the `program` pass's
+static-cost-vs-roofline residual table.  ``--json`` emits the same data as
+one machine-readable object (consumed by the CI step summary / artifact).
 
-    PYTHONPATH=src python scripts/analysis_report.py [--root DIR] [--baseline FILE]
+    PYTHONPATH=src python scripts/analysis_report.py [--root DIR] [--baseline FILE] [--json]
 """
 import argparse
+import json
 import sys
 from collections import Counter
 from pathlib import Path
@@ -19,16 +22,52 @@ from repro.analysis import (  # noqa: E402
 from repro.analysis.common import load_baseline, split_baselined  # noqa: E402
 
 
+def report_data(root: Path, baseline_path: Path) -> dict:
+    """The full report as one JSON-serializable object."""
+    from repro.analysis import progcheck
+
+    fps, errors = load_baseline(baseline_path)
+    results = run_passes(list(PASSES), root=root)
+    passes = {}
+    total_active = 0
+    for name in PASSES:
+        active, suppressed = split_baselined(results[name], fps)
+        total_active += len(active)
+        passes[name] = {
+            "total": len(results[name]),
+            "active": len(active),
+            "baselined": len(suppressed),
+            "rules": dict(sorted(Counter(
+                f.rule for f in results[name]).items())),
+            "findings": [f.render() for f in active],
+        }
+    return {
+        "root": str(root),
+        "baseline": str(baseline_path),
+        "baseline_entries": len(fps),
+        "baseline_errors": list(errors),
+        "passes": passes,
+        "cost_table": progcheck.cost_table(root),
+        "total_active": total_active,
+    }
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--root", type=Path, default=None,
                     help="tree to analyze (default: src/repro)")
     ap.add_argument("--baseline", type=Path, default=None,
                     help="baseline file (default: analysis_baseline.txt)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit one machine-readable JSON object instead of "
+                         "the human-facing text")
     args = ap.parse_args()
 
     root = args.root or default_root()
     baseline_path = args.baseline or default_baseline()
+    if args.json:
+        print(json.dumps(report_data(root, baseline_path), indent=2))
+        return 0
     fps, errors = load_baseline(baseline_path)
     results = run_passes(list(PASSES), root=root)
 
@@ -47,6 +86,19 @@ def main() -> int:
             print(f"    {rule:<28} {n}")
         for f in active:
             print(f"    {f.render()}")
+    from repro.analysis import progcheck
+
+    rows = progcheck.cost_table(root)
+    if rows:
+        print("\n[program] static cost vs roofline "
+              "(counted / bound, per audited program):")
+        for r in rows:
+            flag = "" if r["tol_lo"] <= r["ratio"] <= r["tol_hi"] \
+                else "  <-- OUT OF BAND"
+            print(f"    {r['layout']:<11} {r['kv_dtype']:<5} "
+                  f"{r['program']:<34} {r['kind']:<16} "
+                  f"ratio={r['ratio']:.3f} "
+                  f"[{r['tol_lo']}, {r['tol_hi']}]{flag}")
     for e in errors:
         print(f"\nbaseline error: {e}")
     print(f"\ntotal active findings: {total_active}"

@@ -1,0 +1,48 @@
+#!/usr/bin/env python
+"""Render an ``analysis_report.py --json`` report as GitHub-flavored
+markdown for the CI step summary: the per-pass finding counts and the
+`program` pass's static-cost-vs-roofline residual table.
+
+    python scripts/analysis_summary_md.py analysis_report.json >> "$GITHUB_STEP_SUMMARY"
+"""
+import json
+import sys
+
+
+def render(data: dict) -> str:
+    lines = ["## Static analysis", ""]
+    lines += ["| pass | findings | active | baselined |",
+              "|---|---|---|---|"]
+    for name, p in data["passes"].items():
+        lines.append(
+            f"| `{name}` | {p['total']} | {p['active']} | {p['baselined']} |")
+    active = [f for p in data["passes"].values() for f in p["findings"]]
+    if active:
+        lines += ["", "### Active findings", ""]
+        lines += [f"- `{f}`" for f in active]
+    rows = data.get("cost_table", [])
+    if rows:
+        lines += ["", "### Static cost vs roofline (`program` pass)", "",
+                  "| layout | kv_dtype | program | metric | ratio | band |",
+                  "|---|---|---|---|---|---|"]
+        for r in rows:
+            ok = r["tol_lo"] <= r["ratio"] <= r["tol_hi"]
+            mark = "" if ok else " :warning:"
+            lines.append(
+                f"| {r['layout']} | {r['kv_dtype']} | `{r['program']}` "
+                f"| {r['kind']} | {r['ratio']:.3f}{mark} "
+                f"| [{r['tol_lo']}, {r['tol_hi']}] |")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "analysis_report.json"
+    with open(path) as fh:
+        data = json.load(fh)
+    print(render(data))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,4 +1,5 @@
-"""In-repo static analysis: lock discipline, kernel invariants, determinism.
+"""In-repo static analysis: lock discipline, kernel invariants,
+determinism, and the program-level auditor.
 
 Run as ``python -m repro.analysis [--all | --pass NAME] [--baseline FILE]``.
 See ``README.md`` ("Static analysis") for the annotation grammar and the
@@ -15,7 +16,7 @@ from typing import Dict, List, Optional, Sequence
 from repro.analysis.common import (  # noqa: F401  (public API)
     Finding, load_baseline, split_baselined)
 
-PASSES = ("lock", "kernel", "determinism")
+PASSES = ("lock", "kernel", "determinism", "program")
 
 
 def repo_root() -> Path:
@@ -48,6 +49,9 @@ def run_passes(names: Sequence[str],
         elif name == "kernel":
             from repro.analysis import kernel_check
             found = kernel_check.run(root)
+        elif name == "program":
+            from repro.analysis import progcheck
+            found = progcheck.run(root)
         else:
             raise ValueError(f"unknown pass {name!r}; choose from {PASSES}")
         seen = set()

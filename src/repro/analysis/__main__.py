@@ -12,13 +12,14 @@ from pathlib import Path
 from repro.analysis import (
     PASSES, default_baseline, default_root, load_baseline, run_passes,
     split_baselined)
+from repro.analysis.common import legacy_hints
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="lock-discipline, kernel-invariant and determinism "
-                    "analysis over src/repro")
+        description="lock-discipline, kernel-invariant, determinism and "
+                    "program-level analysis over src/repro")
     ap.add_argument("--all", action="store_true",
                     help="run every pass (default when no --pass is given)")
     ap.add_argument("--pass", dest="passes", action="append",
@@ -46,6 +47,9 @@ def main(argv=None) -> int:
         for f in sorted(active, key=lambda f: (f.path, f.line, f.rule)):
             print(f"  {f.render()}")
         total_active += len(active)
+    for hint in legacy_hints(
+            [f for name in names for f in results[name]], baseline):
+        print(f"[baseline] NOTE: {hint}")
     for e in errors:
         print(f"[baseline] ERROR: {e}")
     if errors or total_active:

@@ -13,8 +13,13 @@ in decreasing order of preference:
   pre-existing findings.  Each line must carry a justification; baselines
   are for debt, pragmas are for audited intent.
 
-Fingerprints hash (pass, rule, relative path, message) — not the line
-number — so unrelated edits above a finding do not churn the baseline.
+Fingerprints hash (pass, rule, relative path, enclosing-def scope,
+message) — not the line number — so unrelated edits above a finding do not
+churn the baseline, while two identical-message findings in different
+functions of one file stay distinct.  Baselines written before the scope
+field existed still load: the pre-scope formula is kept as
+``Finding.legacy_fingerprint`` and matched second, with a rewrite hint
+(``legacy_hints``) so the file can be migrated without churning CI.
 """
 from __future__ import annotations
 
@@ -31,20 +36,31 @@ PRAGMA_RE = re.compile(
 
 @dataclasses.dataclass(frozen=True)
 class Finding:
-    pass_name: str  # "lock" | "determinism" | "kernel" | "analysis"
+    pass_name: str  # "lock" | "determinism" | "kernel" | "program" | "analysis"
     rule: str  # e.g. "lock:unguarded", "det:wallclock"
     path: str  # path as reported (relative to the analysis root)
     line: int  # 1-indexed
     message: str
+    scope: str = ""  # enclosing def qualname (or program/case label)
 
     @property
     def fingerprint(self) -> str:
+        raw = (f"{self.pass_name}|{self.rule}|{self.path}|{self.scope}|"
+               f"{self.message}")
+        return hashlib.sha1(raw.encode()).hexdigest()[:12]
+
+    @property
+    def legacy_fingerprint(self) -> str:
+        """The pre-scope formula (pass, rule, path, message) — accepted on
+        baseline load so existing files do not churn, but collision-prone:
+        identical messages in two functions of one file hashed the same."""
         raw = f"{self.pass_name}|{self.rule}|{self.path}|{self.message}"
         return hashlib.sha1(raw.encode()).hexdigest()[:12]
 
     def render(self) -> str:
-        return (f"{self.path}:{self.line}: [{self.rule}] {self.message}"
-                f"  [{self.fingerprint}]")
+        where = f" ({self.scope})" if self.scope else ""
+        return (f"{self.path}:{self.line}:{where} [{self.rule}] "
+                f"{self.message}  [{self.fingerprint}]")
 
 
 def parse_pragmas(
@@ -166,6 +182,27 @@ def load_baseline(path: Optional[Path]) -> Tuple[Set[str], List[str]]:
 def split_baselined(
     findings: Sequence[Finding], baseline: Set[str],
 ) -> Tuple[List[Finding], List[Finding]]:
-    active = [f for f in findings if f.fingerprint not in baseline]
-    suppressed = [f for f in findings if f.fingerprint in baseline]
+    """Partition into (active, suppressed).  A finding is suppressed by its
+    current fingerprint or — compatibility with baselines written before the
+    scope field — by its :attr:`Finding.legacy_fingerprint`."""
+    active, suppressed = [], []
+    for f in findings:
+        if f.fingerprint in baseline or f.legacy_fingerprint in baseline:
+            suppressed.append(f)
+        else:
+            active.append(f)
     return active, suppressed
+
+
+def legacy_hints(findings: Sequence[Finding], baseline: Set[str]) -> List[str]:
+    """Rewrite hints for baseline entries that only matched via the
+    pre-scope fingerprint formula — update them so collisions (identical
+    messages in different functions) stop being silently co-waived."""
+    hints = []
+    for f in findings:
+        if f.fingerprint not in baseline and f.legacy_fingerprint in baseline:
+            hints.append(
+                f"baseline entry {f.legacy_fingerprint} uses the pre-scope "
+                f"fingerprint of {f.rule} at {f.path} — rewrite it to "
+                f"{f.fingerprint} (scoped to {f.scope or '<module>'})")
+    return hints

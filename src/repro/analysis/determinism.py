@@ -95,7 +95,8 @@ class _Checker:
     def _emit(self, rule: str, lineno: int, msg: str) -> None:
         if self.af.waived(rule, lineno, self.def_lines):
             return
-        self.findings.append(Finding(PASS, rule, self.af.rel, lineno, msg))
+        self.findings.append(
+            Finding(PASS, rule, self.af.rel, lineno, msg, scope=self.func))
 
     def check_module(self) -> None:
         for node in self.af.tree.body:

@@ -240,8 +240,9 @@ class _Checker:
                    f"the entry point '# thread: {arg}' or fix the handoff")
         if self.af.waived(rule, node.lineno, self.def_lines):
             return
+        scope = f"{self.cls}.{self.func}" if self.cls else self.func
         self.findings.append(
-            Finding(PASS, rule, self.af.rel, node.lineno, msg))
+            Finding(PASS, rule, self.af.rel, node.lineno, msg, scope=scope))
 
 
 def _check_shared_globals(files: Sequence[AnalyzedFile],
@@ -291,7 +292,7 @@ def _check_shared_globals(files: Sequence[AnalyzedFile],
                                 findings.append(Finding(
                                     PASS, rule, af.rel, node.lineno,
                                     f"function-scope rebind of shared global "
-                                    f"{t.id} via 'global'"))
+                                    f"{t.id} via 'global'", scope=fn.name))
 
 
 def run(root: Path, subset: Optional[Sequence[str]] = None) -> List[Finding]:

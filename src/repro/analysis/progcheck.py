@@ -1,0 +1,608 @@
+"""Program-level auditor: trace every serving phase program and check the
+contracts the file-level lints cannot see.
+
+The other three passes read SOURCE.  This pass traces the PROGRAMS — it
+builds the serving grid ({contiguous, paged} x {fp, int8, int4}) on a tiny
+reduced model, pulls every registered phase program's jaxpr at the exact
+abstract signatures serving dispatches (``ModelRunner.program_signatures``),
+and checks four invariant families:
+
+* **dtype flow** — ``prog:f64`` (no float64 anywhere: an accidental Python
+  float promotion doubles every buffer); ``prog:fp-cache-alloc`` (in a
+  quantized-KV program, no fp32 intermediate the size of the dequantized
+  cache OUTSIDE tile scope — ``pallas_call`` interiors are exempt, the jnp
+  fallback paths are not: per-layer dequant views are fine, a whole-cache
+  materialization defeats the quantization);
+* **donation** — ``prog:cache-not-donated`` (a cache-sized buffer threaded
+  through a step program — same leaf aval in and out — must be covered by
+  the program's declared ``donate_argnums``, else that program silently
+  doubles the KV footprint per step);
+* **static cost vs roofline** — ``prog:cost-drift`` (FLOPs / HBM bytes
+  counted from the jaxpr must sit within tolerance of the analytic bound
+  from ``core.roofline.predict_phase`` — the same predictions
+  ``obs.drift.roofline_drift`` reports at runtime, so the gate and the
+  metric cannot diverge);
+* **bucket / recompile coverage** — ``prog:shape-leak`` (the shape sets
+  ``bucket()`` / ``chunk_bucket()`` promise are finite, aligned, and
+  CLOSED: re-requesting programs for every reachable prompt length after
+  ``build_serving_grid()`` must not register anything new — a leak here is
+  an unbounded recompile surface in production).
+
+It also validates the kernel entry-point aliasing contract: each
+``kernels/*/ops.py`` declares ``CACHE_OPERANDS`` (which operands alias the
+persistent KV cache / page pool / packed weights, and that the op never
+writes them).  ``prog:op-annotation`` flags a malformed or missing
+declaration; ``prog:op-alias`` flags a declared read-only entry whose
+traced jaxpr passes a cache operand through to its outputs (cache writes
+belong to donated program-level buffers, never to kernel ops).
+
+Waivers: the standard ``# analysis: allow(prog:<rule>) — reason`` pragma on
+the PROGRAM BUILDER's ``def`` line (findings anchor to the builder that
+registered the program, or to the op entry point), plus the shared
+fingerprint baseline.  The pass audits the IMPORTED package — when run
+against a ``--root`` other than the installed ``src/repro`` it has nothing
+to trace and reports clean.
+"""
+from __future__ import annotations
+
+import math
+from pathlib import Path
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+
+from repro.analysis.common import AnalyzedFile, Finding
+
+PASS = "program"
+
+LAYOUTS = ("contiguous", "paged")
+KV_DTYPES = ("fp", "int8", "int4")
+
+# --- audit grid model: tiny but structurally faithful (GQA-capable dims,
+# real bucketing, speculation on, chunked prefill on).  Tracing only —
+# nothing compiles beyond the runner's own cache-init kernels.
+GRID_ARCH = "smollm-135m"
+# Dims chosen so the fp-cache-alloc threshold (one full dequantized cache
+# direction: n_slots*L*Hkv*max_len*D = 18432 elems) strictly dominates every
+# legitimate f32 buffer: the lm-head weight upcast (d*padded_vocab = 16384),
+# the full-bucket logits (max_len*padded_vocab = 12288), the chunk prefix
+# mirror leaf (L*Hkv*max_len*D = 9216) and the per-layer dequant views
+# (<= n_slots*Hkv*max_len*D = 6144) — a whole-cache materialization is the
+# only thing that can cross it.
+GRID_MODEL = dict(num_layers=3, d_model=64, vocab_size=128,
+                  num_heads=2, num_kv_heads=2, head_dim=32)
+GRID_RUNNER = dict(n_slots=2, max_len=48, prompt_len=8, block_size=8,
+                   prefill_chunk=8, spec_decode=2)
+
+# --- tolerances -----------------------------------------------------------
+# Decode/verify stream the KV cache once per step: counted cache bytes must
+# match kv_bytes_per_ctx_token() * capacity almost exactly (the slack covers
+# index/length vectors the bound ignores).
+KV_BYTES_TOL = 1.15
+# Prefill: counted dot_general FLOPs per token vs the 2N bound.  The band
+# accounts for the structural slack in 2N accounting: embedding gathers
+# contribute params but no dot FLOPs (ratio < 1), attention-score dots on
+# the jnp paths contribute FLOPs but no params (ratio > 1).  On the audit
+# grid the observed ratios sit in [0.94, 1.04]; the band leaves ~30%
+# headroom while still catching a duplicated layer trace (2x) or a program
+# that stopped doing the matmuls the bound charges for.
+PREFILL_FLOPS_BAND = (0.7, 1.35)
+
+# Pallas tile interiors are exempt from the fp-intermediate rule (that is
+# tile scope — kernel_check audits it) and excluded from FLOP counts (the
+# 2N prefill bound charges parameter matmuls, not attention scores).
+_TILE_PRIMS = ("pallas_call",)
+
+_MEMO: Dict[Tuple, Tuple[List[Finding], List[Dict[str, Any]]]] = {}
+
+
+# ------------------------------------------------------------- jaxpr walk --
+
+def _sub_jaxprs(eqn) -> Iterator[Any]:
+    for v in eqn.params.values():
+        vs = v if isinstance(v, (tuple, list)) else (v,)
+        for x in vs:
+            if hasattr(x, "eqns") or hasattr(x, "jaxpr"):
+                yield x
+
+
+def iter_eqns(jaxpr, mult: float = 1.0) -> Iterator[Tuple[Any, float]]:
+    """Yield ``(eqn, multiplicity)`` over a (Closed)Jaxpr, recursing into
+    sub-jaxprs.  ``scan`` bodies count ``length`` times; ``pallas_call``
+    interiors (tile scope) are NOT entered — the call's own outputs still
+    are program-scope values and are yielded with the eqn."""
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in inner.eqns:
+        yield eqn, mult
+        name = eqn.primitive.name
+        if name in _TILE_PRIMS:
+            continue
+        m = mult * eqn.params["length"] if name == "scan" else mult
+        for sub in _sub_jaxprs(eqn):
+            yield from iter_eqns(sub, m)
+
+
+def _np_dtype(x):
+    """numpy dtype of an aval/SDS, or None for extended dtypes (PRNG
+    keys)."""
+    import numpy as np
+
+    try:
+        return np.dtype(x.dtype)
+    except TypeError:
+        return None
+
+
+def _aval_key(x) -> Tuple[Tuple[int, ...], str]:
+    return tuple(int(d) for d in x.shape), str(x.dtype)
+
+
+def _nbytes(x) -> int:
+    dt = _np_dtype(x)
+    return int(math.prod(x.shape)) * (dt.itemsize if dt is not None else 4)
+
+
+def dot_flops(eqn) -> float:
+    """FLOPs of one ``dot_general``: 2 x batch x lhs-free x rhs-free x
+    contraction, read off the operand avals."""
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    batch = math.prod(lhs.shape[i] for i in lb)
+    contract = math.prod(lhs.shape[i] for i in lc)
+    lfree = math.prod(lhs.shape[i] for i in range(len(lhs.shape))
+                      if i not in lc and i not in lb)
+    rfree = math.prod(rhs.shape[i] for i in range(len(rhs.shape))
+                      if i not in rc and i not in rb)
+    return 2.0 * batch * contract * lfree * rfree
+
+
+def counted_flops(jaxpr) -> float:
+    """Total dot_general FLOPs of a jaxpr (scan-trip-aware, tile interiors
+    excluded)."""
+    return sum(dot_flops(eqn) * m for eqn, m in iter_eqns(jaxpr)
+               if eqn.primitive.name == "dot_general")
+
+
+# ------------------------------------------------------- invariant checks --
+
+def check_dtype_flow(jaxpr, *, quantized: bool, fp_threshold_elems: int,
+                     emit) -> None:
+    """Family 1: no f64 anywhere; in quantized programs no program-scope
+    f32 value >= ``fp_threshold_elems`` (a dequantized-cache-sized
+    materialization)."""
+    import numpy as np
+
+    seen_f64 = False
+    for v in list(getattr(jaxpr, "jaxpr", jaxpr).invars):
+        if _np_dtype(v.aval) == np.float64:
+            seen_f64 = True
+            emit("prog:f64", f"float64 program input {v.aval.str_short()}")
+    for eqn, _m in iter_eqns(jaxpr):
+        for ov in eqn.outvars:
+            aval = getattr(ov, "aval", None)
+            if aval is None or not hasattr(aval, "dtype"):
+                continue
+            dt = _np_dtype(aval)
+            if dt is None:
+                continue
+            if dt == np.float64 and not seen_f64:
+                seen_f64 = True
+                emit("prog:f64",
+                     f"float64 intermediate {aval.str_short()} out of "
+                     f"{eqn.primitive.name} — Python-float promotion "
+                     f"doubles every downstream buffer")
+            if quantized and dt == np.float32 \
+                    and math.prod(aval.shape) >= fp_threshold_elems:
+                emit("prog:fp-cache-alloc",
+                     f"fp32 intermediate {aval.str_short()} out of "
+                     f"{eqn.primitive.name} is >= the dequantized cache "
+                     f"({fp_threshold_elems} elems) outside tile scope — "
+                     f"this materializes the fp cache quantization exists "
+                     f"to avoid")
+                return  # one finding per program is enough signal
+
+
+def check_donation(jaxpr, abstract_inputs: Sequence[Any],
+                   donate_argnums: Sequence[int], threshold_bytes: int,
+                   emit) -> None:
+    """Family 2: any input leaf >= ``threshold_bytes`` whose aval also
+    appears among the outputs (a threaded-through persistent buffer) must
+    belong to a donated argument."""
+    import jax
+
+    out_keys = {_aval_key(a) for a in jaxpr.out_avals}
+    for i, arg in enumerate(abstract_inputs):
+        if i in donate_argnums:
+            continue
+        for leaf in jax.tree.leaves(arg):
+            if _nbytes(leaf) < threshold_bytes:
+                continue
+            if _aval_key(leaf) in out_keys:
+                emit("prog:cache-not-donated",
+                     f"arg {i} threads a {_nbytes(leaf)}-byte "
+                     f"{jax.ShapeDtypeStruct(leaf.shape, leaf.dtype)} leaf "
+                     f"through to the outputs without donating it — the "
+                     f"step doubles the cache footprint; add arg {i} to "
+                     f"donate_argnums")
+                break
+
+
+def cost_findings(rows: Sequence[Dict[str, Any]], emit_for) -> None:
+    """Family 3: each cost row's counted/bound ratio must sit inside its
+    tolerance band."""
+    for row in rows:
+        if row["tol_lo"] <= row["ratio"] <= row["tol_hi"]:
+            continue
+        emit = emit_for(row)
+        emit("prog:cost-drift",
+             f"{row['kind']} counted from the jaxpr is {row['counted']:.3g} "
+             f"vs roofline bound {row['bound']:.3g} "
+             f"(ratio {row['ratio']:.3f} outside "
+             f"[{row['tol_lo']}, {row['tol_hi']}]) — the traced program and "
+             f"core.roofline.predict_phase disagree about what this phase "
+             f"does")
+
+
+def check_bucket_coverage(runner, emit) -> None:
+    """Family 4: the bucket functions' promised shape sets are covering,
+    aligned, logarithmically bounded, and CLOSED over the built grid."""
+    q = runner.block_size if runner.cache_layout == "paged" \
+        else runner.prompt_len
+    max_len = runner.max_len
+    buckets = runner.reachable_buckets()
+    bound = 4 + max(0, math.ceil(math.log2(max(1, max_len / q)))) + 2
+    if len(buckets) > bound:
+        emit("prog:shape-leak",
+             f"{len(buckets)} reachable prefill buckets exceeds the "
+             f"O(log(max_len/quantum)) promise (<= {bound}) — bucket() is "
+             f"leaking per-prompt shapes into the compile cache")
+    for n in range(1, max_len + 1):
+        b = runner.bucket(n)
+        if b < min(n, max_len) or b > max_len:
+            emit("prog:shape-leak",
+                 f"bucket({n}) = {b} does not cover the prompt within "
+                 f"max_len={max_len} — padded prefill would truncate")
+            return
+        if b % q and b != max_len:
+            emit("prog:shape-leak",
+                 f"bucket({n}) = {b} is not quantum-aligned (q={q}) and is "
+                 f"not the max_len fallback — an unplanned compile shape")
+            return
+    # closure: after build_serving_grid(), re-requesting the programs for
+    # every reachable prompt must be a pure cache hit
+    before = set(runner.engine.programs)
+    for n in range(1, max_len + 1):
+        runner.progs(runner.bucket(n))
+    if runner.prefill_chunk is not None:
+        for n in range(1, max_len + 1):
+            start = 0
+            for size in runner.chunk_sizes(n):
+                runner.chunk_prog(runner.chunk_bucket(size, start),
+                                  runner.prefix_width(start))
+                start += size
+    leaked = set(runner.engine.programs) - before
+    if leaked:
+        emit("prog:shape-leak",
+             f"serving reached program(s) the built grid did not contain: "
+             f"{sorted(leaked)} — build_serving_grid()/bucket() and "
+             f"dispatch diverged (a recompile per request in production)")
+    missing = [k for k, p in runner.program_signatures().items()
+               if not p.abstract_inputs]
+    if missing:
+        emit("prog:shape-leak",
+             f"registered program(s) with no abstract signature: "
+             f"{sorted(missing)} — the registry and "
+             f"ModelRunner.abstract_signature() diverged; the auditor "
+             f"cannot see what serving dispatches")
+
+
+# ------------------------------------------------------------- op contract --
+
+OPS_MODULES = (
+    "repro.kernels.decode_attention.ops",
+    "repro.kernels.paged_attention.ops",
+    "repro.kernels.prefill_attention.ops",
+    "repro.kernels.tlmm.ops",
+)
+
+
+def _op_probe(name: str):
+    """Small representative abstract arguments for a kernel entry point —
+    enough to trace its jnp path."""
+    import jax
+    import jax.numpy as jnp
+
+    s = jax.ShapeDtypeStruct
+    f32, i32, bf16 = jnp.float32, jnp.int32, jnp.bfloat16
+    if name == "decode_attention":
+        return (s((2, 2, 32), f32), s((2, 2, 16, 32), bf16),
+                s((2, 2, 16, 32), bf16), s((2,), i32)), {}
+    if name == "paged_decode_attention":
+        return (s((2, 2, 32), f32), s((4, 2, 8, 32), bf16),
+                s((4, 2, 8, 32), bf16), s((2, 2), i32), s((2,), i32)), {}
+    if name == "gather_scales":
+        return (s((4, 2, 8), f32), s((2, 2), i32)), {}
+    if name == "prefill_attention":
+        return (s((1, 2, 16, 32), f32), s((1, 2, 16, 32), f32),
+                s((1, 2, 16, 32), f32)), {}
+    if name == "tlmm_matmul":
+        from repro.quant.ternary import TernaryWeight
+
+        w = TernaryWeight(packed=s((16, 32), jnp.uint8), scale=s((), f32))
+        return (s((4, 64), f32), w), {}
+    return None
+
+
+def check_op_contracts(emit_at, modules: Sequence[Any] = OPS_MODULES) -> None:
+    """Validate each ops module's ``CACHE_OPERANDS`` declaration and trace
+    the declared read-only entries: a cache operand must never pass through
+    to the outputs.  ``modules`` takes import names or module objects; a
+    module may carry ``_ANALYSIS_PROBES = {entry: (args, kwargs)}`` to
+    override the built-in probe signatures."""
+    import importlib
+    import inspect
+
+    import jax
+
+    for modname in modules:
+        mod = importlib.import_module(modname) \
+            if isinstance(modname, str) else modname
+        emit = emit_at(Path(mod.__file__), 1)
+        decl = getattr(mod, "CACHE_OPERANDS", None)
+        if not isinstance(decl, dict) or not decl:
+            emit("prog:op-annotation",
+                 f"{modname} declares no CACHE_OPERANDS — every kernel ops "
+                 f"module must state which operands alias persistent "
+                 f"buffers (and that it never writes them)")
+            continue
+        for entry, spec in decl.items():
+            fn = getattr(mod, entry, None)
+            if fn is None or not callable(fn):
+                emit("prog:op-annotation",
+                     f"CACHE_OPERANDS names {entry!r} but {modname} has no "
+                     f"such callable")
+                continue
+            emit = emit_at(Path(mod.__file__), fn.__code__.co_firstlineno)
+            params = list(inspect.signature(fn).parameters)
+            args = spec.get("args", ())
+            bad = [a for a in args if a not in params]
+            if bad or not args or "writes" not in spec:
+                emit("prog:op-annotation",
+                     f"CACHE_OPERANDS[{entry!r}] is malformed: args={args} "
+                     f"(unknown: {bad}) writes={spec.get('writes')!r} — "
+                     f"declare the cache-aliasing parameter names and "
+                     f"writes: False")
+                continue
+            if spec["writes"]:
+                emit("prog:op-annotation",
+                     f"CACHE_OPERANDS[{entry!r}] declares writes=True — "
+                     f"kernel ops are read-only over caches in this repo; "
+                     f"cache mutation belongs to donated program-level "
+                     f"buffers")
+                continue
+            probe = getattr(mod, "_ANALYSIS_PROBES", {}).get(entry) \
+                or _op_probe(entry)
+            if probe is None:
+                continue
+            pargs, pkw = probe
+            try:
+                closed = jax.make_jaxpr(fn)(*pargs, **pkw)
+            except Exception as e:  # pragma: no cover - probe drift
+                emit("prog:op-annotation",
+                     f"could not trace {entry} with its probe signature: "
+                     f"{type(e).__name__}: {e}")
+                continue
+            cache_idx = {params.index(a) for a in args}
+            flat_ranges: List[int] = []
+            pos = 0
+            for i, a in enumerate(pargs):
+                n = len(jax.tree.leaves(a))
+                if i in cache_idx:
+                    flat_ranges.extend(range(pos, pos + n))
+                pos += n
+            invars = list(closed.jaxpr.invars)
+            cache_vars = {id(invars[i]) for i in flat_ranges
+                          if i < len(invars)}
+            for ov in closed.jaxpr.outvars:
+                if id(ov) in cache_vars:
+                    emit("prog:op-alias",
+                         f"{entry} returns a declared cache operand "
+                         f"unchanged — a read-only kernel op must not pass "
+                         f"the cache through its outputs (the program level "
+                         f"owns cache buffers via donation)")
+                    break
+
+
+# ---------------------------------------------------------------- the pass --
+
+class _Emitter:
+    """Findings anchored to real source locations, honoring def-line
+    ``allow()`` pragmas in the anchor file."""
+
+    def __init__(self, root: Path):
+        self.root = root
+        self.findings: List[Finding] = []
+        self._afs: Dict[Path, Optional[AnalyzedFile]] = {}
+
+    def _af(self, path: Path) -> Optional[AnalyzedFile]:
+        if path not in self._afs:
+            try:
+                path.relative_to(self.root)
+                self._afs[path] = AnalyzedFile(path, self.root)
+            except (ValueError, OSError):
+                self._afs[path] = None
+        return self._afs[path]
+
+    def at(self, path: Path, line: int, scope: str = ""):
+        af = self._af(path)
+        rel = str(path.relative_to(self.root)) if af else path.name
+
+        def emit(rule: str, msg: str) -> None:
+            if af is not None and af.waived(rule, line, (line,)):
+                return
+            self.findings.append(
+                Finding(PASS, rule, rel, line, msg, scope=scope))
+
+        return emit
+
+    def for_program(self, prog, scope: str):
+        fn = getattr(prog.fn, "__wrapped__", prog.fn)
+        code = getattr(fn, "__code__", None)
+        if code is None:  # pragma: no cover - non-Python callable
+            return self.at(self.root / "core" / "phase_engine.py", 1, scope)
+        return self.at(Path(code.co_filename), code.co_firstlineno, scope)
+
+
+def _grid_runner(layout: str, kv_dtype: str):
+    import jax
+
+    from repro.configs import reduced_config
+    from repro.models import get_model
+    from repro.serving.core import ModelRunner
+
+    cfg = reduced_config(GRID_ARCH, **GRID_MODEL)
+    params = get_model(cfg).init(cfg, jax.random.PRNGKey(0))
+    return ModelRunner(cfg, params, cache_layout=layout, kv_dtype=kv_dtype,
+                       **GRID_RUNNER)
+
+
+def _trace(prog):
+    import jax
+
+    fn = getattr(prog.fn, "__wrapped__", prog.fn)
+    return jax.make_jaxpr(fn)(*prog.abstract_inputs)
+
+
+def _audit_point(layout: str, kv_dtype: str, em: _Emitter,
+                 rows: List[Dict[str, Any]]) -> None:
+    import jax
+
+    from repro.core.roofline import predict_phase
+
+    runner = _grid_runner(layout, kv_dtype)
+    cfg = runner.cfg
+    scope = f"{layout}/{kv_dtype}"
+    runner.build_serving_grid()
+    check_bucket_coverage(runner, em.at(
+        Path(type(runner).bucket.__code__.co_filename),
+        type(runner).bucket.__code__.co_firstlineno, scope))
+
+    cache_tree = runner.paged.kv if layout == "paged" else runner.cache
+    cache_leaves = jax.tree.leaves(cache_tree)
+    donation_threshold = max(_nbytes(x) for x in cache_leaves)
+    # one full direction (K or V) of the dequantized fp cache, in elements:
+    # 2x the largest per-layer/per-chunk dequant view any legit path makes
+    n_slots = runner.slots.n_slots
+    fp_threshold = (n_slots * cfg.num_layers * cfg.num_kv_heads
+                    * runner.max_len * cfg.head_dim)
+    capacity = (runner.paged.max_pages * runner.block_size
+                if layout == "paged" else runner.max_len)
+    kv_bound = predict_phase("decode", cfg, context=capacity,
+                             kv_dtype=kv_dtype, batch=n_slots).hbm_bytes
+
+    sigs = runner.program_signatures()
+    split_flops: Dict[str, Dict[str, float]] = {}
+    for key in sorted(sigs):
+        prog = sigs[key]
+        if not prog.abstract_inputs:
+            continue  # reported by check_bucket_coverage
+        emit = em.for_program(prog, f"{scope}:{key}")
+        try:
+            closed = _trace(prog)
+        except Exception as e:
+            emit("prog:shape-leak",
+                 f"program {key} does not trace at its registered abstract "
+                 f"signature ({type(e).__name__}: {e}) — the signature and "
+                 f"the program diverged")
+            continue
+        check_dtype_flow(closed, quantized=kv_dtype != "fp",
+                         fp_threshold_elems=fp_threshold, emit=emit)
+        check_donation(closed, prog.abstract_inputs, prog.donate_argnums,
+                       donation_threshold, emit)
+
+        if prog.phase == "decode":
+            counted = sum(
+                _nbytes(leaf) for i in prog.donate_argnums
+                for leaf in jax.tree.leaves(prog.abstract_inputs[i]))
+            rows.append(dict(
+                layout=layout, kv_dtype=kv_dtype, program=key,
+                kind="kv_stream_bytes", counted=float(counted),
+                bound=float(kv_bound),
+                ratio=counted / kv_bound if kv_bound else float("inf"),
+                tol_lo=round(1.0 / KV_BYTES_TOL, 4), tol_hi=KV_BYTES_TOL,
+                prog=prog))
+        elif prog.phase == "prefill":
+            flops = counted_flops(closed)
+            m = key.split(":")
+            if key.startswith("prefill_split_varlen:"):
+                base = f"{m[0]}:{m[1]}"
+                d = split_flops.setdefault(
+                    base, dict(flops=0.0, prog=prog))
+                d["flops"] += flops
+                if len(m) == 2:  # the body carries the token count
+                    b, s = map(int, m[1].split("x"))
+                    d.update(tokens=b * s, prog=prog, key=base)
+            else:  # chunk programs: tokens = padded chunk length
+                c = int(key.split(":")[1].split("+")[0])
+                split_flops[key] = dict(flops=flops, tokens=c, prog=prog,
+                                        key=key)
+
+    n_params = sum(int(math.prod(x.shape))
+                   for x in jax.tree.leaves(runner._pa))
+    flops_bound = predict_phase("prefill", n_params=n_params).flops
+    for d in split_flops.values():
+        per_tok = d["flops"] / d["tokens"]
+        rows.append(dict(
+            layout=layout, kv_dtype=kv_dtype, program=d["key"],
+            kind="flops_per_token", counted=per_tok,
+            bound=float(flops_bound), ratio=per_tok / flops_bound,
+            tol_lo=PREFILL_FLOPS_BAND[0], tol_hi=PREFILL_FLOPS_BAND[1],
+            prog=d["prog"]))
+
+
+def audit(root: Optional[Path] = None,
+          layouts: Sequence[str] = LAYOUTS,
+          kv_dtypes: Sequence[str] = KV_DTYPES,
+          ) -> Tuple[List[Finding], List[Dict[str, Any]]]:
+    """Run the full audit over the serving grid.  Returns ``(findings,
+    cost_rows)``; memoized per (root, grid) — the gate, the report and the
+    tests share one trace of the grid per process."""
+    from repro.analysis import default_root
+
+    root = (root or default_root()).resolve()
+    memo_key = (root, tuple(layouts), tuple(kv_dtypes))
+    if memo_key in _MEMO:
+        return _MEMO[memo_key]
+    em = _Emitter(root)
+    rows: List[Dict[str, Any]] = []
+    for layout in layouts:
+        for kv_dtype in kv_dtypes:
+            _audit_point(layout, kv_dtype, em, rows)
+    check_op_contracts(em.at)
+
+    def emit_for(row):
+        return em.for_program(row["prog"],
+                              f"{row['layout']}/{row['kv_dtype']}"
+                              f":{row['program']}")
+
+    cost_findings(rows, emit_for)
+    for row in rows:
+        row.pop("prog", None)
+    _MEMO[memo_key] = (em.findings, rows)
+    return _MEMO[memo_key]
+
+
+def cost_table(root: Optional[Path] = None) -> List[Dict[str, Any]]:
+    """The static-cost-vs-roofline residual table (one row per audited
+    (grid point, program, metric)) — consumed by
+    ``scripts/analysis_report.py --json`` and the CI step summary."""
+    return audit(root)[1]
+
+
+def run(root: Path, subset: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Pass protocol entry point.  The program pass audits the IMPORTED
+    package; a foreign ``root`` (fixture trees, ``--root``) has no programs
+    to trace and reports clean."""
+    from repro.analysis import default_root
+
+    if Path(root).resolve() != default_root().resolve():
+        return []
+    return audit(root)[0]

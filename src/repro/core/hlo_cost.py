@@ -272,7 +272,7 @@ def _comp_cost(
             for callee in _CALLS_RE.findall(op.attrs):
                 c.flops_only_calls.append(callee)
         if not is_fusion and op.opcode in _MEM_OPS:
-            if op.opcode == "fusion" and op.name in alias:
+            if op.opcode in ("fusion", "convert") and op.name in alias:
                 b = 0.0  # pure dtype cast: free on TPU (fuses into consumer)
             elif op.opcode in ("fusion", "scatter") and (
                 "dynamic-update-slice" in op.name or "scatter" in op.name

@@ -47,6 +47,13 @@ class PhaseProgram:
     abstract_inputs: tuple = ()
     lowered: Any = None
     compiled: Any = None
+    # Registry metadata, audited by the `program` analysis pass
+    # (repro.analysis.progcheck): the donation DECLARED for this program —
+    # recorded by PhaseEngine._program from the same tuple passed to
+    # jax.jit(donate_argnums=...), so declaration and jit signature cannot
+    # diverge — and the serving phase the program belongs to.
+    donate_argnums: Tuple[int, ...] = ()
+    phase: str = ""  # "prefill" | "decode" | "swap" | "sampler"
 
     def lower_and_compile(self, *args):
         args = args or self.abstract_inputs
@@ -119,6 +126,30 @@ class PhaseEngine:
             return jax.jit(fn, donate_argnums=donate)
         return jax.jit(fn, in_shardings=in_shardings, out_shardings=out_shardings, donate_argnums=donate)
 
+    def _program(self, key: str, fn, *, in_shardings=None, out_shardings=None,
+                 donate: Tuple[int, ...] = (), phase: str = "") -> PhaseProgram:
+        """Jit ``fn`` and register it under ``key`` with its metadata.  The
+        ONE construction path for phase programs: ``donate`` is both the
+        ``jax.jit(donate_argnums=...)`` argument and the program's declared
+        donation, so the registry the analysis pass audits reflects what the
+        compiler was actually told."""
+        prog = PhaseProgram(
+            key,
+            self._jit(fn, in_shardings=in_shardings,
+                      out_shardings=out_shardings, donate=donate),
+            donate_argnums=tuple(donate),
+            phase=phase,
+        )
+        self._programs[key] = prog
+        return prog
+
+    @property
+    def programs(self) -> Dict[str, PhaseProgram]:
+        """The program registry (a copy): every phase program built so far,
+        keyed by its cache signature — the surface the `program` analysis
+        pass traces."""
+        return dict(self._programs)
+
     # ----------------------------------------------------------- programs --
 
     def prefill_program(self, params_abstract, batch: int, seq: int, *, frames: bool = False) -> PhaseProgram:
@@ -140,9 +171,7 @@ class PhaseEngine:
             in_sh = (self.param_shardings(params_abstract), tok_sh)
             if frames:
                 in_sh = in_sh + (self._sd(pctx, "batch", "seq", "embed"),)
-        prog = PhaseProgram(key, self._jit(fn, in_shardings=in_sh))
-        self._programs[key] = prog
-        return prog
+        return self._program(key, fn, in_shardings=in_sh, phase="prefill")
 
     def prefill_program_varlen(self, params_abstract, batch: int, seq: int) -> PhaseProgram:
         """Prefill compiled at bucket length ``seq`` for right-padded
@@ -162,9 +191,7 @@ class PhaseEngine:
         in_sh = None
         if self.mesh is not None:
             in_sh = (self.param_shardings(params_abstract), self._sd(pctx, "batch", "seq"), None)
-        prog = PhaseProgram(key, self._jit(fn, in_shardings=in_sh))
-        self._programs[key] = prog
-        return prog
+        return self._program(key, fn, in_shardings=in_sh, phase="prefill")
 
     def prefill_split_programs_varlen(
         self, params_abstract, batch: int, seq: int
@@ -191,10 +218,8 @@ class PhaseEngine:
             psh = self.param_shardings(params_abstract)
             in_body = (psh, self._sd(pctx, "batch", "seq"))
             in_tail = (psh, self._sd(pctx, "batch", "seq", "embed"), None)
-        body = PhaseProgram(key, self._jit(body_fn, in_shardings=in_body))
-        tail = PhaseProgram(key + ":tail", self._jit(tail_fn, in_shardings=in_tail))
-        self._programs[key] = body
-        self._programs[key + ":tail"] = tail
+        body = self._program(key, body_fn, in_shardings=in_body, phase="prefill")
+        tail = self._program(key + ":tail", tail_fn, in_shardings=in_tail, phase="prefill")
         return body, tail
 
     def prefill_split_programs(self, params_abstract, batch: int, seq: int) -> Tuple[PhaseProgram, PhaseProgram]:
@@ -214,8 +239,10 @@ class PhaseEngine:
             psh = self.param_shardings(params_abstract)
             in_body = (psh, self._sd(pctx, "batch", "seq"))
             in_tail = (psh, self._sd(pctx, "batch", "seq", "embed"))
-        body = PhaseProgram(f"prefill_body:{batch}x{seq}", self._jit(body_fn, in_shardings=in_body))
-        tail = PhaseProgram(f"prefill_tail:{batch}x{seq}", self._jit(tail_fn, in_shardings=in_tail))
+        body = self._program(f"prefill_body:{batch}x{seq}", body_fn,
+                             in_shardings=in_body, phase="prefill")
+        tail = self._program(f"prefill_tail:{batch}x{seq}", tail_fn,
+                             in_shardings=in_tail, phase="prefill")
         return body, tail
 
     def prefill_chunk_program(
@@ -252,9 +279,7 @@ class PhaseEngine:
                                    prefix_len, last_pos, cfg, pctx,
                                    prefix_width=prefix_width)
 
-        prog = PhaseProgram(key, self._jit(fn, donate=(2, 3)))
-        self._programs[key] = prog
-        return prog
+        return self._program(key, fn, donate=(2, 3), phase="prefill")
 
     def paged_prefill_chunk_program(
         self, chunk: int, max_pages: int, block_size: int, prefix_width: int
@@ -280,9 +305,7 @@ class PhaseEngine:
                                          page_ids, prefix_len, last_pos, cfg,
                                          pctx, prefix_width=prefix_width)
 
-        prog = PhaseProgram(key, self._jit(fn, donate=(2, 3)))
-        self._programs[key] = prog
-        return prog
+        return self._program(key, fn, donate=(2, 3), phase="prefill")
 
     def prefill_chunk_kv_program(self, chunk: int, prefix_width: int) -> PhaseProgram:
         """Compute-only chunked prefill — the disaggregated prefill pool's
@@ -307,9 +330,7 @@ class PhaseEngine:
                                       last_pos, cfg, pctx,
                                       prefix_width=prefix_width)
 
-        prog = PhaseProgram(key, self._jit(fn, donate=(2,)))
-        self._programs[key] = prog
-        return prog
+        return self._program(key, fn, donate=(2,), phase="prefill")
 
     def chunk_write_program(self, chunk: int) -> PhaseProgram:
         """Decode-side install of one shipped prefill chunk into the
@@ -330,9 +351,7 @@ class PhaseEngine:
                 write_chunk_kv_q(cache.v, kv.v, slot, prefix_len),
             )
 
-        prog = PhaseProgram(key, self._jit(fn, donate=(0,)))
-        self._programs[key] = prog
-        return prog
+        return self._program(key, fn, donate=(0,), phase="swap")
 
     def relayout_program(self, batch: int, seq: int, max_len: int) -> PhaseProgram:
         """The swap: prefill-layout KV -> decode-layout cache buffer.
@@ -374,9 +393,7 @@ class PhaseEngine:
                 kv = quantize_kv_tree(kv, self.kv_dtype)
             return kv
 
-        prog = PhaseProgram(key, self._jit(fn))
-        self._programs[key] = prog
-        return prog
+        return self._program(key, fn, phase="swap")
 
     def decode_program(self, params_abstract, batch: int, max_len: int) -> PhaseProgram:
         key = f"decode:{batch}x{max_len}"
@@ -400,9 +417,8 @@ class PhaseEngine:
                 cache_abstract = jax.eval_shape(lambda: api.init_cache(cfg, batch, max_len))
             cache_sh = self._cache_shardings(cache_abstract)
             in_sh = (psh, tok_sh, cache_sh, self._sd(pctx, "batch"))
-        prog = PhaseProgram(key, self._jit(fn, in_shardings=in_sh, donate=(2,)))
-        self._programs[key] = prog
-        return prog
+        return self._program(key, fn, in_shardings=in_sh, donate=(2,),
+                             phase="decode")
 
     def paged_decode_program(self, params_abstract, n_slots: int, max_pages: int) -> PhaseProgram:
         """Decode over the paged cache: ``fn(params, token, pages,
@@ -434,9 +450,8 @@ class PhaseEngine:
                 leaf_sh = page_sh
             in_sh = (psh, self._sd(pctx, "batch"), KVCache(leaf_sh, leaf_sh), None,
                      self._sd(pctx, "batch"))
-        prog = PhaseProgram(key, self._jit(fn, in_shardings=in_sh, donate=(2,)))
-        self._programs[key] = prog
-        return prog
+        return self._program(key, fn, in_shardings=in_sh, donate=(2,),
+                             phase="decode")
 
     def verify_program(self, params_abstract, batch: int, max_len: int, width: int) -> PhaseProgram:
         """The speculative VERIFY program over the contiguous cache:
@@ -470,9 +485,8 @@ class PhaseEngine:
                 cache_abstract = jax.eval_shape(lambda: self.api.init_cache(cfg, batch, max_len))
             in_sh = (psh, self._sd(pctx, "batch", None), self._cache_shardings(cache_abstract),
                      self._sd(pctx, "batch"), self._sd(pctx, "batch"))
-        prog = PhaseProgram(key, self._jit(fn, in_shardings=in_sh, donate=(2,)))
-        self._programs[key] = prog
-        return prog
+        return self._program(key, fn, in_shardings=in_sh, donate=(2,),
+                             phase="decode")
 
     def paged_verify_program(self, params_abstract, n_slots: int, max_pages: int, width: int) -> PhaseProgram:
         """Speculative verify over the paged pool: ``fn(params, tokens
@@ -503,9 +517,8 @@ class PhaseEngine:
                 leaf_sh = page_sh
             in_sh = (psh, self._sd(pctx, "batch", None), KVCache(leaf_sh, leaf_sh), None,
                      self._sd(pctx, "batch"), self._sd(pctx, "batch"))
-        prog = PhaseProgram(key, self._jit(fn, in_shardings=in_sh, donate=(2,)))
-        self._programs[key] = prog
-        return prog
+        return self._program(key, fn, in_shardings=in_sh, donate=(2,),
+                             phase="decode")
 
     def block_sampler_program(self, batch: int, width: int) -> PhaseProgram:
         """Vectorized verify-target sampler: ``fn(logits (B, W, V), seeds,
@@ -519,9 +532,7 @@ class PhaseEngine:
             return self._programs[key]
         from repro.core.sampling import sample_block_tokens
 
-        prog = PhaseProgram(key, jax.jit(sample_block_tokens))
-        self._programs[key] = prog
-        return prog
+        return self._program(key, sample_block_tokens, phase="sampler")
 
     def sampler_program(self, batch: int) -> PhaseProgram:
         """Vectorized per-slot token sampler — the decode epilogue program:
@@ -543,9 +554,7 @@ class PhaseEngine:
         # replicated otherwise), and a size-1 batch (the prefill first-token
         # path) cannot be partitioned anyway — GSPMD propagates from the
         # operands for this tiny program.
-        prog = PhaseProgram(key, jax.jit(sample_tokens))
-        self._programs[key] = prog
-        return prog
+        return self._program(key, sample_tokens, phase="sampler")
 
     def page_write_program(self, seq: int, block_size: int) -> PhaseProgram:
         """The paged swap: scatter prefill-layout KV into allocated pages —
@@ -566,9 +575,7 @@ class PhaseEngine:
                 write_prefill_pages_q(pages.v, kv.v, page_ids, block_size=block_size),
             )
 
-        prog = PhaseProgram(key, self._jit(fn, donate=(0,)))
-        self._programs[key] = prog
-        return prog
+        return self._program(key, fn, donate=(0,), phase="swap")
 
     def _cache_shardings(self, cache_abstract):
         """Decode-layout cache shardings: KV sequence over the model axis,

@@ -58,7 +58,8 @@ def decode_kv_stream_time(cfg, context: int, kv_dtype: str = "fp",
                           chip: ChipSpec = DEFAULT_CHIP) -> float:
     """Eq. (5) KV-bandwidth term: seconds per decoded token spent streaming
     the accumulated cache at ``context`` tokens, at the given precision."""
-    return kv_bytes_per_ctx_token(cfg, kv_dtype) * context / chip.hbm_bw
+    return predict_phase("decode", cfg, context=context, kv_dtype=kv_dtype,
+                         chip=chip).t_per_token
 
 
 def expected_accept_length(k: int, accept_rate: float) -> float:
@@ -76,6 +77,69 @@ def expected_accept_length(k: int, accept_rate: float) -> float:
     return (1.0 - p ** (k + 1)) / (1.0 - p)
 
 
+# ------------------------------------------------ static phase prediction --
+#
+# The per-phase analytic bounds as COUNTABLE quantities (flops, bytes), not
+# just seconds: ``repro.analysis.progcheck`` audits traced phase programs
+# against exactly these numbers, and ``repro.obs.drift`` converts the same
+# numbers into the residency ratios it exports — one prediction consumed by
+# both the static gate and the runtime drift metric, so the bound can never
+# drift from the code that enforces it.
+
+@dataclasses.dataclass(frozen=True)
+class PhasePrediction:
+    """Static roofline prediction for one serving phase.
+
+    ``flops`` is useful FLOPs per prefill token (2N) or 0 for the
+    KV-bound phases; ``hbm_bytes`` is KV bytes streamed per round (batch x
+    context x the Eq. (5) coefficient) or 0 for prefill; ``t_per_token``
+    is the roofline bound in seconds per EMITTED token (speculation
+    divides by the expected acceptance length)."""
+    phase: str  # "prefill" | "decode" | "spec_verify"
+    flops: float
+    hbm_bytes: float
+    t_per_token: float
+    kv_dtype: str = "fp"
+
+
+def predict_phase(
+    phase: str,
+    cfg=None,
+    *,
+    n_params: float = 0.0,
+    context: float = 0.0,
+    kv_dtype: str = "fp",
+    batch: int = 1,
+    k: int = 0,
+    accept_rate: float = 0.0,
+    chip: ChipSpec = DEFAULT_CHIP,
+) -> PhasePrediction:
+    """The static-prediction API behind ``prefill_compute_time`` /
+    ``decode_kv_stream_time[_speculative]``:
+
+    * ``prefill`` — compute-bound: ``flops = 2 * n_params`` per token,
+      ``t = flops / peak`` (``cfg`` unused);
+    * ``decode`` — KV-stream-bound: ``hbm_bytes = batch * context *
+      kv_bytes_per_ctx_token(cfg, kv_dtype)`` per round, ``t`` = one slot's
+      stream over HBM bandwidth (slots overlap on the same stream);
+    * ``spec_verify`` — decode's bytes, ``t`` divided by
+      ``expected_accept_length(k, accept_rate)`` (one stream, k+1 scored
+      positions)."""
+    if phase == "prefill":
+        flops = 2.0 * float(n_params)
+        return PhasePrediction(phase, flops, 0.0, flops / chip.peak_flops_bf16,
+                               kv_dtype)
+    if phase not in ("decode", "spec_verify"):
+        raise ValueError(
+            f"phase must be prefill | decode | spec_verify, got {phase!r}")
+    per_token = kv_bytes_per_ctx_token(cfg, kv_dtype)
+    stream = per_token * float(context)
+    t = stream / chip.hbm_bw
+    if phase == "spec_verify":
+        t /= expected_accept_length(k, accept_rate)
+    return PhasePrediction(phase, 0.0, batch * stream, t, kv_dtype)
+
+
 def decode_kv_stream_time_speculative(
     cfg, context: int, k: int, accept_rate: float, kv_dtype: str = "fp",
     chip: ChipSpec = DEFAULT_CHIP,
@@ -88,8 +152,9 @@ def decode_kv_stream_time_speculative(
     roofline report's verify-bound note prints per kv_dtype — the verify
     pass reads the same packed bytes decode does, so the quantized-KV and
     speculative levers multiply."""
-    e = expected_accept_length(k, accept_rate)
-    return decode_kv_stream_time(cfg, context, kv_dtype, chip) / e
+    return predict_phase("spec_verify", cfg, context=context, k=k,
+                         accept_rate=accept_rate, kv_dtype=kv_dtype,
+                         chip=chip).t_per_token
 
 
 def prefill_compute_time(n_params: float, chip: ChipSpec = DEFAULT_CHIP) -> float:
@@ -98,7 +163,7 @@ def prefill_compute_time(n_params: float, chip: ChipSpec = DEFAULT_CHIP) -> floa
     a compute-bound prefill streams tokens no faster than
     ``2 N_params / peak``.  The measured analogue is
     ``EngineStats.t_prefill / prefill_tokens``."""
-    return 2.0 * float(n_params) / chip.peak_flops_bf16
+    return predict_phase("prefill", n_params=n_params, chip=chip).t_per_token
 
 
 def roofline_residency(bound_s: float, measured_s: float) -> float:

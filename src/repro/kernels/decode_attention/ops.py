@@ -26,6 +26,15 @@ from repro.kernels.decode_attention.kernel import (
 from repro.kernels.decode_attention.ref import decode_attention_reference
 from repro.quant.kv_quant import dequantize_kv
 
+# Aliasing contract, audited by the `program` analysis pass
+# (repro.analysis.progcheck): these operands alias the persistent KV cache,
+# and the op never writes or returns them — cache mutation belongs to the
+# DONATED program-level buffers (layers/attention.py scatter writers), never
+# to kernel entry points.
+CACHE_OPERANDS = {
+    "decode_attention": {"args": ("k", "v"), "writes": False},
+}
+
 
 def _decode_attention_streaming(
     q: jax.Array,  # (B, Hkv, G, D)

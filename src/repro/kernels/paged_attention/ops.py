@@ -29,6 +29,15 @@ from repro.kernels.paged_attention.kernel import (
 from repro.kernels.paged_attention.ref import gather_pages
 from repro.quant.kv_quant import dequantize_kv
 
+# Aliasing contract, audited by the `program` analysis pass: the page pool
+# (and its scale planes) alias the persistent paged KV storage; the ops
+# gather/stream but never write or return the pool — page installs happen in
+# the donated program-level pool buffers (page_write / chunk programs).
+CACHE_OPERANDS = {
+    "paged_decode_attention": {"args": ("k_pages", "v_pages"), "writes": False},
+    "gather_scales": {"args": ("scales",), "writes": False},
+}
+
 
 def gather_scales(scales: jax.Array, block_tables: jax.Array) -> jax.Array:
     """(N, Hkv, bs) scale planes + (B, P) tables -> dense (B, Hkv, P*bs)."""

@@ -9,6 +9,14 @@ import jax.numpy as jnp
 from repro.kernels.prefill_attention.kernel import prefill_attention_pallas
 from repro.kernels.prefill_attention.ref import prefill_attention_reference
 
+# Aliasing contract, audited by the `program` analysis pass: prefill K/V
+# arrive as the prompt's freshly-projected (not yet cache-resident) tensors,
+# but the same read-only rule applies — the op never writes or returns its
+# K/V operands; installs happen in the donated program-level cache buffers.
+CACHE_OPERANDS = {
+    "prefill_attention": {"args": ("k", "v"), "writes": False},
+}
+
 
 def prefill_attention(
     q: jax.Array,

@@ -19,6 +19,13 @@ from repro.quant.ternary import TernaryWeight
 from repro.kernels.tlmm.kernel import tlmm_pallas
 from repro.kernels.tlmm.ref import tlmm_reference
 
+# Aliasing contract, audited by the `program` analysis pass: the packed
+# ternary weight is a persistent (resident) buffer the op streams but never
+# writes or returns.
+CACHE_OPERANDS = {
+    "tlmm_matmul": {"args": ("w",), "writes": False},
+}
+
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m

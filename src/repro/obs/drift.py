@@ -61,12 +61,11 @@ def _entry(measured: float, bound: float, **extra) -> Dict[str, Any]:
 def roofline_drift(core) -> Dict[str, Dict[str, Any]]:
     """Per-phase ``{measured_s_per_token, bound_s_per_token,
     residency_ratio}`` for the engine's accumulated stats (empty phases —
-    no tokens yet — are omitted)."""
-    from repro.core.roofline import (
-        decode_kv_stream_time,
-        decode_kv_stream_time_speculative,
-        prefill_compute_time,
-    )
+    no tokens yet — are omitted).  Bounds come from the same
+    ``core.roofline.predict_phase`` predictions the ``program`` analysis
+    pass audits the traced programs against — one source for the numbers
+    the gate enforces and the metric reports."""
+    from repro.core.roofline import predict_phase
 
     stats = core.stats
     runner = core.runner
@@ -76,7 +75,7 @@ def roofline_drift(core) -> Dict[str, Dict[str, Any]]:
     if stats.prefill_tokens and stats.t_prefill > 0.0:
         out["prefill"] = _entry(
             stats.t_prefill / stats.prefill_tokens,
-            prefill_compute_time(_n_params(runner)),
+            predict_phase("prefill", n_params=_n_params(runner)).t_per_token,
             n_params=_n_params(runner),
         )
 
@@ -90,7 +89,8 @@ def roofline_drift(core) -> Dict[str, Dict[str, Any]]:
         tpr = max(stats.tokens_per_round(), 1.0)
         out["decode"] = _entry(
             measured,
-            decode_kv_stream_time(cfg, ctx, kv_dtype) / tpr,
+            predict_phase("decode", cfg, context=ctx,
+                          kv_dtype=kv_dtype).t_per_token / tpr,
             context_mean=ctx,
             kv_dtype=kv_dtype,
             tokens_per_round=tpr,
@@ -98,9 +98,10 @@ def roofline_drift(core) -> Dict[str, Dict[str, Any]]:
         if stats.verify_rounds and runner.spec_decode:
             out["spec_verify"] = _entry(
                 measured,
-                decode_kv_stream_time_speculative(
-                    cfg, ctx, runner.spec_decode,
-                    stats.acceptance_rate(), kv_dtype),
+                predict_phase("spec_verify", cfg, context=ctx,
+                              k=runner.spec_decode,
+                              accept_rate=stats.acceptance_rate(),
+                              kv_dtype=kv_dtype).t_per_token,
                 context_mean=ctx,
                 kv_dtype=kv_dtype,
                 accept_rate=stats.acceptance_rate(),

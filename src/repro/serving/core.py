@@ -498,6 +498,149 @@ class ModelRunner:
         self._chunk_progs[key] = prog
         return prog
 
+    # ------------------------------ program registry (analysis surface) --
+    #
+    # The `program` analysis pass (repro.analysis.progcheck) audits the
+    # traced phase programs against the roofline contract.  The methods
+    # below are its interface: the statically-enumerable shape sets the
+    # bucketing functions promise, and the registry with each program's
+    # abstract input signature — so the auditor traces EXACTLY the
+    # signatures serving dispatches, not a parallel reconstruction.
+
+    def reachable_buckets(self) -> List[int]:
+        """Every distinct prefill compile bucket reachable from a prompt of
+        1..max_len tokens — the finite shape set ``bucket()`` promises.  A
+        ``bucket()`` regression that leaks per-prompt shapes shows up here
+        as an unbounded / misaligned set (the coverage gate's input)."""
+        return sorted({self.bucket(n) for n in range(1, self.max_len + 1)})
+
+    def reachable_chunk_shapes(self) -> List[tuple]:
+        """Every (padded chunk length, prefix width) pair chunked prefill
+        can request for prompts of 1..max_len tokens — pure functions of
+        (n, prefill_chunk), so enumerable without running anything."""
+        if self.prefill_chunk is None:
+            return []
+        shapes = set()
+        for n in range(1, self.max_len + 1):
+            start = 0
+            for size in self.chunk_sizes(n):
+                shapes.add((self.chunk_bucket(size, start),
+                            self.prefix_width(start)))
+                start += size
+        return sorted(shapes)
+
+    def build_serving_grid(self) -> None:
+        """Instantiate every program the serving grid can reach — per-bucket
+        prefill/swap programs, per-(chunk, prefix) chunk programs, the
+        samplers — so ``program_signatures()`` covers the full surface.
+        Construction is lazy-jit only: nothing traces or compiles here."""
+        for b in self.reachable_buckets():
+            self.progs(b)
+        for padded, pw in self.reachable_chunk_shapes():
+            self.chunk_prog(padded, pw)
+        self.engine.sampler_program(self.slots.n_slots)
+        self.engine.sampler_program(1)
+        if self.spec_decode:
+            self.engine.block_sampler_program(
+                self.slots.n_slots, self.spec_decode + 1)
+
+    def program_signatures(self) -> Dict[str, object]:
+        """The engine's program registry with each program's
+        ``abstract_inputs`` filled in (``jax.ShapeDtypeStruct`` trees) —
+        the exact traced surface of the `program` analysis pass."""
+        out = {}
+        for key, prog in self.engine.programs.items():
+            if not prog.abstract_inputs:
+                sig = self.abstract_signature(key)
+                if sig is not None:
+                    prog.abstract_inputs = sig
+            out[key] = prog
+        return out
+
+    def abstract_signature(self, key: str) -> Optional[tuple]:
+        """Abstract (ShapeDtypeStruct) inputs for the program registered
+        under ``key`` — the same shapes/dtypes ``EngineCore.step()``
+        dispatches.  Returns None for programs this runner never
+        dispatches (e.g. the disaggregated pools' split programs)."""
+        import re as _re
+
+        from repro.layers.attention import KVCache as _KVCache
+
+        sds = jax.ShapeDtypeStruct
+        i32, f32 = jnp.int32, jnp.float32
+        abstract = lambda tree: jax.tree.map(  # noqa: E731
+            lambda x: sds(x.shape, x.dtype), tree)
+        cfg = self.cfg
+        scalar = sds((), i32)
+
+        def prefill_kv(s):  # one prompt's prefill-layout fp KV
+            shape = (cfg.num_layers, 1, cfg.num_kv_heads, s, cfg.head_dim)
+            return _KVCache(sds(shape, f32), sds(shape, f32))
+
+        def vec(n, dt=i32):
+            return sds((n,), dt)
+
+        m = _re.fullmatch(r"prefill_varlen:(\d+)x(\d+)", key)
+        if m:
+            b, s = map(int, m.groups())
+            return (self._pa, sds((b, s), i32), scalar)
+        m = _re.fullmatch(r"prefill_split_varlen:(\d+)x(\d+)(:tail)?", key)
+        if m:
+            b, s = int(m.group(1)), int(m.group(2))
+            tokens = sds((b, s), i32)
+            if not m.group(3):
+                return (self._pa, tokens)
+            body = self.engine.programs[key[: -len(":tail")]]
+            x_mid, _ = jax.eval_shape(body.fn, self._pa, tokens)
+            return (self._pa, x_mid, scalar)
+        m = _re.fullmatch(r"prefill_chunk:(\d+)\+(\d+)@(\d+)x(\d+)", key)
+        if m:
+            c = int(m.group(1))
+            return (self._pa, sds((1, c), i32), abstract(self.cache),
+                    abstract(self.chunk_prefix), scalar, scalar, scalar)
+        m = _re.fullmatch(r"prefill_chunk_paged:(\d+)\+(\d+)@(\d+)x(\d+)", key)
+        if m:
+            c, bs = int(m.group(1)), int(m.group(4))
+            return (self._pa, sds((1, c), i32), abstract(self.paged.kv),
+                    abstract(self.chunk_prefix), vec(c // bs), scalar, scalar)
+        m = _re.fullmatch(r"relayout:(\d+)x(\d+)->(\d+)", key)
+        if m:
+            return (prefill_kv(int(m.group(2))),)
+        m = _re.fullmatch(r"page_write:(\d+)@(\d+)", key)
+        if m:
+            s, bs = map(int, m.groups())
+            return (abstract(self.paged.kv), prefill_kv(s), vec(s // bs))
+        m = _re.fullmatch(r"decode:(\d+)x(\d+)", key)
+        if m:
+            b = int(m.group(1))
+            return (self._pa, vec(b), abstract(self.cache), vec(b))
+        m = _re.fullmatch(r"decode_paged:(\d+)x(\d+)", key)
+        if m:
+            n, mp = map(int, m.groups())
+            return (self._pa, vec(n), abstract(self.paged.kv),
+                    sds((n, mp), i32), vec(n))
+        m = _re.fullmatch(r"verify:(\d+)x(\d+)@(\d+)", key)
+        if m:
+            b, w = int(m.group(1)), int(m.group(2))
+            return (self._pa, sds((b, w), i32), abstract(self.cache),
+                    vec(b), vec(b))
+        m = _re.fullmatch(r"verify_paged:(\d+)x(\d+)@(\d+)", key)
+        if m:
+            n, w, mp = map(int, m.groups())
+            return (self._pa, sds((n, w), i32), abstract(self.paged.kv),
+                    sds((n, mp), i32), vec(n), vec(n))
+        m = _re.fullmatch(r"sampler:(\d+)", key)
+        if m:
+            b = int(m.group(1))
+            return (sds((b, cfg.padded_vocab()), f32), vec(b), vec(b),
+                    vec(b, jnp.float32), vec(b), vec(b, jnp.float32))
+        m = _re.fullmatch(r"block_sampler:(\d+)x(\d+)", key)
+        if m:
+            b, w = map(int, m.groups())
+            return (sds((b, w, cfg.padded_vocab()), f32), vec(b), vec(b),
+                    vec(b, jnp.float32), vec(b), vec(b, jnp.float32))
+        return None
+
     def run_prefill_chunk(
         self,
         req: Request,

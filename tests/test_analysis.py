@@ -2,10 +2,10 @@
 
 Three layers:
 
-1. fixture trees — one deliberately-violating snippet per rule, asserting
-   the pass reports exactly that rule at that site (and that the pragma /
-   baseline escape hatches behave);
-2. the clean-tree gate — all three passes over the real ``src/repro`` with
+1. fixture trees / fixture programs — one deliberately-violating snippet
+   per rule, asserting the pass reports exactly that rule at that site
+   (and that the pragma / baseline escape hatches behave);
+2. the clean-tree gate — all four passes over the real ``src/repro`` with
    the checked-in baseline must report zero active findings (the same
    invariant CI enforces via ``python -m repro.analysis --all``);
 3. regression tests for the concurrency fixes the lock pass drove
@@ -376,12 +376,311 @@ def test_fingerprint_is_line_number_independent():
         "lock", "lock:unguarded", "mod.py", 10, "other").fingerprint
 
 
+def test_fingerprint_folds_in_scope():
+    """Identical messages in DIFFERENT functions must not collide — the
+    scope (enclosing def) is part of the fingerprint."""
+    a = Finding("lock", "lock:unguarded", "mod.py", 10, "msg", scope="A.f")
+    b = Finding("lock", "lock:unguarded", "mod.py", 99, "msg", scope="B.g")
+    assert a.fingerprint != b.fingerprint
+    # both collapse to the same pre-scope (legacy) fingerprint
+    assert a.legacy_fingerprint == b.legacy_fingerprint
+    assert a.scope in a.render()
+
+
+def test_legacy_fingerprint_still_suppresses_with_rewrite_hint():
+    """A baseline written before scopes existed keeps suppressing, and the
+    CLI surfaces a rewrite hint naming the new fingerprint."""
+    from repro.analysis.common import legacy_hints
+
+    f = Finding("det", "det:wallclock", "core.py", 5, "msg", scope="C.step")
+    baseline = {f.legacy_fingerprint}
+    active, suppressed = split_baselined([f], baseline)
+    assert active == [] and suppressed == [f]
+    hints = legacy_hints([f], baseline)
+    assert len(hints) == 1
+    assert f.fingerprint in hints[0] and f.legacy_fingerprint in hints[0]
+    # an entry already using the scoped fingerprint needs no hint
+    assert legacy_hints([f], {f.fingerprint}) == []
+
+
+# ------------------------------------------------------------ program pass --
+
+def _collect():
+    got = []
+    return got, lambda rule, msg: got.append(rule)
+
+
+def test_progcheck_dtype_flow_catches_f64():
+    import jax
+    import jax.numpy as jnp
+    from repro.analysis import progcheck
+
+    with jax.experimental.enable_x64():
+        closed = jax.make_jaxpr(lambda x: x.astype(jnp.float64) * 2.0)(
+            jax.ShapeDtypeStruct((8,), jnp.float32))
+    got, emit = _collect()
+    progcheck.check_dtype_flow(closed, quantized=False,
+                               fp_threshold_elems=10**9, emit=emit)
+    assert "prog:f64" in got
+
+
+def test_progcheck_catches_injected_fp_cache_dequant():
+    """A quantized program that dequantizes the WHOLE KV cache into one
+    f32 buffer (the jnp-fallback failure mode) must be flagged; a program
+    under the threshold must not."""
+    import jax
+    import jax.numpy as jnp
+    from repro.analysis import progcheck
+
+    k_q = jax.ShapeDtypeStruct((4, 2, 128, 16), jnp.int8)
+    scale = jax.ShapeDtypeStruct((4, 2, 128), jnp.float32)
+    closed = jax.make_jaxpr(
+        lambda k, s: (k.astype(jnp.float32) * s[..., None]).sum())(k_q, scale)
+    cache_elems = int(np.prod(k_q.shape))
+    got, emit = _collect()
+    progcheck.check_dtype_flow(closed, quantized=True,
+                               fp_threshold_elems=cache_elems, emit=emit)
+    assert got == ["prog:fp-cache-alloc"]
+    # same program, fp cache: dequant-sized f32 buffers are legitimate
+    got, emit = _collect()
+    progcheck.check_dtype_flow(closed, quantized=False,
+                               fp_threshold_elems=cache_elems, emit=emit)
+    assert got == []
+    # per-layer-view-sized intermediates stay under the threshold
+    got, emit = _collect()
+    progcheck.check_dtype_flow(closed, quantized=True,
+                               fp_threshold_elems=2 * cache_elems, emit=emit)
+    assert got == []
+
+
+def test_progcheck_catches_dropped_cache_donation():
+    """A cache-sized buffer threaded through a step program without
+    donation doubles the KV footprint — the audit must flag exactly the
+    undonated variant."""
+    import jax
+    import jax.numpy as jnp
+    from repro.analysis import progcheck
+
+    tok = jax.ShapeDtypeStruct((), jnp.int32)
+    cache = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+
+    def step(t, c):
+        c = c.at[0, 0].set(t.astype(jnp.float32))
+        return c[0, 0], c
+
+    closed = jax.make_jaxpr(step)(tok, cache)
+    inputs = (tok, cache)
+    got, emit = _collect()
+    progcheck.check_donation(closed, inputs, donate_argnums=(),
+                             threshold_bytes=cache.size * 4, emit=emit)
+    assert got == ["prog:cache-not-donated"]
+    got, emit = _collect()
+    progcheck.check_donation(closed, inputs, donate_argnums=(1,),
+                             threshold_bytes=cache.size * 4, emit=emit)
+    assert got == []
+    # small threaded values (sampler seeds and friends) never trigger
+    got, emit = _collect()
+    progcheck.check_donation(closed, inputs, donate_argnums=(),
+                             threshold_bytes=10**9, emit=emit)
+    assert got == []
+
+
+def test_progcheck_catches_cost_drift():
+    from repro.analysis import progcheck
+
+    def row(ratio):
+        return dict(layout="contiguous", kv_dtype="int8", program="decode:x",
+                    kind="kv_stream_bytes", counted=ratio * 100.0,
+                    bound=100.0, ratio=ratio, tol_lo=0.87, tol_hi=1.15)
+
+    got, emit = _collect()
+    progcheck.cost_findings([row(1.0), row(1.14)], lambda r: emit)
+    assert got == []
+    got, emit = _collect()
+    progcheck.cost_findings([row(2.0), row(0.4)], lambda r: emit)
+    assert got == ["prog:cost-drift", "prog:cost-drift"]
+
+
+class _StubEngine:
+    def __init__(self):
+        self.programs = {}
+
+
+class _StubProgram:
+    def __init__(self):
+        self.abstract_inputs = ((),)
+
+
+class _BucketStub:
+    """Minimal ModelRunner bucket surface: quantum-aligned, covering, and
+    closed over the built grid."""
+    cache_layout = "contiguous"
+    prompt_len = 8
+    max_len = 32
+    prefill_chunk = None
+
+    def __init__(self):
+        self.engine = _StubEngine()
+
+    def bucket(self, n):
+        b = -(-n // 8) * 8
+        return min(b, self.max_len)
+
+    def reachable_buckets(self):
+        return sorted({self.bucket(n) for n in range(1, self.max_len + 1)})
+
+    def progs(self, b):
+        self.engine.programs.setdefault(f"prefill:{b}", _StubProgram())
+        return {}
+
+    def program_signatures(self):
+        return dict(self.engine.programs)
+
+
+def test_progcheck_bucket_coverage_clean_stub():
+    from repro.analysis import progcheck
+
+    runner = _BucketStub()
+    for b in runner.reachable_buckets():
+        runner.progs(b)  # the "built grid"
+    got, emit = _collect()
+    progcheck.check_bucket_coverage(runner, emit)
+    assert got == []
+
+
+def test_progcheck_catches_bucket_shape_leak():
+    """bucket(n) = n (per-prompt shapes) blows the O(log) cardinality
+    promise — the production recompile-storm failure mode."""
+    from repro.analysis import progcheck
+
+    class Leaky(_BucketStub):
+        def bucket(self, n):
+            return n
+
+    got, emit = _collect()
+    progcheck.check_bucket_coverage(Leaky(), emit)
+    assert "prog:shape-leak" in got
+
+
+def test_progcheck_catches_grid_closure_leak():
+    """A program registered only when dispatch asks for it (not by
+    build_serving_grid) is a per-request recompile — the closure check
+    must see the registry grow."""
+    from repro.analysis import progcheck
+
+    runner = _BucketStub()  # grid NOT built: every progs() call registers
+    got, emit = _collect()
+    progcheck.check_bucket_coverage(runner, emit)
+    assert "prog:shape-leak" in got
+
+
+def test_progcheck_catches_noncovering_bucket():
+    from repro.analysis import progcheck
+
+    class Truncating(_BucketStub):
+        def bucket(self, n):
+            return 8  # every prompt padded DOWN to 8: truncation
+
+    got, emit = _collect()
+    progcheck.check_bucket_coverage(Truncating(), emit)
+    assert "prog:shape-leak" in got
+
+
+def _fake_ops_module(tmp_path, name, ns):
+    import types
+
+    mod = types.ModuleType(name)
+    src = tmp_path / f"{name}.py"
+    src.write_text("# fixture ops module\n")
+    mod.__file__ = str(src)
+    for k, v in ns.items():
+        setattr(mod, k, v)
+    return mod
+
+
+def test_progcheck_flags_missing_and_malformed_op_annotations(tmp_path):
+    from repro.analysis import progcheck
+
+    got, emit = _collect()
+    emit_at = lambda path, line, scope="": emit  # noqa: E731
+    bare = _fake_ops_module(tmp_path, "bare_ops", {})
+    progcheck.check_op_contracts(emit_at, modules=[bare])
+    assert got == ["prog:op-annotation"]
+
+    def my_op(q, k, v):
+        return q
+
+    got, emit = _collect()
+    emit_at = lambda path, line, scope="": emit  # noqa: E731
+    bad = _fake_ops_module(tmp_path, "bad_ops", {
+        "my_op": my_op,
+        "CACHE_OPERANDS": {
+            "my_op": {"args": ("k", "nope"), "writes": False},  # unknown arg
+            "ghost": {"args": ("k",), "writes": False},  # missing callable
+            "my_op2": None,
+        },
+        "my_op2": my_op,
+    })
+    bad.CACHE_OPERANDS["my_op2"] = {"args": ("k",), "writes": True}
+    progcheck.check_op_contracts(emit_at, modules=[bad])
+    assert sorted(got) == ["prog:op-annotation"] * 3
+
+
+def test_progcheck_catches_cache_passthrough_alias(tmp_path):
+    """A declared read-only entry returning its cache operand unchanged is
+    an aliasing violation; a computing entry is not."""
+    import jax
+    import jax.numpy as jnp
+    from repro.analysis import progcheck
+
+    s = jax.ShapeDtypeStruct
+
+    def passthrough(q, k):
+        return q + 1.0, k  # hands the cache buffer back out
+
+    def computes(q, k):
+        return (q[:, None, :] * k).sum(1)
+
+    probe = ((s((4, 8), jnp.float32), s((4, 8), jnp.float32)), {})
+    mod = _fake_ops_module(tmp_path, "alias_ops", {
+        "passthrough": passthrough,
+        "computes": computes,
+        "CACHE_OPERANDS": {
+            "passthrough": {"args": ("k",), "writes": False},
+            "computes": {"args": ("k",), "writes": False},
+        },
+        "_ANALYSIS_PROBES": {"passthrough": probe, "computes": probe},
+    })
+    got, emit = _collect()
+    progcheck.check_op_contracts(
+        lambda path, line, scope="": emit, modules=[mod])
+    assert got == ["prog:op-alias"]
+
+
+def test_program_pass_foreign_root_reports_clean(tmp_path):
+    """The program pass audits the imported package; fixture trees have no
+    programs to trace and must come back clean (not crash)."""
+    root = _tree(tmp_path, {"mod.py": "x = 1\n"})
+    assert run_passes(["program"], root=root)["program"] == []
+
+
+def test_cli_rejects_unknown_pass_listing_valid_names(capsys):
+    from repro.analysis.__main__ import main
+
+    with pytest.raises(SystemExit) as exc:
+        main(["--pass", "bogus"])
+    assert exc.value.code == 2
+    err = capsys.readouterr().err
+    for name in ("lock", "kernel", "determinism", "program"):
+        assert name in err
+
+
 # -------------------------------------------------------------- clean tree --
 
 def test_real_tree_has_no_unbaselined_findings():
     """The CI gate, as a test: every pass over the real src/repro must be
     clean modulo the checked-in baseline."""
-    results = run_passes(["lock", "kernel", "determinism"],
+    results = run_passes(["lock", "kernel", "determinism", "program"],
                          root=default_root())
     fps, errors = load_baseline(default_baseline())
     assert errors == []

@@ -1,0 +1,167 @@
+"""Unit tests for the analytic roofline helpers (`repro.core.roofline`).
+
+These are the numbers BOTH gates consume — the `program` analysis pass
+audits traced jaxprs against ``predict_phase`` and ``obs.drift`` exports
+residency ratios from it — so the helpers get direct edge-case coverage
+here: quantization monotonicity, speculation edge cases, and the HLO
+collective-bytes parser.
+"""
+import math
+
+import pytest
+
+from repro.common.hardware import DEFAULT_CHIP
+from repro.configs import reduced_config
+from repro.core.roofline import (
+    collective_bytes_from_hlo,
+    decode_arithmetic_intensity,
+    decode_kv_stream_time,
+    decode_kv_stream_time_speculative,
+    expected_accept_length,
+    kv_bytes_per_ctx_token,
+    predict_phase,
+    prefill_compute_time,
+)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return reduced_config("smollm-135m", num_layers=3, d_model=64,
+                          vocab_size=128, num_heads=2, num_kv_heads=2,
+                          head_dim=32)
+
+
+# ---------------------------------------------------- dtype monotonicity --
+
+def test_kv_bytes_per_ctx_token_shrinks_with_quantization(cfg):
+    fp = kv_bytes_per_ctx_token(cfg, "fp")
+    i8 = kv_bytes_per_ctx_token(cfg, "int8")
+    i4 = kv_bytes_per_ctx_token(cfg, "int4")
+    assert fp > i8 > i4 > 0
+    # payload-only figures quote the exact 2x / 4x headline ratios
+    i8p = kv_bytes_per_ctx_token(cfg, "int8", include_scales=False)
+    i4p = kv_bytes_per_ctx_token(cfg, "int4", include_scales=False)
+    assert fp / i8p == pytest.approx(2.0)
+    assert fp / i4p == pytest.approx(4.0)
+    assert i8 > i8p and i4 > i4p  # scales are charged by default
+
+
+def test_decode_arithmetic_intensity_monotone_fp_int8_int4(cfg):
+    fp = decode_arithmetic_intensity(cfg, "fp")
+    i8 = decode_arithmetic_intensity(cfg, "int8")
+    i4 = decode_arithmetic_intensity(cfg, "int4")
+    # same FLOPs over fewer bytes: intensity climbs as the cache shrinks
+    assert 0 < fp < i8 < i4
+
+
+def test_kv_bytes_rejects_unknown_dtype(cfg):
+    with pytest.raises(ValueError, match="kv_dtype"):
+        kv_bytes_per_ctx_token(cfg, "int2")
+
+
+# -------------------------------------------------------- prefill + spec --
+
+def test_prefill_compute_time_is_2n_over_peak():
+    n = 1e9
+    assert prefill_compute_time(n) == pytest.approx(
+        2 * n / DEFAULT_CHIP.peak_flops_bf16)
+    assert prefill_compute_time(0.0) == 0.0
+    # linear in N
+    assert prefill_compute_time(2 * n) == pytest.approx(
+        2 * prefill_compute_time(n))
+
+
+def test_expected_accept_length_edges():
+    # k = 0: every round degenerates to plain decode regardless of p
+    assert expected_accept_length(0, 0.0) == 1.0
+    assert expected_accept_length(0, 1.0) == 1.0
+    assert expected_accept_length(-1, 0.7) == 1.0
+    # p = 0: only the correction token; p = 1: the whole draft + bonus
+    assert expected_accept_length(4, 0.0) == 1.0
+    assert expected_accept_length(4, 1.0) == 5.0
+    # out-of-range p clamps instead of exploding the geometric series
+    assert expected_accept_length(4, 1.5) == 5.0
+    assert expected_accept_length(4, -0.5) == 1.0
+    # interior: the truncated geometric series, strictly monotone in p
+    assert expected_accept_length(2, 0.5) == pytest.approx(1.75)
+    assert expected_accept_length(2, 0.4) < expected_accept_length(2, 0.6)
+
+
+def test_speculative_bound_amortizes_the_stream(cfg):
+    plain = decode_kv_stream_time(cfg, context=1024, kv_dtype="int8")
+    spec = decode_kv_stream_time_speculative(
+        cfg, context=1024, k=3, accept_rate=0.8, kv_dtype="int8")
+    assert spec == pytest.approx(
+        plain / expected_accept_length(3, 0.8))
+    # zero acceptance: speculation buys nothing
+    assert decode_kv_stream_time_speculative(
+        cfg, context=1024, k=3, accept_rate=0.0, kv_dtype="int8"
+    ) == pytest.approx(plain)
+
+
+# --------------------------------------------------------- predict_phase --
+
+def test_predict_phase_matches_wrappers(cfg):
+    assert predict_phase("prefill", n_params=5e8).t_per_token == \
+        pytest.approx(prefill_compute_time(5e8))
+    assert predict_phase("decode", cfg, context=256,
+                         kv_dtype="int4").t_per_token == \
+        pytest.approx(decode_kv_stream_time(cfg, 256, "int4"))
+
+
+def test_predict_phase_countable_quantities(cfg):
+    p = predict_phase("prefill", n_params=1e6)
+    assert p.flops == 2e6 and p.hbm_bytes == 0.0
+    d = predict_phase("decode", cfg, context=100, kv_dtype="int8", batch=4)
+    assert d.flops == 0.0
+    assert d.hbm_bytes == pytest.approx(
+        4 * 100 * kv_bytes_per_ctx_token(cfg, "int8"))
+    # spec_verify streams the same bytes, only the per-token time divides
+    v = predict_phase("spec_verify", cfg, context=100, kv_dtype="int8",
+                      batch=4, k=3, accept_rate=0.9)
+    assert v.hbm_bytes == pytest.approx(d.hbm_bytes)
+    assert v.t_per_token < d.t_per_token
+
+
+def test_predict_phase_rejects_unknown_phase(cfg):
+    with pytest.raises(ValueError, match="phase"):
+        predict_phase("verify", cfg, context=10)
+
+
+# ------------------------------------------------- HLO collective parser --
+
+HLO_FIXTURE = """\
+HloModule jit_step, entry_computation_layout={...}
+
+ENTRY %main {
+  %p0 = f32[1024,8]{1,0} parameter(0)
+  %ar = f32[1024,8]{1,0} all-reduce(f32[1024,8]{1,0} %p0), replica_groups={}
+  %ag = bf16[2048]{0} all-gather(bf16[1024]{0} %x), dimensions={0}
+  %start = f32[512]{0} collective-permute-start(f32[512]{0} %y)
+  %done = f32[512]{0} collective-permute-done(f32[512]{0} %start)
+  %rs = f32[256]{0} reduce-scatter(f32[1024]{0} %z), dimensions={0}
+}
+"""
+
+
+def test_collective_bytes_from_hlo_counts_operand_bytes():
+    got = collective_bytes_from_hlo(HLO_FIXTURE)
+    # operand shapes (inside the call parens) are what travels the wire
+    assert got["all-reduce"] == 1024 * 8 * 4
+    assert got["all-gather"] == 1024 * 2
+    assert got["reduce-scatter"] == 1024 * 4
+    # async pair: the -start is counted once, the -done is skipped
+    assert got["collective-permute"] == 512 * 4
+    assert got["all-to-all"] == 0
+
+
+def test_collective_bytes_from_hlo_empty_and_plain_text():
+    assert set(collective_bytes_from_hlo("")) == {
+        "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+        "collective-permute"}
+    assert sum(collective_bytes_from_hlo("no collectives here").values()) == 0
+
+
+def test_collective_bytes_ignores_unknown_dtypes():
+    txt = "%q = mystery[64]{0} all-reduce(mystery[64]{0} %p)"
+    assert collective_bytes_from_hlo(txt)["all-reduce"] == 0
